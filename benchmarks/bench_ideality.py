@@ -1,0 +1,50 @@
+"""Paper Figs 4-5 + Table 2: raw-throughput ideality over the benchmark
+pool x vector length x lanes (perf model), plus measured CPU wall time of
+the production (xla) kernel impls at matched problem sizes."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import KERNELS, ideality
+from repro.core.vector_engine import VectorEngineConfig
+from repro.kernels import ops
+
+from benchmarks.common import emit, timeit
+
+VL_BYTES = (32, 64, 128, 256, 512, 1024, 2048, 4096)
+LANES = (2, 4, 8, 16)
+
+
+def run():
+    # Fig 5 heatmap: ideality per kernel x lanes x vector length
+    for kern in KERNELS:
+        for lanes in LANES:
+            eng = VectorEngineConfig(n_lanes=lanes)
+            row = [f"{ideality(kern, vb, eng):.3f}" for vb in VL_BYTES]
+            emit(f"fig5/{kern}/L{lanes}", 0.0, "|".join(row))
+    # Fig 4 diagonals: constant bytes/lane
+    for bpl in (32, 64, 128, 256):
+        vals = [f"{ideality('matmul', bpl * l, VectorEngineConfig(n_lanes=l)):.3f}"
+                for l in LANES]
+        emit(f"fig4/diag_bpl{bpl}", 0.0, "|".join(vals))
+    # measured wall time of xla kernel impls (CPU)
+    key = jax.random.key(0)
+    x = jax.random.normal(key, (512, 512), jnp.float32)
+    us = timeit(jax.jit(lambda a: ops.matmul(a, a, impl="xla")), x)
+    emit("kernel/matmul_512", us, f"gflops={2*512**3/us/1e3:.2f}")
+    v = jax.random.normal(key, (1 << 16,), jnp.float32)
+    us = timeit(jax.jit(lambda a: ops.dotproduct(a, a, impl="xla")), v)
+    emit("kernel/dotproduct_64k", us, f"gbps={2*4*(1<<16)/us/1e3:.2f}")
+    sm = jax.random.normal(key, (256, 1024), jnp.float32)
+    emit("kernel/softmax_256x1024",
+         timeit(jax.jit(lambda a: ops.softmax(a, impl="xla")), sm), "")
+    fr = jax.random.normal(key, (4096,), jnp.float32)
+    emit("kernel/fft_4096",
+         timeit(jax.jit(lambda a: ops.fft(a, a, impl="xla")[0]), fr), "")
+    img = jax.random.normal(key, (3, 128, 128), jnp.float32)
+    kw = jax.random.normal(key, (3, 7, 7), jnp.float32)
+    emit("kernel/conv2d_3x128x128",
+         timeit(jax.jit(lambda a, b: ops.conv2d(a, b, impl="xla")), img, kw),
+         "")
+    pw = jnp.abs(jax.random.normal(key, (64, 4096), jnp.float32))
+    emit("kernel/pathfinder_64x4096",
+         timeit(jax.jit(lambda a: ops.pathfinder(a, impl="xla")), pw), "")

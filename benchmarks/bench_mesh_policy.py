@@ -1,0 +1,25 @@
+"""Paper §7 transplanted (C4): mesh-shape ranking per (arch x shape) at a
+fixed 256-chip budget - 'many small vector cores' (large DP) vs 'one big
+core' (large TP)."""
+from repro.configs import SHAPES, get_config
+from repro.distributed.mesh_policy import choose_mesh
+
+from benchmarks.common import emit
+
+CASES = [
+    ("qwen3-0.6b", "train_4k"),
+    ("qwen3-0.6b", "decode_32k"),
+    ("yi-6b", "train_4k"),
+    ("gemma3-27b", "train_4k"),
+    ("qwen3-moe-235b-a22b", "train_4k"),
+    ("whisper-base", "train_4k"),
+]
+
+
+def run():
+    for arch, shape in CASES:
+        cands = choose_mesh(get_config(arch), SHAPES[shape], 256)
+        top = [f"dp{c.dp}xtp{c.tp}({c.t_total*1e3:.1f}ms"
+               f"{'' if c.fits else ',OOM'})" for c in cands[:3]]
+        emit(f"meshpolicy/{arch}/{shape}", cands[0].t_total * 1e6,
+             "|".join(top))

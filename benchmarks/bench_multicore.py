@@ -1,0 +1,39 @@
+"""Paper Figs 13-18: single- vs multi-core trade-off at fixed FPU budgets
+(raw throughput, real throughput at implementation frequencies, energy
+efficiency), from the calibrated perf+PPA model."""
+from repro.core import (energy_efficiency_gflops_w, fixed_fpu_sweep,
+                        issue_rate_limit_opc, matmul_opc,
+                        real_throughput_gflops)
+from repro.core.perf_model import WhatIf
+from repro.core.vector_engine import ClusterConfig, VectorEngineConfig
+
+from benchmarks.common import emit
+
+SIZES = (8, 16, 32, 64, 128, 256)
+
+
+def run():
+    # Fig 13: raw throughput, 16 FPUs
+    for c in fixed_fpu_sweep(16):
+        row = [f"{matmul_opc(n, c):.1f}" for n in SIZES]
+        emit(f"fig13/raw_opc/{c.describe()}", 0.0, "|".join(row))
+    emit("fig13/issue_limit", 0.0,
+         "|".join(f"{issue_rate_limit_opc(n):.1f}" for n in SIZES))
+    # Fig 16: ideal dispatcher comparison at 32^3
+    for c in fixed_fpu_sweep(16):
+        base = matmul_opc(32, c)
+        ideal = matmul_opc(32, c, WhatIf(ideal_dispatcher=True))
+        emit(f"fig16/{c.describe()}", 0.0,
+             f"base={base:.1f}|ideal_dispatch={ideal:.1f}")
+    # Fig 14/15: real throughput + efficiency
+    for c in fixed_fpu_sweep(16):
+        row = [f"{real_throughput_gflops(n, c):.1f}" for n in SIZES]
+        emit(f"fig14/gflops/{c.describe()}", 0.0, "|".join(row))
+        row = [f"{energy_efficiency_gflops_w(n, c):.1f}" for n in SIZES]
+        emit(f"fig15/gflops_w/{c.describe()}", 0.0, "|".join(row))
+    # Fig 17/18: sweeps at 2-16 FPUs
+    for fpus in (2, 4, 8, 16):
+        for c in fixed_fpu_sweep(fpus):
+            emit(f"fig17/{fpus}fpu/{c.describe()}", 0.0,
+                 f"gflops@256={real_throughput_gflops(256, c):.1f}|"
+                 f"eff@256={energy_efficiency_gflops_w(256, c):.1f}")

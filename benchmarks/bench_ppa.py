@@ -1,0 +1,16 @@
+"""Paper Tables 3-4: PPA metrics and per-dtype matmul efficiency."""
+from repro.core.ppa import (CELL_MACRO_AREA_KGE, DIE_AREA_MM2,
+                            ENERGY_EFF_TABLE3, TABLE4, TT_FREQ_GHZ)
+
+from benchmarks.common import emit
+
+
+def run():
+    for lanes in (2, 4, 8, 16, "16*"):
+        eff = ENERGY_EFF_TABLE3.get(lanes, float("nan"))
+        emit(f"table3/L{lanes}", 0.0,
+             f"tt_ghz={TT_FREQ_GHZ[lanes]}|die_mm2={DIE_AREA_MM2[lanes]}|"
+             f"kge={CELL_MACRO_AREA_KGE[lanes]}|eff={eff}")
+    for prog, (elems, mw, gops, gopsw) in TABLE4.items():
+        emit(f"table4/{prog}", 0.0,
+             f"elems={elems}|mw={mw}|gops={gops}|gops_w={gopsw}")

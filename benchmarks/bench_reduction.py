@@ -1,0 +1,23 @@
+"""Paper §3 reduction model + measured 3-step hierarchical reduction."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import (hierarchical_reduce, reduction_drain_cycles,
+                        vector_reduction_cycles)
+
+from benchmarks.common import emit, timeit
+
+
+def run():
+    for r in (2, 3, 4, 8):
+        emit(f"reduction/drain_R{r}", 0.0,
+             f"cycles={reduction_drain_cycles(r):.2f}")
+    for lanes in (2, 4, 8, 16):
+        for n in (64, 256, 1024):
+            c = vector_reduction_cycles(n, lanes, 64, 4)
+            emit(f"reduction/latency_L{lanes}_n{n}", 0.0,
+             f"cycles={c:.1f}|opc={2*n/c:.2f}")
+    x = jax.random.normal(jax.random.key(0), (1 << 16,), jnp.float32)
+    for lanes in (4, 16):
+        us = timeit(jax.jit(lambda v, l=lanes: hierarchical_reduce(v, l)), x)
+        emit(f"reduction/hierarchical_64k_L{lanes}", us, "")

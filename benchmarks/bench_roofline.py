@@ -1,0 +1,33 @@
+"""Deliverable (g): the TPU roofline table from the dry-run artifacts in
+results/dryrun/ (run ``python -m repro.launch.dryrun --all --mesh both``
+first; this bench only reads)."""
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def run():
+    files = sorted(glob.glob(os.path.join(RESULTS, "*.json")))
+    if not files:
+        emit("roofline/missing", 0.0, "run repro.launch.dryrun first")
+        return
+    for f in files:
+        r = json.load(open(f))
+        tag = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r["status"] == "skipped":
+            emit(f"roofline/{tag}", 0.0, "skipped:" + r["reason"][:40])
+            continue
+        if r["status"] != "ok":
+            emit(f"roofline/{tag}", 0.0, "ERROR")
+            continue
+        rf = r["roofline"]
+        emit(f"roofline/{tag}", rf["t_bound"] * 1e6 if "t_bound" in rf else 0.0,
+             f"comp={rf['t_compute']:.4f}s|mem={rf['t_memory']:.4f}s|"
+             f"coll={rf['t_collective']:.4f}s|dom={rf['dominant']}|"
+             f"useful={rf['useful_flops_fraction']:.2f}|"
+             f"frac={rf['roofline_fraction']:.4f}|"
+             f"hbm={r.get('hbm_used_gb', '?')}GB")

@@ -1,0 +1,24 @@
+"""Paper Fig 3 + Table 5: slide-unit interconnect cost model and measured
+area scaling (old all-to-all vs optimized power-of-two SLDU)."""
+from repro.core import mux_count, sldu_saving
+from repro.core.ppa import AREA_KGE, sldu_area_saving, system_area_kge
+
+from benchmarks.common import emit
+
+
+def run():
+    for lanes in (2, 4, 8, 16):
+        a2a = mux_count(lanes, "all_to_all")
+        p2 = mux_count(lanes, "slideP2_tmux")
+        s1 = mux_count(lanes, "slide1")
+        emit(f"fig3/muxes_L{lanes}", 0.0,
+             f"a2a={a2a}|slideP2={p2}|slide1={s1}|saving={sldu_saving(lanes):.2%}")
+    for lanes in (2, 4, 8, 16):
+        emit(f"table5/sldu_L{lanes}", 0.0,
+             f"old={AREA_KGE['old_sldu'][lanes]}kGE|"
+             f"new={AREA_KGE['new_sldu'][lanes]}kGE|"
+             f"saving={sldu_area_saving(lanes):.2%}")
+    for lanes in (2, 4, 8, 16):
+        emit(f"table5/system_L{lanes}", 0.0,
+             f"new_sldu={system_area_kge(lanes, 'new_sldu'):.0f}kGE|"
+             f"old_sldu={system_area_kge(lanes, 'old_sldu'):.0f}kGE")

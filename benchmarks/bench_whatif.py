@@ -1,0 +1,31 @@
+"""Paper Figs 6-10: what-if attributions (ideal dispatcher, ideal cache,
+streamlined vector unit, Barber's Pole layout)."""
+from repro.core import ideality
+from repro.core.perf_model import WhatIf
+from repro.core.vector_engine import VectorEngineConfig
+
+from benchmarks.common import emit
+
+E16 = VectorEngineConfig(n_lanes=16)
+E2 = VectorEngineConfig(n_lanes=2)
+
+
+def run():
+    for nbytes in (512, 1024, 2048, 8192):
+        base = ideality("matmul", nbytes, E16)
+        idd = ideality("matmul", nbytes, E16, WhatIf(ideal_dispatcher=True))
+        idc = ideality("matmul", nbytes, E16, WhatIf(ideal_cache=True))
+        stream = ideality("matmul", nbytes, E16,
+                          WhatIf(ideal_dispatcher=True, streamlined=True))
+        emit(f"fig9/16L_{nbytes}B", 0.0,
+             f"base={base:.3f}|ideal_disp={idd:.3f}|ideal_cache={idc:.3f}|"
+             f"streamlined={stream:.3f}")
+        # Fig 10 decomposition: inefficiency attribution
+        emit(f"fig10/16L_{nbytes}B", 0.0,
+             f"ara2={max(0., stream-base):.3f}|"
+             f"cache={max(0., idc-base):.3f}|"
+             f"cva6={max(0., idd-idc):.3f}")
+    for nbytes in (64, 128, 256, 512, 2048):
+        bp = ideality("matmul", nbytes, E2, WhatIf(barber_pole=True))
+        nobp = ideality("matmul", nbytes, E2)
+        emit(f"fig8/2L_{nbytes}B", 0.0, f"barber={bp:.3f}|plain={nobp:.3f}")

@@ -1,0 +1,21 @@
+"""Benchmark utilities: timing + CSV emission (name,us_per_call,derived)."""
+import sys
+import time
+
+import jax
+
+
+def timeit(fn, *args, warmup=2, iters=5):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def emit(name: str, us_per_call, derived):
+    us = f"{us_per_call:.1f}" if isinstance(us_per_call, float) else us_per_call
+    print(f"{name},{us},{derived}")
+    sys.stdout.flush()

@@ -1,0 +1,38 @@
+"""Benchmark harness (deliverable d): one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV."""
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    from benchmarks import (bench_ideality, bench_mesh_policy,
+                            bench_multicore, bench_ppa, bench_reduction,
+                            bench_roofline, bench_slide, bench_whatif)
+    benches = [
+        ("ideality (Figs 4-5, Table 2)", bench_ideality),
+        ("slide unit (Fig 3, Table 5)", bench_slide),
+        ("reductions (par.3)", bench_reduction),
+        ("multi-core (Figs 13-18)", bench_multicore),
+        ("what-if (Figs 6-10)", bench_whatif),
+        ("PPA (Tables 3-4)", bench_ppa),
+        ("mesh policy (par.7 on TPU)", bench_mesh_policy),
+        ("roofline (dry-run)", bench_roofline),
+    ]
+    print("name,us_per_call,derived")
+    failed = 0
+    for title, mod in benches:
+        print(f"# --- {title} ---")
+        try:
+            mod.run()
+        except Exception as e:  # noqa: BLE001
+            failed += 1
+            print(f"# BENCH FAILED: {e}")
+            traceback.print_exc()
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

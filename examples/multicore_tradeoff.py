@@ -1,0 +1,46 @@
+"""The paper's §7 experiment, twice over:
+
+1. The Ara2 silicon model: cores x lanes at a fixed 16-FPU budget across
+   problem sizes (Figs 13-15).
+2. The TPU transplant: (data, model) mesh factorizations at a fixed
+   256-chip budget per assigned (arch x shape) - the same trade-off, at
+   pod scale.
+
+  PYTHONPATH=src python examples/multicore_tradeoff.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import SHAPES, get_config  # noqa: E402
+from repro.core import (energy_efficiency_gflops_w, fixed_fpu_sweep,  # noqa: E402
+                        matmul_opc, real_throughput_gflops)
+from repro.distributed.mesh_policy import choose_mesh  # noqa: E402
+
+
+def main():
+    print("=== Ara2 silicon (16 FPUs, fmatmul) ===")
+    sizes = (16, 32, 64, 128, 256)
+    print(f"{'config':8s}" + "".join(f"{n:>9d}" for n in sizes)
+          + f"{'eff@256':>10s}")
+    for c in fixed_fpu_sweep(16):
+        row = "".join(f"{matmul_opc(n, c):9.1f}" for n in sizes)
+        print(f"{c.describe():8s}{row}"
+              f"{energy_efficiency_gflops_w(256, c):10.1f}")
+    print("(DP-FLOP/cycle; paper: 8x2L wins small, 1-2 big cores win large;"
+          " 4x4L most efficient)")
+
+    print("\n=== TPU transplant (256 chips) ===")
+    for arch, shape in [("qwen3-0.6b", "train_4k"), ("yi-6b", "train_4k"),
+                        ("qwen3-moe-235b-a22b", "train_4k"),
+                        ("yi-6b", "decode_32k")]:
+        cands = choose_mesh(get_config(arch), SHAPES[shape], 256)
+        best = ", ".join(
+            f"dp{c.dp}xtp{c.tp}={c.t_total*1e3:.1f}ms"
+            f"{'' if c.fits else '(OOM)'}" for c in cands[:3])
+        print(f"{arch:22s} {shape:11s} best: {best}")
+
+
+if __name__ == "__main__":
+    main()

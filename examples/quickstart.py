@@ -1,0 +1,49 @@
+"""Quickstart: train a tiny qwen3-family model for 30 steps on CPU, then
+serve a couple of prompts from it.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+from repro.configs import smoke_config  # noqa: E402
+from repro.data import SyntheticTokens  # noqa: E402
+from repro.distributed.sharding import ShardingPolicy  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.optim import AdamW, warmup_cosine  # noqa: E402
+from repro.serving import Request, ServeEngine  # noqa: E402
+from repro.train import TrainConfig, Trainer  # noqa: E402
+
+
+def main():
+    cfg = smoke_config("qwen3-0.6b")
+    model = build_model(cfg)
+    print(f"model: {cfg.name} ({model.n_params/1e3:.0f}k params)")
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    data = SyntheticTokens(cfg, batch_size=8, seq_len=64, seed=0)
+    with tempfile.TemporaryDirectory() as ckpt:
+        tc = TrainConfig(steps=30, ckpt_dir=ckpt, ckpt_every=10, log_every=5)
+        trainer = Trainer(model, AdamW(lr=warmup_cosine(2e-3, 5, 30)),
+                          ShardingPolicy(fsdp=False), mesh, data, tc)
+        state, log = trainer.run()
+    print(f"loss: {log[0]['loss']:.3f} -> {log[-1]['loss']:.3f}")
+
+    params = jax.tree_util.tree_map(
+        lambda w: w.astype(jax.numpy.bfloat16) if w.ndim else w,
+        state["master"])
+    eng = ServeEngine(model, params, max_batch=2, cache_len=128)
+    results = eng.generate([Request([1, 2, 3, 4], 12, rid=0),
+                            Request([42, 43], 12, temperature=0.8, rid=1)])
+    for r in results:
+        print(f"generated rid={r.rid}: {r.tokens}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""End-to-end driver (deliverable b): train a ~100M-param decoder LM with
+the full production stack - FSDP/TP/SP-capable sharding, AdamW + cosine
+schedule, checkpointing with auto-resume, straggler watchdog, restartable
+synthetic data stream.
+
+Full run (a few hundred steps, as the paper's kind dictates):
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+
+CI-speed run:
+  PYTHONPATH=src python examples/train_lm.py --steps 3 --tiny
+"""
+import argparse
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+from repro.configs.base import ModelConfig  # noqa: E402
+from repro.data import SyntheticTokens  # noqa: E402
+from repro.distributed.sharding import ShardingPolicy  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.optim import AdamW, warmup_cosine  # noqa: E402
+from repro.train import TrainConfig, Trainer  # noqa: E402
+
+# ~100M params: 12L x 768 with a 50k vocab (tied embeddings)
+LM100M = ModelConfig(
+    name="lm-100m", family="dense", n_layers=12, d_model=768, n_heads=12,
+    n_kv_heads=4, d_ff=3072, vocab_size=50304, head_dim=64,
+    rope_theta=10000.0, tie_embeddings=True,
+)
+TINY = dataclasses.replace(LM100M, name="lm-tiny", n_layers=2, d_model=128,
+                           n_heads=4, n_kv_heads=2, d_ff=512,
+                           vocab_size=4096)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--lr", type=float, default=6e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/lm100m_ckpt")
+    ap.add_argument("--tiny", action="store_true",
+                    help="2L/128d variant for CI-speed runs")
+    args = ap.parse_args()
+
+    cfg = TINY if args.tiny else LM100M
+    if args.tiny:
+        args.seq = min(args.seq, 128)
+    model = build_model(cfg)
+    print(f"[train_lm] {cfg.name}: {model.n_params/1e6:.1f}M params, "
+          f"{args.steps} steps @ batch {args.batch} x seq {args.seq}")
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    data = SyntheticTokens(cfg, args.batch, args.seq, seed=0)
+    tc = TrainConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                     ckpt_every=max(10, args.steps // 5), log_every=5)
+    trainer = Trainer(model, AdamW(lr=warmup_cosine(args.lr, 20, args.steps)),
+                      ShardingPolicy(fsdp=False), mesh, data, tc)
+    _, log = trainer.run()
+    print(f"[train_lm] loss {log[0]['loss']:.4f} -> {log[-1]['loss']:.4f} "
+          f"({trainer.watchdog.stragglers} straggler steps)")
+
+
+if __name__ == "__main__":
+    main()

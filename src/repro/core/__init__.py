@@ -1,0 +1,24 @@
+"""Ara2's transplanted contributions (see DESIGN.md §2):
+
+C1 lanes / bytes-per-lane  -> vector_engine, lanes
+C2 pow2 slide decomposition -> slide
+C3 3-step hierarchical reduction -> reduction
+C5 ideality perf model      -> perf_model
+C6 PPA / energy model       -> ppa
+(C4, the multi-core mesh trade-off, lives in distributed.mesh_policy.)
+"""
+from .vector_engine import (VectorEngineConfig, ClusterConfig, fixed_fpu_sweep,
+                            log2i, ceil_div, round_up)
+from .perf_model import (KERNELS, KernelSpec, WhatIf, ideality, kernel_opc,
+                         matmul_opc, matmul_cycles, util_curve,
+                         issue_rate_limit_opc, pool_average_ideality,
+                         dotproduct_speedup_vs_scalar)
+from .slide import (decompose_pow2, slide, rotate, mesh_slide,
+                    mesh_halo_exchange, mux_count, sldu_saving)
+from .reduction import (hierarchical_reduce, simd_tree_reduce, allreduce_hd,
+                        allreduce_rs_ag, reduce_scatter_hd, allgather_hd,
+                        reduction_drain_cycles, vector_reduction_cycles)
+from .ppa import (TPU_V5E, TpuSpec, TT_FREQ_GHZ, AREA_KGE, TABLE4,
+                  ENERGY_EFF_TABLE3, system_area_kge, sldu_area_saving,
+                  system_power_w, real_throughput_gflops,
+                  energy_efficiency_gflops_w)

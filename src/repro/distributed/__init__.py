@@ -1,0 +1,5 @@
+from .act_sharding import activation_sharding, constrain
+from .sharding import (ShardingPolicy, batch_shardings, cache_shardings,
+                       tree_shardings)
+from .mesh_policy import MeshCandidate, choose_mesh, enumerate_policies, score_policy
+from . import collectives

@@ -1,0 +1,78 @@
+"""Activation-sharding shim.
+
+Models call ``constrain(x, kind)`` at layer boundaries; outside a
+distribution context this is a no-op, inside one it applies
+``with_sharding_constraint`` per the active policy's activation rules.
+Keeping this as a context (not plumbed arguments) keeps model code free of
+mesh details while still letting the launcher pin the sharding of every
+major activation (GSPMD then propagates the rest).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+_STATE = threading.local()
+
+
+def _rules():
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, rules: dict):
+    """rules: kind -> PartitionSpec.  Specs with axes that do not divide the
+    corresponding dimension are dropped at constraint time."""
+    prev_rules = getattr(_STATE, "rules", None)
+    prev_mesh = getattr(_STATE, "mesh", None)
+    _STATE.rules, _STATE.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _STATE.rules, _STATE.mesh = prev_rules, prev_mesh
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, (tuple, list)):
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axes]
+
+
+def constrain(x, kind: str):
+    rules = _rules()
+    if rules is None or kind not in rules:
+        return x
+    mesh = _STATE.mesh
+    spec = rules[kind]
+    if spec is None:
+        return x
+    # divisibility fallback: for tuple entries, drop TRAILING axes until the
+    # dim divides (e.g. 64 MoE groups under ("pod","data","model")=512 fall
+    # back to ("pod","data")=32 instead of losing the constraint entirely);
+    # scalar entries drop to None
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def fit(axes, dim_size):
+        if axes is None:
+            return None
+        cand = (axes,) if isinstance(axes, str) else tuple(axes)
+        while cand:
+            size = _axis_size(mesh, cand)
+            if size > 1 and dim_size % size == 0:
+                return cand if len(cand) > 1 else cand[0]
+            cand = cand[:-1]
+        return None
+
+    fixed = [fit(axes, x.shape[dim]) for dim, axes in
+             enumerate(list(spec) + [None] * (x.ndim - len(spec)))]
+    if all(a is None for a in fixed):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))

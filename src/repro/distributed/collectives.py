@@ -1,0 +1,106 @@
+"""Gradient-sync collectives: the paper's tree schedules (C3) as drop-in
+alternatives to native psum, plus int8-compressed all-reduce with error
+feedback (the multi-pod link is the bandwidth-scarce hop).
+
+All functions run inside ``shard_map``.  The pjit training path gets its
+gradient reduction from sharding propagation; these are used (a) by the
+shard_map grad-sync benchmark comparing schedules' collective bytes and
+(b) by the compressed pod-axis sync option in the trainer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..core.reduction import allreduce_hd, allreduce_rs_ag
+
+INT8_MAX = 127.0
+
+
+def psum_native(x, axis_name):
+    return jax.lax.psum(x, axis_name)
+
+
+def tree_allreduce(x, axis_name, *, bandwidth_optimal=True):
+    """Paper C3: inter-lane log-step tree (halving/doubling)."""
+    fn = allreduce_rs_ag if bandwidth_optimal else allreduce_hd
+    return fn(x, axis_name)
+
+
+def quantize_int8(x, *, block: int = 256):
+    """Blockwise symmetric int8 quantization.  Returns (q, scales, meta)."""
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    blocks = flat.reshape(-1, block).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / INT8_MAX
+    scale = jnp.where(scale == 0.0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / scale), -INT8_MAX, INT8_MAX
+                 ).astype(jnp.int8)
+    return q, scale, (x.shape, pad)
+
+
+def dequantize_int8(q, scale, meta, dtype=jnp.float32):
+    shape, pad = meta
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape).astype(dtype)
+
+
+def compressed_allreduce(x, axis_name, *, error: jnp.ndarray | None = None,
+                         block: int = 256):
+    """int8 all-reduce with error feedback (two-phase, shared scale).
+
+    Phase 1 exchanges per-block max-abs (pmax of the tiny scale vector) so
+    every participant quantizes with the SAME scale - summing int8 payloads
+    quantized with different scales is simply wrong (sum scale_i*q_i !=
+    scale_max * sum q_i; caught by the error-feedback property test).
+    Phase 2 sums the int8 payload in int32.  Link bytes: ~1/4 of fp32 plus
+    the 1/BLOCK scale exchange.  Returns (mean-reduced value, new error)."""
+    size = jax.lax.axis_size(axis_name)
+    val = x if error is None else x + error
+    # shared blockwise scale
+    _, scale_local, meta = quantize_int8(val, block=block)
+    scale = jax.lax.pmax(scale_local, axis_name)
+    flat = val.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    blocks = flat.reshape(-1, block).astype(jnp.float32)
+    q = jnp.clip(jnp.round(blocks / scale), -INT8_MAX, INT8_MAX
+                 ).astype(jnp.int8)
+    new_error = val - dequantize_int8(q, scale, meta)  # error feedback
+    q_sum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    summed = dequantize_int8(q_sum, scale, meta)
+    return (summed / size).astype(x.dtype), new_error.astype(x.dtype)
+
+
+def grad_sync(grads, axis_name, *, mode: str = "psum", error_state=None):
+    """Synchronize a gradient pytree across ``axis_name``.
+
+    mode: psum | tree_bw | tree_hd | int8.  Returns (grads, error_state)."""
+    if mode == "psum":
+        return jax.tree_util.tree_map(
+            lambda g: jax.lax.pmean(g, axis_name), grads), error_state
+    if mode in ("tree_bw", "tree_hd"):
+        size = jax.lax.axis_size(axis_name)
+        return jax.tree_util.tree_map(
+            lambda g: tree_allreduce(g, axis_name,
+                                     bandwidth_optimal=mode == "tree_bw")
+            / size, grads), error_state
+    if mode == "int8":
+        leaves, treedef = jax.tree_util.tree_flatten(grads)
+        errs = (jax.tree_util.tree_leaves(error_state)
+                if error_state is not None else [None] * len(leaves))
+        outs, new_errs = [], []
+        for g, e in zip(leaves, errs):
+            o, ne = compressed_allreduce(g, axis_name, error=e)
+            outs.append(o)
+            new_errs.append(ne)
+        return (jax.tree_util.tree_unflatten(treedef, outs),
+                jax.tree_util.tree_unflatten(treedef, new_errs))
+    raise ValueError(mode)

@@ -1,0 +1,143 @@
+"""The multi-core vector-processor trade-off, transplanted (paper C4, §7).
+
+Paper frame: at a fixed FPU budget, choose cores x lanes; many small cores
+win on short vectors (second parallel dimension, higher bytes/lane), one big
+core wins on long vectors.  TPU frame: at a fixed chip budget, choose
+(data, model) - many small TP groups (large DP) win when per-step work per
+chip is small (short sequences / small batch shards / decode), large TP
+groups win when the model doesn't fit or per-chip work saturates.
+
+``score_policy`` is the napkin-math roofline (compute/memory/collective +
+the issue-overhead term that plays CVA6's role); ``choose_mesh`` ranks all
+factorizations.  The analytical model here mirrors roofline/analysis.py's
+measured terms and is validated against them in the benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..core.ppa import TPU_V5E, TpuSpec
+from ..models.layers import param_count
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshCandidate:
+    dp: int
+    tp: int
+    # analytical per-step time terms (seconds)
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    t_issue: float = 0.0
+    fits: bool = True
+
+    @property
+    def t_total(self) -> float:
+        # compute/memory overlap on TPU; collectives partially overlap -
+        # conservative: max(compute, memory) + collective + issue
+        return max(self.t_compute, self.t_memory) \
+            + self.t_collective + self.t_issue
+
+    def describe(self) -> str:
+        return f"dp{self.dp}xtp{self.tp}"
+
+
+# Fixed per-step overhead playing the scalar-core issue-rate role: host
+# dispatch + collective alpha terms (~1.5us per hop) per layer.
+ISSUE_OVERHEAD_S = 100e-6
+ALPHA_PER_COLLECTIVE_S = 1.5e-6
+
+
+def _model_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> float:
+    try:
+        from ..models.model import build_model
+        return param_count(build_model(cfg).templates) * dtype_bytes
+    except Exception:
+        return 0.0
+
+
+def _step_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS: 6*N_active*D train, 2*N_active*D decode/prefill-token."""
+    n = _active_params(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def _active_params(cfg: ModelConfig) -> float:
+    n = param_count(__import__(
+        "repro.models.model", fromlist=["build_model"]).build_model(cfg).templates)
+    if cfg.n_experts:
+        # replace full expert count by top_k active experts
+        moe_params = cfg.n_layers * cfg.n_experts * 3 * cfg.d_model * cfg.d_ff
+        active = cfg.n_layers * cfg.top_k * 3 * cfg.d_model * cfg.d_ff
+        n = n - moe_params + active
+    return float(n)
+
+
+def score_policy(cfg: ModelConfig, shape: ShapeConfig, dp: int, tp: int,
+                 spec: TpuSpec = TPU_V5E, grad_sync: bool = True
+                 ) -> MeshCandidate:
+    chips = dp * tp
+    pbytes = _model_bytes(cfg)
+    flops = _step_flops(cfg, shape)
+    if shape.kind == "train":
+        flops_eff = flops  # fwd+bwd counted by the 6x multiplier
+    else:
+        flops_eff = flops
+
+    t_compute = flops_eff / (chips * spec.peak_bf16_flops)
+
+    # memory: weights stream once per step per TP group member (decode) or
+    # amortized over tokens (train); activations ~2 bytes x tokens x d x L.
+    weight_bytes_per_chip = pbytes / (tp * (dp if grad_sync else 1)) \
+        if shape.kind == "train" else pbytes / tp
+    act_bytes = 4.0 * shape.global_batch * \
+        (shape.seq_len if shape.kind != "decode" else 1) * \
+        cfg.d_model * cfg.n_layers / chips
+    t_memory = (weight_bytes_per_chip + act_bytes) / spec.hbm_bw
+
+    # collectives: TP all-reduce of activations per layer (2 per layer:
+    # attn-out + mlp-out) + DP gradient reduce-scatter/all-gather.
+    tokens_per_dp = shape.global_batch * \
+        (shape.seq_len if shape.kind != "decode" else 1) / dp
+    tp_bytes = 0.0 if tp == 1 else \
+        2 * cfg.n_layers * 2 * tokens_per_dp * cfg.d_model * 2 * (tp - 1) / tp
+    dp_bytes = 0.0
+    if shape.kind == "train" and dp > 1:
+        dp_bytes = 2 * (pbytes * 2 / tp) * (dp - 1) / dp  # fp32 grads rs+ag
+    t_collective = (tp_bytes / tp + dp_bytes / dp) / spec.ici_link_bw
+
+    n_colls = cfg.n_layers * (2 if tp > 1 else 0) + (1 if dp_bytes else 0)
+    t_issue = ISSUE_OVERHEAD_S + n_colls * ALPHA_PER_COLLECTIVE_S
+
+    # capacity check: params (bf16) + optimizer (12B/param over all chips
+    # when FSDP) + workspace
+    if shape.kind == "train":
+        state = pbytes / 2 * 14 / (dp * tp)  # fsdp: params+master+m+v
+    else:
+        state = pbytes / tp
+    fits = state < spec.hbm_bytes * 0.85
+
+    return MeshCandidate(dp, tp, t_compute, t_memory, t_collective, t_issue,
+                         fits)
+
+
+def enumerate_policies(chips: int):
+    out = []
+    tp = 1
+    while tp <= chips:
+        if chips % tp == 0:
+            out.append((chips // tp, tp))
+        tp *= 2
+    return out
+
+
+def choose_mesh(cfg: ModelConfig, shape: ShapeConfig, chips: int = 256,
+                spec: TpuSpec = TPU_V5E) -> list[MeshCandidate]:
+    """All candidates, best first (the Fig 13/17 ranking for this cell)."""
+    cands = [score_policy(cfg, shape, dp, tp, spec)
+             for dp, tp in enumerate_policies(chips)]
+    return sorted(cands, key=lambda c: (not c.fits, c.t_total))

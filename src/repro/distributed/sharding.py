@@ -1,0 +1,147 @@
+"""Sharding policies: logical-axis -> mesh-axis rules for params and
+activations (DP / FSDP / TP / SP / EP + the multi-pod ``pod`` axis).
+
+Logical param axes (from models' PT templates):
+  embed   - d_model dims            -> FSDP axes (ZeRO-3) or replicated
+  ffn     - MLP hidden              -> TP
+  qheads  - flattened q-head dim    -> TP
+  kvheads - flattened kv-head dim   -> TP (weight dim always divides; the
+            *activation* head dim may not - act_sharding drops those)
+  vocab   - (padded) vocabulary     -> TP
+  expert  - MoE expert index        -> TP (= EP)
+  dinner  - SSM/xLSTM inner dim     -> TP
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    dp_axes: tuple[str, ...] = ("data",)     # ("pod","data") multi-pod
+    tp_axis: str = "model"
+    fsdp: bool = True                        # shard params/opt over dp_axes
+    # sequence-parallel regions: shard activations' seq dim over tp in
+    # norm/elementwise regions (Megatron SP)
+    sp: bool = False
+
+    @property
+    def tp_effective(self):
+        """None when the model axis was absorbed into DP (pure-DP policy
+        for archs too narrow to exploit TP, e.g. whisper)."""
+        return None if self.tp_axis in self.dp_axes else self.tp_axis
+
+    def param_rules(self) -> dict:
+        fsdp_axes = self.dp_axes if self.fsdp else None
+        tp = self.tp_effective
+        return {
+            "embed": fsdp_axes,
+            "ffn": tp,
+            "qheads": tp,
+            "kvheads": tp,
+            "vocab": tp,
+            "expert": tp,
+            "dinner": tp,
+        }
+
+    def act_rules(self) -> dict:
+        batch = self.dp_axes
+        tp = self.tp_effective
+        seq = tp if self.sp else None
+        return {
+            # (B, S, D) hidden states
+            "hidden": P(batch, seq, None),
+            # (B, H, S, hd) attention activations
+            "heads": P(batch, tp, None, None),
+            # (B, chunk, V) fused-xent logits: vocab over TP
+            "logits": P(batch, None, tp),
+            # (B, E, C, d) MoE dispatch buffer: batch over DP, experts over TP
+            "moe_dispatch": P(batch, tp, None, None),
+            # (G, T_g, d) token groups at the MoE region boundary: the group
+            # dim shards over dp AND tp (full EP: one ~4096-token group per
+            # chip); gathers/scatters stay shard-local
+            "moe_tokens": P(batch + ((tp,) if tp else ()), None, None),
+            # (G, E, C, d) group-sharded dispatch buffer pre/post all-to-all
+            "moe_groups": P(batch + ((tp,) if tp else ()), None, None, None),
+        }
+
+    def batch_spec(self, ndim: int = 2) -> P:
+        return P(self.dp_axes, *([None] * (ndim - 1)))
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def tree_shardings(mesh, pspec_tree):
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), pspec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_shardings(mesh, batch_specs, policy: ShardingPolicy):
+    """Input-batch shardings: leading dim over dp axes (seq dims whole)."""
+    def leaf(sds):
+        nd = len(sds.shape)
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        # shard dim 0 (batch) when divisible
+        dp = 1
+        for a in policy.dp_axes:
+            dp *= mesh.shape[a]
+        if sds.shape[0] % dp == 0 and sds.shape[0] > 0:
+            return NamedSharding(mesh, P(policy.dp_axes,
+                                         *([None] * (nd - 1))))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map(leaf, batch_specs)
+
+
+def cache_shardings(mesh, cache_specs, policy: ShardingPolicy,
+                    batch_size: int | None = None):
+    """Decode-cache shardings, layout-aware by key:
+
+      attention caches  k/v/attn_k/attn_v/xk/xv: (L|G, B, Hkv, S, hd)
+        -> batch over dp, cache-seq over tp (the big dims; Hkv rarely
+           divides tp);
+      SSM/xLSTM states  conv/ssm/m_*/s_*: (L|G[,k], B, ...)
+        -> batch over dp, largest trailing dim over tp when divisible.
+    """
+    dp = 1
+    for a in policy.dp_axes:
+        dp *= mesh.shape[a]
+    tp_axis = policy.tp_effective
+    tp = mesh.shape[tp_axis] if tp_axis else 1
+
+    def leaf(path, sds):
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        shape = sds.shape
+        if not shape:
+            return NamedSharding(mesh, P())
+        spec: list = [None] * len(shape)
+        is_attn = key in ("k", "v", "attn_k", "attn_v", "xk", "xv")
+        # batch dim: attention layout dim 1; state layouts dim 1 or 2
+        bdims = (1,) if is_attn else (1, 2)
+        for bd in bdims:
+            if bd < len(shape) and shape[bd] % dp == 0 and shape[bd] >= dp \
+                    and (batch_size is None or shape[bd] == batch_size):
+                spec[bd] = policy.dp_axes
+                break
+        if is_attn and len(shape) >= 5:
+            sd = len(shape) - 2          # cache sequence dim
+            if tp_axis and shape[sd] % tp == 0 and shape[sd] >= tp:
+                spec[sd] = tp_axis
+        else:
+            # shard the largest trailing state dim over tp
+            cands = sorted(range(1, len(shape)),
+                           key=lambda i: -shape[i])
+            for cand in cands:
+                if tp_axis and spec[cand] is None and shape[cand] % tp == 0 \
+                        and shape[cand] >= tp * 4:
+                    spec[cand] = tp_axis
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_specs)

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU) + XLA production
+paths + pure-jnp oracles.  See ops.py for the dispatch contract."""
+from . import ops, ref
+from .ops import (attention, conv2d, decode_attention, default_impl,
+                  dotproduct, dropout, dwt_haar, exp, fft, impl_scope,
+                  jacobi2d, matmul, pathfinder, roi_align, set_impl, softmax,
+                  ssd_scan, ssd_step)

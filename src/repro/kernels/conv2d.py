@@ -1,0 +1,50 @@
+"""2-D convolution kernel (paper pool: the 3x7x7 fconv2d).
+
+Mirrors the Ara2 kernel's data reuse: a block of output rows stays resident
+(the paper keeps 7 output vectors in the VRF per loaded input row); the 147
+tap contributions are fully unrolled VPU FMAs over (rows, W) tiles.  Row
+overlap between blocks is handled with a dynamic row slice from a
+VMEM-resident input (benchmark-size images), not re-fetched from HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv2d_kernel(x_ref, w_ref, o_ref, *, k: int, br: int, c: int):
+    i = pl.program_id(0)
+    w_out = o_ref.shape[1]
+    acc = jnp.zeros((br, w_out), jnp.float32)
+    rows = x_ref[:, pl.dslice(i * br, br + k - 1), :]  # (C, br+k-1, W)
+    for ci in range(c):
+        for ki in range(k):
+            for kj in range(k):
+                acc += w_ref[ci, ki, kj] * rows[ci, ki:ki + br, kj:kj + w_out]
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def conv2d_pallas(x, w, *, block_rows=8, interpret=False):
+    c, h, ww = x.shape
+    _, k, _ = w.shape
+    h_out, w_out = h - k + 1, ww - k + 1
+    br = min(block_rows, h_out)
+    assert h_out % br == 0, (h_out, br)
+    return pl.pallas_call(
+        functools.partial(_conv2d_kernel, k=k, br=br, c=c),
+        grid=(h_out // br,),
+        in_specs=[pl.BlockSpec((c, h, ww), lambda i: (0, 0, 0)),
+                  pl.BlockSpec((c, k, k), lambda i: (0, 0, 0))],
+        out_specs=pl.BlockSpec((br, w_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h_out, w_out), x.dtype),
+        interpret=interpret,
+    )(x, w)
+
+
+def conv2d_xla(x, w):
+    from .ref import conv2d_ref
+    return conv2d_ref(x, w)

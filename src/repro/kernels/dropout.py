@@ -1,0 +1,42 @@
+"""Dropout kernel (paper pool, mask-unit exercise).
+
+Random bits are precomputed (streamed from memory, as in the Ara2 kernel);
+the kernel applies the keep-mask and the 1/(1-rate) rescale - this is the
+MASKU workload of Table 2.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _dropout_kernel(x_ref, bits_ref, o_ref, *, rate: float):
+    x = x_ref[...]
+    u = bits_ref[...].astype(jnp.float32) / np.float32(2 ** 32)
+    keep = u >= rate
+    o_ref[...] = jnp.where(keep, x / (1.0 - rate), 0.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("rate", "block", "interpret"))
+def dropout_pallas(x, bits, *, rate: float, block=1024, interpret=False):
+    (n,) = x.shape
+    block = min(block, n)
+    assert n % block == 0
+    return pl.pallas_call(
+        functools.partial(_dropout_kernel, rate=rate),
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                  pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=interpret,
+    )(x, bits)
+
+
+def dropout_xla(x, bits, *, rate: float):
+    from .ref import dropout_ref
+    return dropout_ref(x, bits, rate)

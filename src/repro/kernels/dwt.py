@@ -1,0 +1,58 @@
+"""1-D Haar DWT kernel (paper pool; the strided-memory-op exercise).
+
+The even/odd deinterleave is the paper's 'misaligned strided memory access'
+workload; on TPU it is a (n/2, 2) reshape in VMEM.  One level per kernel
+call; the wrapper recurses on the approximation half.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+_INV_SQRT2 = np.float32(1.0 / np.sqrt(2.0))
+
+
+def _dwt_kernel(x_ref, lo_ref, hi_ref):
+    x = x_ref[...].astype(jnp.float32).reshape(-1, 2)
+    even, odd = x[:, 0], x[:, 1]
+    lo_ref[...] = ((even + odd) * _INV_SQRT2).astype(lo_ref.dtype)
+    hi_ref[...] = ((even - odd) * _INV_SQRT2).astype(hi_ref.dtype)
+
+
+def _dwt_level_pallas(x, *, block, interpret):
+    (n,) = x.shape
+    bn = min(block, n // 2)
+    assert (n // 2) % bn == 0
+    return pl.pallas_call(
+        _dwt_kernel,
+        grid=(n // 2 // bn,),
+        in_specs=[pl.BlockSpec((2 * bn,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((bn,), lambda i: (i,)),
+                   pl.BlockSpec((bn,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((n // 2,), x.dtype),
+                   jax.ShapeDtypeStruct((n // 2,), x.dtype)],
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("levels", "block", "interpret"))
+def dwt_haar_pallas(x, *, levels=1, block=512, interpret=False):
+    (n,) = x.shape
+    out = x
+    parts = []
+    cur = out
+    for _ in range(levels):
+        lo, hi = _dwt_level_pallas(cur, block=block, interpret=interpret)
+        parts.insert(0, hi)
+        cur = lo
+    parts.insert(0, cur)
+    return jnp.concatenate(parts)
+
+
+def dwt_haar_xla(x, levels=1):
+    from .ref import dwt_haar_ref
+    return dwt_haar_ref(x, levels)

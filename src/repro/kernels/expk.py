@@ -1,0 +1,55 @@
+"""Elementwise exp kernel using the paper's software-polynomial scheme.
+
+Ara2's `exp` benchmark emulates exponentiation with preloaded approximation
+coefficients (§4).  We do the same: range reduction x = n*ln2 + r, a degree-6
+polynomial on r, and 2^n via exponent-field bit assembly (no transcendental
+hardware assumed - the VPU analogue of the paper's software exp).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LOG2E = 1.4426950408889634
+LN2_HI = 0.6931471805599453
+# Taylor coefficients 1/k! for k=0..6 (|r| <= ln2/2 -> ~1e-7 rel err).
+_COEFFS = (1.0, 1.0, 0.5, 1.0 / 6, 1.0 / 24, 1.0 / 120, 1.0 / 720)
+
+
+def _exp_poly(x):
+    x = x.astype(jnp.float32)
+    n = jnp.round(x * LOG2E)
+    r = x - n * LN2_HI
+    p = jnp.full_like(r, _COEFFS[-1])
+    for c in _COEFFS[-2::-1]:
+        p = p * r + c
+    # 2^n via exponent bit assembly: ((n + 127) << 23).bitcast(f32)
+    ni = jnp.clip(n, -126, 127).astype(jnp.int32)
+    two_n = jax.lax.bitcast_convert_type((ni + 127) << 23, jnp.float32)
+    return p * two_n
+
+
+def _exp_kernel(x_ref, o_ref):
+    o_ref[...] = _exp_poly(x_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def exp_pallas(x, *, block=1024, interpret=False):
+    (n,) = x.shape
+    block = min(block, n)
+    assert n % block == 0
+    return pl.pallas_call(
+        _exp_kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def exp_xla(x):
+    return jnp.exp(x)

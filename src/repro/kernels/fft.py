@@ -1,0 +1,88 @@
+"""Radix-2 Stockham FFT kernel (paper pool).
+
+The paper's fft buffers all samples in the VRF (<= 128*L inputs) to avoid
+memory round-trips; here the whole signal stays in VMEM across all log2(n)
+stages.  The Stockham autosort formulation needs no bit-reversal gather -
+every stage is reshape + butterfly + twiddle, i.e. the power-of-two data
+movement the optimized SLDU supports natively (C2).
+
+Stage s (l = n >> (s+1), m = 1 << s):
+  view X as (2, l, m): a, b = X[0], X[1]
+  top = a + b ; bot = w_l * (a - b),  w_l[j] = exp(-2*pi*i*j / 2l)
+  X <- stack([top, bot], axis=1)  # (l, 2, m)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _twiddles(n: int) -> np.ndarray:
+    """(stages, n/2) complex twiddle table; row s holds w_l for l = n>>(s+1),
+    padded with zeros."""
+    t = int(np.log2(n))
+    tw = np.zeros((t, n // 2), np.complex64)
+    for s in range(t):
+        l = n >> (s + 1)
+        tw[s, :l] = np.exp(-2j * np.pi * np.arange(l) / (2 * l))
+    return tw
+
+
+def _fft_stages(xr, xi, twr, twi, n: int):
+    t = int(np.log2(n))
+    for s in range(t):
+        l, m = n >> (s + 1), 1 << s
+        ar, ai = xr.reshape(2, l, m)[0], xi.reshape(2, l, m)[0]
+        br, bi = xr.reshape(2, l, m)[1], xi.reshape(2, l, m)[1]
+        wr = twr[s, :l].reshape(l, 1)
+        wi = twi[s, :l].reshape(l, 1)
+        tr, ti = ar + br, ai + bi
+        dr, di = ar - br, ai - bi
+        botr = wr * dr - wi * di
+        boti = wr * di + wi * dr
+        xr = jnp.stack([tr, botr], axis=1).reshape(n)
+        xi = jnp.stack([ti, boti], axis=1).reshape(n)
+    return xr, xi
+
+
+def _fft_kernel(xr_ref, xi_ref, twr_ref, twi_ref, or_ref, oi_ref, *, n: int):
+    xr = xr_ref[...].astype(jnp.float32)
+    xi = xi_ref[...].astype(jnp.float32)
+    yr, yi = _fft_stages(xr, xi, twr_ref[...], twi_ref[...], n)
+    or_ref[...] = yr.astype(or_ref.dtype)
+    oi_ref[...] = yi.astype(oi_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fft_pallas(x_re, x_im, *, interpret=False):
+    (n,) = x_re.shape
+    assert n & (n - 1) == 0 and n >= 2, f"n={n} must be a power of two"
+    tw = _twiddles(n)
+    twr = jnp.asarray(tw.real)
+    twi = jnp.asarray(tw.imag)
+    t = tw.shape[0]
+    return pl.pallas_call(
+        functools.partial(_fft_kernel, n=n),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((n,), lambda i: (0,)),
+                  pl.BlockSpec((n,), lambda i: (0,)),
+                  pl.BlockSpec((t, n // 2), lambda i: (0, 0)),
+                  pl.BlockSpec((t, n // 2), lambda i: (0, 0))],
+        out_specs=[pl.BlockSpec((n,), lambda i: (0,)),
+                   pl.BlockSpec((n,), lambda i: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.float32),
+                   jax.ShapeDtypeStruct((n,), jnp.float32)],
+        interpret=interpret,
+    )(x_re, x_im, twr, twi)
+
+
+def fft_xla(x_re, x_im):
+    """Same Stockham schedule, lowered through XLA (production CPU path)."""
+    (n,) = x_re.shape
+    tw = _twiddles(n)
+    return _fft_stages(x_re.astype(jnp.float32), x_im.astype(jnp.float32),
+                       jnp.asarray(tw.real), jnp.asarray(tw.imag), n)

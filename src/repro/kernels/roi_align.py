@@ -1,0 +1,45 @@
+"""ROI-align (paper pool).
+
+Gather-bound, not compute-bound (Table 2: CB=N, 9/5*L OP/cycle peak from the
+bilinear blend arithmetic).  The production implementation is the vectorized
+XLA path; a Pallas variant would be gather-latency-bound on the MXU-less
+path and is intentionally not provided (DESIGN.md §2 hardware-adaptation
+notes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def roi_align_xla(feat, rois, out_size=7, sampling=2):
+    """feat: (C, H, W); rois: (R, 4) [y0, x0, y1, x1].  Vectorized bilinear
+    average pooling; same semantics as ``ref.roi_align_ref``."""
+    c, h, w = feat.shape
+    r = rois.shape[0]
+    oy, ox = jnp.meshgrid(jnp.arange(out_size), jnp.arange(out_size),
+                          indexing="ij")
+    sy, sx = jnp.meshgrid(jnp.arange(sampling), jnp.arange(sampling),
+                          indexing="ij")
+
+    def per_roi(roi):
+        y0, x0, y1, x1 = roi
+        bin_h = (y1 - y0) / out_size
+        bin_w = (x1 - x0) / out_size
+        # sample coords: (out, out, s, s)
+        y = y0 + (oy[..., None, None] + (sy + 0.5) / sampling) * bin_h
+        x = x0 + (ox[..., None, None] + (sx + 0.5) / sampling) * bin_w
+        y = jnp.clip(y, 0.0, h - 1.0)
+        x = jnp.clip(x, 0.0, w - 1.0)
+        yi = jnp.clip(jnp.floor(y).astype(jnp.int32), 0, h - 2)
+        xi = jnp.clip(jnp.floor(x).astype(jnp.int32), 0, w - 2)
+        dy, dx = y - yi, x - xi
+        v00 = feat[:, yi, xi]
+        v01 = feat[:, yi, xi + 1]
+        v10 = feat[:, yi + 1, xi]
+        v11 = feat[:, yi + 1, xi + 1]
+        val = (v00 * (1 - dy) * (1 - dx) + v01 * (1 - dy) * dx
+               + v10 * dy * (1 - dx) + v11 * dy * dx)
+        return jnp.mean(val, axis=(-2, -1))  # (C, out, out)
+
+    return jax.vmap(per_roi)(rois)

@@ -1,0 +1,39 @@
+"""Row softmax kernel (paper pool; the ML 'final attention score' kernel).
+
+One row block per grid step, full row resident in VMEM (rows up to a few K
+columns; attention-scale softmax goes through the flash kernel instead).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def softmax_pallas(x, *, block_rows=8, interpret=False):
+    r, c = x.shape
+    block_rows = min(block_rows, r)
+    assert r % block_rows == 0
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(r // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def softmax_xla(x):
+    return jax.nn.softmax(x.astype(jnp.float32), axis=-1).astype(x.dtype)

@@ -1,0 +1,266 @@
+"""Multi-pod dry-run (deliverable e): lower + compile every assigned
+(architecture x input-shape) cell on the production meshes and extract the
+roofline terms (deliverable g) from the compiled artifact.
+
+MUST be run as a module entry point: the XLA_FLAGS line below has to
+execute before any other jax import in the process.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ---- only now is it safe to import jax ------------------------------------
+import argparse      # noqa: E402
+import json          # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import SHAPES, cell_applicable, get_config  # noqa: E402
+from ..configs.base import ModelConfig, ShapeConfig  # noqa: E402
+from ..distributed.act_sharding import activation_sharding  # noqa: E402
+from ..distributed.sharding import (ShardingPolicy, batch_shardings,  # noqa: E402
+                                    cache_shardings, tree_shardings)
+from ..models.layers import PT  # noqa: E402
+from ..models.model import build_model, input_specs  # noqa: E402
+from ..roofline.analysis import analyze, model_flops_estimate  # noqa: E402
+from .mesh import make_production_mesh, mesh_desc  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "..", "..", "..", "results", "dryrun")
+
+
+def choose_policy(cfg: ModelConfig, shape: ShapeConfig, mesh
+                  ) -> ShardingPolicy:
+    """Baseline policy per cell (the paper-faithful starting point; §Perf
+    hillclimbs from here).  Train: FSDP + TP + SP.  Serve: TP-only unless
+    the model doesn't fit one TP group (qwen3-moe), then weights also shard
+    over the dp axes."""
+    axes = list(mesh.shape.keys())
+    dp_axes = tuple(a for a in axes if a != "model")
+    # C4 (the paper's multi-core insight): archs too narrow to exploit a
+    # 16-wide TP axis (whisper: 8 heads, d_ff 2048) run as pure DP -
+    # "many small vector cores" - with the model axis joining data.
+    tp = mesh.shape["model"]
+    if cfg.n_heads < 12 and cfg.d_model <= 512 \
+            and shape.global_batch % mesh.size == 0:
+        # pure DP only when the batch actually divides the whole mesh -
+        # otherwise the unsharded batch replicates every activation
+        all_dp = tuple(axes)
+        return ShardingPolicy(dp_axes=all_dp, fsdp=shape.kind == "train",
+                              sp=False)
+    if shape.kind == "train":
+        return ShardingPolicy(dp_axes=dp_axes, fsdp=True, sp=True)
+    from ..models.layers import param_count
+    pbytes = param_count(build_model(cfg).templates) * 2
+    tp = mesh.shape["model"]
+    fsdp = pbytes / tp > 0.5 * 16e9
+    # SP for 32k prefill: the per-layer full-seq hidden otherwise dominates
+    # (qwen3-moe: 49 GB/dev measured without it)
+    return ShardingPolicy(dp_axes=dp_axes, fsdp=fsdp,
+                          sp=shape.kind == "prefill")
+
+
+def _opt_state_specs(model, param_sh, mesh, opt=None):
+    from ..optim import AdamW8bit
+    from ..optim.adamw8bit import BLOCK, padded_last
+
+    def f32(t):
+        return jax.ShapeDtypeStruct(t.shape, jnp.float32)
+
+    tmpl = model.templates
+    leaves = lambda f: jax.tree_util.tree_map(
+        f, tmpl, is_leaf=lambda x: isinstance(x, PT))
+    if isinstance(opt, AdamW8bit):
+        def axis_size(entry):
+            if entry is None:
+                return 1
+            entries = entry if isinstance(entry, tuple) else (entry,)
+            n = 1
+            for a in entries:
+                n *= mesh.shape[a]
+            return n
+
+        def q_leaf(t, dtype):
+            lead = t.shape[:-1]
+            qshape = lead + (padded_last(t.shape[-1]),)
+            sshape = lead + (qshape[-1] // BLOCK,)
+            return {"q": jax.ShapeDtypeStruct(qshape, dtype),
+                    "s": jax.ShapeDtypeStruct(sshape, jnp.float32)}
+
+        def q_sh_leaf(t, ns):
+            spec = list(ns.spec) + [None] * (len(t.shape) - len(ns.spec))
+            qshape = t.shape[:-1] + (padded_last(t.shape[-1]),)
+            sshape = t.shape[:-1] + (qshape[-1] // BLOCK,)
+
+            def fit(spec_, shape_):
+                out = []
+                for dim, entry in enumerate(spec_):
+                    ok = entry is not None and \
+                        shape_[dim] % axis_size(entry) == 0
+                    out.append(entry if ok else None)
+                return P(*out)
+            return {"q": NamedSharding(mesh, fit(spec, qshape)),
+                    "s": NamedSharding(mesh, fit(spec, sshape))}
+
+        m_specs = leaves(lambda t: q_leaf(t, jnp.int8))
+        v_specs = leaves(lambda t: q_leaf(t, jnp.uint8))
+        q_sh = jax.tree_util.tree_map(
+            q_sh_leaf, tmpl, param_sh, is_leaf=lambda x: isinstance(x, PT))
+        specs = {"master": leaves(f32), "m": m_specs, "v": v_specs,
+                 "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        sh = {"master": param_sh, "m": q_sh, "v": q_sh,
+              "step": NamedSharding(mesh, P())}
+        return specs, sh
+    specs = {"master": leaves(f32), "m": leaves(f32), "v": leaves(f32),
+             "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    sh = {"master": param_sh, "m": param_sh, "v": param_sh,
+          "step": NamedSharding(mesh, P())}
+    return specs, sh
+
+
+def build_cell(arch: str, shape_name: str, mesh):
+    """Returns (jitted_fn, arg_specs tuple) for one dry-run cell."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    policy = choose_policy(cfg, shape, mesh)
+    rules = policy.act_rules()
+    pspecs = model.pspecs(policy.param_rules(), dict(mesh.shape))
+    param_sh = tree_shardings(mesh, pspecs)
+    param_specs = jax.tree_util.tree_map(
+        lambda t: jax.ShapeDtypeStruct(t.shape, t.dtype), model.templates,
+        is_leaf=lambda x: isinstance(x, PT))
+    batch = input_specs(cfg, shape)
+    batch_sh = batch_shardings(mesh, batch, policy)
+
+    if shape.kind == "train":
+        from ..models.layers import param_count
+        from ..optim import AdamW, AdamW8bit
+        from ..train.trainer import _step_body
+        n_params = param_count(model.templates)
+        # state-dominated models: 8-bit m/v + microbatched grad accumulation
+        big = n_params * 14 / mesh.size > 4e9
+        opt = AdamW8bit(lr=3e-4) if big else AdamW(lr=3e-4)
+        narrow = cfg.n_heads < 12 and cfg.d_model <= 512
+        micro = 8 if big else (4 if narrow else
+                               (2 if n_params > 10e9 else 1))
+        state_specs, state_sh = _opt_state_specs(model, param_sh, mesh,
+                                                 opt=opt)
+        body = _step_body(model, opt, mesh, rules, 1.0, True,
+                          microbatches=micro)
+        fn = jax.jit(body, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, None), donate_argnums=(0,))
+        return fn, (state_specs, batch)
+
+    if shape.kind == "prefill":
+        def prefill_fn(params, b):
+            with activation_sharding(mesh, rules):
+                return model.prefill(params, b, cache_len=shape.seq_len)
+        fn = jax.jit(prefill_fn, in_shardings=(param_sh, batch_sh))
+        return fn, (param_specs, batch)
+
+    # decode
+    cache_specs = model.cache_shapes(shape.global_batch, shape.seq_len)
+    cache_sh = cache_shardings(mesh, cache_specs, policy,
+                               batch_size=shape.global_batch)
+    tok_sh = batch_shardings(mesh, batch, policy)
+
+    def decode_fn(params, cache, tokens):
+        with activation_sharding(mesh, rules):
+            return model.decode(params, cache, tokens)
+
+    fn = jax.jit(decode_fn,
+                 in_shardings=(param_sh, cache_sh, tok_sh["tokens"]),
+                 out_shardings=(None, cache_sh), donate_argnums=(1,))
+    return fn, (param_specs, cache_specs, batch["tokens"])
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             save: bool = True) -> dict:
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    ok, why = cell_applicable(cfg, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    desc = mesh_desc(mesh)
+    rec = {"arch": arch, "shape": shape_name, "mesh": desc,
+           "chips": mesh.size}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        print(f"[dryrun] {arch} x {shape_name} x {desc}: SKIP ({why})")
+        return rec
+    t0 = time.time()
+    try:
+        fn, arg_specs = build_cell(arch, shape_name, mesh)
+        with mesh:
+            lowered = fn.lower(*arg_specs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mf = model_flops_estimate(cfg, shape)
+        roof = analyze(compiled, arch=arch, shape=shape_name, mesh_desc=desc,
+                       chips=mesh.size, model_flops=mf)
+        ma = compiled.memory_analysis()
+        rec.update(status="ok", t_lower_s=round(t_lower, 1),
+                   t_compile_s=round(t_compile, 1),
+                   memory=dict(
+                       argument_bytes=ma.argument_size_in_bytes,
+                       output_bytes=ma.output_size_in_bytes,
+                       temp_bytes=ma.temp_size_in_bytes,
+                       alias_bytes=ma.alias_size_in_bytes),
+                   roofline=roof.to_dict())
+        hbm = 16e9
+        used = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+        rec["fits_hbm"] = bool(used < hbm)
+        rec["hbm_used_gb"] = round(used / 1e9, 2)
+        print(f"[dryrun] {arch} x {shape_name} x {desc}: OK "
+              f"({rec['hbm_used_gb']} GB/dev, dominant={roof.dominant}, "
+              f"roofline_frac={roof.roofline_fraction:.3f}, "
+              f"compile {t_compile:.0f}s)")
+    except Exception as e:  # noqa: BLE001 - report, don't crash the sweep
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        print(f"[dryrun] {arch} x {shape_name} x {desc}: ERROR {e}")
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        fname = f"{arch}__{shape_name}__{desc}.json".replace("/", "_")
+        with open(os.path.join(RESULTS_DIR, fname), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=[*SHAPES, None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    from ..configs import list_archs
+    archs = list_archs() if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp)
+                n_err += rec["status"] == "error"
+    sys.exit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

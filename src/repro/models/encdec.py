@@ -1,0 +1,188 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, S_enc, d_model).  Sinusoidal positions on
+both sides (deviation from whisper's learned decoder positions recorded in
+DESIGN.md).  GELU MLPs, pre-LN, LayerNorm (not RMSNorm).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.act_sharding import constrain
+from .attention import (attn_cross_decode, attn_decode, attn_forward,
+                        attn_prefill, attn_templates, project_kv)
+from .layers import (PT, embed_lookup, embed_templates, gelu_mlp_apply,
+                     gelu_mlp_templates, layernorm, sinusoidal_positions,
+                     softmax_xent_chunked, stack_layers)
+
+CROSS_LEN = 1500  # whisper's 30 s encoder output length (serving cells)
+
+
+def _ln_t(d):
+    return {"w": PT((d,), "ones", ("embed",)), "b": PT((d,), "zeros",
+                                                       ("embed",))}
+
+
+def _ln(p, x, eps):
+    return layernorm(p["w"], p["b"], x, eps)
+
+
+def encdec_templates(cfg):
+    d = cfg.d_model
+    return {
+        "embed": embed_templates(cfg.padded_vocab, d),
+        "enc_layers": stack_layers(lambda: {
+            "ln1": _ln_t(d), "attn": attn_templates(cfg),
+            "ln2": _ln_t(d), "mlp": gelu_mlp_templates(d, cfg.d_ff),
+        }, cfg.n_enc_layers),
+        "enc_final": _ln_t(d),
+        "dec_layers": stack_layers(lambda: {
+            "ln1": _ln_t(d), "self_attn": attn_templates(cfg),
+            "lnx": _ln_t(d), "cross_attn": attn_templates(cfg),
+            "ln2": _ln_t(d), "mlp": gelu_mlp_templates(d, cfg.d_ff),
+        }, cfg.n_layers),
+        "dec_final": _ln_t(d),
+        "lm_head": PT((d, cfg.padded_vocab), "scaled", ("embed", "vocab")),
+    }
+
+
+def encode(params, frames, cfg):
+    s = frames.shape[1]
+    x = frames + sinusoidal_positions(s, cfg.d_model).astype(frames.dtype)
+
+    def body(carry, lp):
+        h = _ln(lp["ln1"], carry, cfg.norm_eps)
+        carry = carry + attn_forward(lp["attn"], h, cfg, causal=False)
+        h = _ln(lp["ln2"], carry, cfg.norm_eps)
+        carry = constrain(carry + gelu_mlp_apply(lp["mlp"], h), "hidden")
+        return carry, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return _ln(params["enc_final"], x, cfg.norm_eps)
+
+
+def _decoder(params, tokens, enc_out, cfg, *, remat=False):
+    s = tokens.shape[1]
+    x = embed_lookup(params["embed"], tokens)
+    x = x + sinusoidal_positions(s, cfg.d_model).astype(x.dtype)
+
+    def body(carry, lp):
+        h = _ln(lp["ln1"], carry, cfg.norm_eps)
+        carry = carry + attn_forward(lp["self_attn"], h, cfg, causal=True)
+        h = _ln(lp["lnx"], carry, cfg.norm_eps)
+        ckv = project_kv(lp["cross_attn"], enc_out, cfg, rope=False)
+        carry = carry + attn_forward(lp["cross_attn"], h, cfg,
+                                     cross_kv=ckv)
+        h = _ln(lp["ln2"], carry, cfg.norm_eps)
+        carry = constrain(carry + gelu_mlp_apply(lp["mlp"], h), "hidden")
+        return carry, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    return _ln(params["dec_final"], x, cfg.norm_eps)
+
+
+def encdec_loss(params, batch, cfg, *, remat=True, xent_chunk=512):
+    enc_out = encode(params, batch["frames"], cfg)
+    x = _decoder(params, batch["tokens"], enc_out, cfg, remat=remat)
+    loss, acc = softmax_xent_chunked(
+        x, params["lm_head"], batch["labels"], chunk=xent_chunk,
+        label_mask=batch.get("label_mask"),
+        valid_vocab=cfg.vocab_size)
+    return loss, {"loss": loss, "accuracy": acc}
+
+
+# ---------------------------------------------------------------------------
+# Serving.
+# ---------------------------------------------------------------------------
+
+def encdec_cache_shapes(cfg, batch_size: int, cache_len: int,
+                        dtype=jnp.bfloat16):
+    hd = cfg.head_dim_resolved
+    l, b = cfg.n_layers, batch_size
+    return {
+        "k": jax.ShapeDtypeStruct((l, b, cfg.n_kv_heads, cache_len, hd),
+                                  dtype),
+        "v": jax.ShapeDtypeStruct((l, b, cfg.n_kv_heads, cache_len, hd),
+                                  dtype),
+        "xk": jax.ShapeDtypeStruct((l, b, cfg.n_kv_heads, CROSS_LEN, hd),
+                                   dtype),
+        "xv": jax.ShapeDtypeStruct((l, b, cfg.n_kv_heads, CROSS_LEN, hd),
+                                   dtype),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def encdec_prefill(params, batch, cfg, *, cache_len=None):
+    """Encode frames, project cross KV, prefill the decoder self-cache with
+    ``tokens`` (the forced/prompt tokens)."""
+    enc_out = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    cache_len = cache_len or s
+    x = embed_lookup(params["embed"], tokens)
+    x = x + sinusoidal_positions(s, cfg.d_model).astype(x.dtype)
+
+    def body(carry, lp):
+        h = _ln(lp["ln1"], carry, cfg.norm_eps)
+        a, kv = attn_prefill(lp["self_attn"], h, cfg, cache_len=cache_len)
+        carry = carry + a
+        ckv = project_kv(lp["cross_attn"], enc_out, cfg, rope=False)
+        h = _ln(lp["lnx"], carry, cfg.norm_eps)
+        carry = carry + attn_forward(lp["cross_attn"], h, cfg, cross_kv=ckv)
+        h = _ln(lp["ln2"], carry, cfg.norm_eps)
+        carry = carry + gelu_mlp_apply(lp["mlp"], h)
+        return carry, (kv, ckv)
+
+    x, ((k, v), (xk, xv)) = jax.lax.scan(body, x, params["dec_layers"])
+    x = _ln(params["dec_final"], x, cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1].astype(jnp.float32),
+                        params["lm_head"].astype(jnp.float32))
+    logits = logits[:, :cfg.vocab_size]
+    cache = {"k": k, "v": v, "xk": xk, "xv": xv, "pos": jnp.int32(s)}
+    return logits, cache
+
+
+def encdec_decode_step(params, cache, tokens, cfg):
+    b = tokens.shape[0]
+    pos = cache["pos"]
+    x = embed_lookup(params["embed"], tokens)
+    # dynamic positional vector: sin/cos recomputed at pos (no giant table)
+    import numpy as np
+    d = cfg.d_model
+    div = jnp.asarray(np.exp(-np.log(10000.0) * np.arange(0, d, 2) / d))
+    ang = pos.astype(jnp.float32) * div
+    pvec = jnp.zeros((d,), jnp.float32).at[0::2].set(jnp.sin(ang)) \
+        .at[1::2].set(jnp.cos(ang))
+    x = x + pvec.astype(x.dtype)
+
+    def body(carry, inp):
+        x, kc_all, vc_all = carry
+        lp, idx, xk, xv = inp
+        kc = jax.lax.dynamic_index_in_dim(kc_all, idx, 0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(vc_all, idx, 0, keepdims=False)
+        h = _ln(lp["ln1"], x, cfg.norm_eps)
+        a, kc, vc = attn_decode(lp["self_attn"], h, kc, vc, pos, cfg)
+        x = x + a
+        h = _ln(lp["lnx"], x, cfg.norm_eps)
+        x = x + attn_cross_decode(lp["cross_attn"], h, xk, xv, cfg)
+        h = _ln(lp["ln2"], x, cfg.norm_eps)
+        x = x + gelu_mlp_apply(lp["mlp"], h)
+        kc_all = jax.lax.dynamic_update_index_in_dim(kc_all, kc, idx, 0)
+        vc_all = jax.lax.dynamic_update_index_in_dim(vc_all, vc, idx, 0)
+        return (x, kc_all, vc_all), None
+
+    (x, k_new, v_new), _ = jax.lax.scan(
+        body, (x, cache["k"], cache["v"]),
+        (params["dec_layers"], jnp.arange(cfg.n_layers),
+         cache["xk"], cache["xv"]))
+    x = _ln(params["dec_final"], x, cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1].astype(jnp.float32),
+                        params["lm_head"].astype(jnp.float32))
+    logits = logits[:, :cfg.vocab_size]
+    cache = {"k": k_new, "v": v_new, "xk": cache["xk"], "xv": cache["xv"],
+             "pos": pos + 1}
+    return logits, cache

@@ -1,0 +1,232 @@
+"""zamba2-style hybrid: Mamba2 backbone + one *shared* attention block
+(single parameter set) applied after every ``shared_attn_every`` SSM layers.
+
+Decode state is O(1)/token for the SSM layers; the shared attention block
+uses a ring-buffered sliding-window cache (cfg.local_window) so the arch
+stays sub-quadratic at long_500k (deviation from the HF full-attention
+config recorded in DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.act_sharding import constrain
+from .attention import attn_decode, attn_forward, attn_prefill, attn_templates
+from .layers import (PT, embed_lookup, embed_templates, rmsnorm,
+                     softmax_xent_chunked, stack_layers, swiglu_apply,
+                     swiglu_templates)
+from .mamba2 import (mamba_decode, mamba_dims, mamba_forward, mamba_templates)
+from .transformer import lm_head_weight
+
+
+def hybrid_templates(cfg):
+    dims = mamba_dims(cfg)
+    t = {
+        "embed": embed_templates(cfg.padded_vocab, cfg.d_model),
+        "mamba": stack_layers(lambda: {
+            "norm": PT((cfg.d_model,), "zeros", ("embed",)),
+            "block": mamba_templates(dims)}, cfg.n_layers),
+        "shared_attn": {
+            "ln1": PT((cfg.d_model,), "zeros", ("embed",)),
+            "attn": attn_templates(cfg),
+            "ln2": PT((cfg.d_model,), "zeros", ("embed",)),
+            "mlp": swiglu_templates(cfg.d_model, cfg.d_ff),
+        },
+        "final_norm": PT((cfg.d_model,), "zeros", ("embed",)),
+        "lm_head": PT((cfg.d_model, cfg.padded_vocab), "scaled",
+                      ("embed", "vocab")),
+    }
+    return t
+
+
+def _split_groups(cfg):
+    k = cfg.shared_attn_every
+    n_groups = cfg.n_layers // k
+    remainder = cfg.n_layers - n_groups * k
+    return k, n_groups, remainder
+
+
+def _group_reshape(tree, n_groups, k):
+    return jax.tree_util.tree_map(
+        lambda a: a[: n_groups * k].reshape((n_groups, k) + a.shape[1:]), tree)
+
+
+def _tail_slice(tree, n_groups, k):
+    return jax.tree_util.tree_map(lambda a: a[n_groups * k:], tree)
+
+
+def _mamba_layer(lp, x, cfg, dims):
+    h = rmsnorm(lp["norm"], x, cfg.norm_eps)
+    return constrain(x + mamba_forward(lp["block"], h, dims,
+                                       norm_eps=cfg.norm_eps), "hidden")
+
+
+def _shared_attn_block(sp, x, cfg):
+    h = rmsnorm(sp["ln1"], x, cfg.norm_eps)
+    # the sliding window equals full attention at train_4k (W >= S) and keeps
+    # serving consistent with the ring-buffered decode cache at 32k/500k
+    x = x + attn_forward(sp["attn"], h, cfg, window=cfg.local_window)
+    h = rmsnorm(sp["ln2"], x, cfg.norm_eps)
+    return constrain(x + swiglu_apply(sp["mlp"], h), "hidden")
+
+
+def hybrid_backbone(params, x, cfg, *, remat=True):
+    dims = mamba_dims(cfg)
+    k, n_groups, rem = _split_groups(cfg)
+    grouped = _group_reshape(params["mamba"], n_groups, k)
+    sp = params["shared_attn"]
+
+    layer = _mamba_layer
+    if remat:
+        layer = jax.checkpoint(layer, static_argnums=(2, 3))
+
+    def group_body(carry, gp):
+        def inner(c, lp):
+            return layer(lp, c, cfg, dims), None
+        carry, _ = jax.lax.scan(inner, carry, gp)
+        carry = _shared_attn_block(sp, carry, cfg)
+        return carry, None
+
+    x, _ = jax.lax.scan(group_body, x, grouped)
+    if rem:
+        tail = _tail_slice(params["mamba"], n_groups, k)
+
+        def inner(c, lp):
+            return layer(lp, c, cfg, dims), None
+        x, _ = jax.lax.scan(inner, x, tail)
+    return x
+
+
+def hybrid_loss(params, batch, cfg, *, remat=True, xent_chunk=512):
+    x = embed_lookup(params["embed"], batch["tokens"])
+    x = constrain(x, "hidden")
+    x = hybrid_backbone(params, x, cfg, remat=remat)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    loss, acc = softmax_xent_chunked(
+        x, params["lm_head"], batch["labels"], chunk=xent_chunk,
+        label_mask=batch.get("label_mask"),
+        valid_vocab=cfg.vocab_size)
+    return loss, {"loss": loss, "accuracy": acc}
+
+
+# ---------------------------------------------------------------------------
+# Serving.
+# ---------------------------------------------------------------------------
+
+def hybrid_cache_shapes(cfg, batch_size: int, cache_len: int,
+                        dtype=jnp.bfloat16):
+    dims = mamba_dims(cfg)
+    k, n_groups, _ = _split_groups(cfg)
+    w = min(cache_len, cfg.local_window or cache_len)
+    hd = cfg.head_dim_resolved
+    return {
+        "conv": jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch_size, dims.d_conv - 1, dims.conv_dim), dtype),
+        "ssm": jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch_size, dims.n_heads, dims.head_dim,
+             dims.d_state), jnp.float32),
+        "attn_k": jax.ShapeDtypeStruct(
+            (n_groups, batch_size, cfg.n_kv_heads, w, hd), dtype),
+        "attn_v": jax.ShapeDtypeStruct(
+            (n_groups, batch_size, cfg.n_kv_heads, w, hd), dtype),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def hybrid_prefill(params, batch, cfg, *, cache_len=None):
+    dims = mamba_dims(cfg)
+    k, n_groups, rem = _split_groups(cfg)
+    x = embed_lookup(params["embed"], batch["tokens"])
+    s = x.shape[1]
+    cache_len = cache_len or s
+    w = min(cache_len, cfg.local_window or cache_len)
+    grouped = _group_reshape(params["mamba"], n_groups, k)
+    sp = params["shared_attn"]
+
+    def mamba_step(c, lp):
+        h = rmsnorm(lp["norm"], c, cfg.norm_eps)
+        out, (conv, ssm) = mamba_forward(lp["block"], h, dims,
+                                         return_state=True,
+                                         norm_eps=cfg.norm_eps)
+        return c + out, (conv, ssm)
+
+    def group_body(carry, gp):
+        carry, states = jax.lax.scan(mamba_step, carry, gp)
+        h = rmsnorm(sp["ln1"], carry, cfg.norm_eps)
+        a, kv = attn_prefill(sp["attn"], h, cfg, cache_len=w,
+                             window=cfg.local_window)
+        carry = carry + a
+        h = rmsnorm(sp["ln2"], carry, cfg.norm_eps)
+        carry = carry + swiglu_apply(sp["mlp"], h)
+        return carry, (states, kv)
+
+    x, (mstates, attn_kv) = jax.lax.scan(group_body, x, grouped)
+    convs, ssms = mstates  # (G, k, B, ...) each
+    convs = convs.reshape((n_groups * k,) + convs.shape[2:])
+    ssms = ssms.reshape((n_groups * k,) + ssms.shape[2:])
+    if rem:
+        tail = _tail_slice(params["mamba"], n_groups, k)
+        x, (tc, ts) = jax.lax.scan(mamba_step, x, tail)
+        convs = jnp.concatenate([convs, tc], axis=0)
+        ssms = jnp.concatenate([ssms, ts], axis=0)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1].astype(jnp.float32),
+                        params["lm_head"].astype(jnp.float32))
+    logits = logits[:, :cfg.vocab_size]
+    cache = {"conv": convs, "ssm": ssms,
+             "attn_k": attn_kv[0], "attn_v": attn_kv[1],
+             "pos": jnp.int32(s)}
+    return logits, cache
+
+
+def hybrid_decode_step(params, cache, tokens, cfg):
+    dims = mamba_dims(cfg)
+    k, n_groups, rem = _split_groups(cfg)
+    x = embed_lookup(params["embed"], tokens)
+    pos = cache["pos"]
+    grouped = _group_reshape(params["mamba"], n_groups, k)
+    sp = params["shared_attn"]
+
+    def mamba_step(c, inp):
+        lp, conv, ssm = inp
+        h = rmsnorm(lp["norm"], c, cfg.norm_eps)
+        out, conv, ssm = mamba_decode(lp["block"], h, conv, ssm, dims,
+                                      norm_eps=cfg.norm_eps)
+        return c + out, (conv, ssm)
+
+    conv_g = cache["conv"][: n_groups * k].reshape(
+        (n_groups, k) + cache["conv"].shape[1:])
+    ssm_g = cache["ssm"][: n_groups * k].reshape(
+        (n_groups, k) + cache["ssm"].shape[1:])
+
+    def group_body(carry, inp):
+        gp, convs, ssms, kc, vc = inp
+        carry, states = jax.lax.scan(mamba_step, carry, (gp, convs, ssms))
+        h = rmsnorm(sp["ln1"], carry, cfg.norm_eps)
+        a, kc, vc = attn_decode(sp["attn"], h, kc, vc, pos, cfg, ring=True)
+        carry = carry + a
+        h = rmsnorm(sp["ln2"], carry, cfg.norm_eps)
+        carry = carry + swiglu_apply(sp["mlp"], h)
+        return carry, (states, kc, vc)
+
+    x, (mstates, k_new, v_new) = jax.lax.scan(
+        group_body, x, (grouped, conv_g, ssm_g, cache["attn_k"],
+                        cache["attn_v"]))
+    convs, ssms = mstates
+    convs = convs.reshape((n_groups * k,) + convs.shape[2:])
+    ssms = ssms.reshape((n_groups * k,) + ssms.shape[2:])
+    if rem:
+        tail = _tail_slice(params["mamba"], n_groups, k)
+        x, (tc, ts) = jax.lax.scan(
+            mamba_step, x,
+            (tail, cache["conv"][n_groups * k:], cache["ssm"][n_groups * k:]))
+        convs = jnp.concatenate([convs, tc], axis=0)
+        ssms = jnp.concatenate([ssms, ts], axis=0)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1].astype(jnp.float32),
+                        params["lm_head"].astype(jnp.float32))
+    logits = logits[:, :cfg.vocab_size]
+    cache = {"conv": convs, "ssm": ssms, "attn_k": k_new, "attn_v": v_new,
+             "pos": pos + 1}
+    return logits, cache

@@ -1,0 +1,258 @@
+"""Model substrate: param templates, norms, RoPE, MLPs, embeddings, loss.
+
+Parameters are plain pytrees (nested dicts of jnp arrays).  Every tree is
+built from a matching tree of ``PT`` templates which carries shape, init and
+*logical sharding axes*; ``init_params`` and ``param_pspecs`` both walk the
+same template tree, so shardings can never drift from shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Param templates.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PT:
+    """Param template: shape + init scheme + logical axes (for sharding)."""
+    shape: tuple[int, ...]
+    init: str = "normal"        # normal | zeros | ones | scaled | ssm_dt | ssm_a
+    axes: tuple[str | None, ...] = ()
+    dtype: Any = jnp.bfloat16
+    scale: float | None = None  # stddev override
+
+    def __post_init__(self):
+        if self.axes and len(self.axes) != len(self.shape):
+            raise ValueError(f"axes {self.axes} vs shape {self.shape}")
+
+
+def _init_leaf(t: PT, key) -> jnp.ndarray:
+    if t.init == "zeros":
+        return jnp.zeros(t.shape, t.dtype)
+    if t.init == "ones":
+        return jnp.ones(t.shape, t.dtype)
+    if t.init == "ssm_dt":     # dt bias: softplus^-1 of U(0.001, 0.1)
+        u = jax.random.uniform(key, t.shape, jnp.float32, 0.001, 0.1)
+        return jnp.log(jnp.expm1(u)).astype(t.dtype)
+    if t.init == "ssm_a":      # a_log: log of U(1, 16)
+        return jnp.log(jax.random.uniform(key, t.shape, jnp.float32, 1.0, 16.0)
+                       ).astype(t.dtype)
+    if t.init == "scaled":     # fan-in scaled normal
+        fan_in = t.shape[-2] if len(t.shape) >= 2 else t.shape[-1]
+        std = t.scale if t.scale is not None else 1.0 / math.sqrt(fan_in)
+        return (jax.random.normal(key, t.shape, jnp.float32) * std).astype(t.dtype)
+    std = t.scale if t.scale is not None else 0.02
+    return (jax.random.normal(key, t.shape, jnp.float32) * std).astype(t.dtype)
+
+
+def init_params(templates, key):
+    """Walk a template pytree, deriving one PRNG key per leaf from its path."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(
+        templates, is_leaf=lambda x: isinstance(x, PT))
+    out = []
+    for path, t in leaves:
+        pkey = jax.random.fold_in(key, abs(hash(jax.tree_util.keystr(path))) % (2 ** 31))
+        out.append(_init_leaf(t, pkey))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def param_pspecs(templates, rules: dict[str, Any], mesh_shape=None):
+    """Template tree -> PartitionSpec tree via logical-axis rules.
+
+    A mesh axis may appear only once per spec: when two logical axes of one
+    param map to the same mesh axis (e.g. MoE ("expert","embed","ffn") with
+    expert and ffn both on the TP axis), the later dim drops it.  With
+    ``mesh_shape`` (dict axis->size), axes that do not divide the dim size
+    are dropped too (tiny head counts, whisper-scale dims)."""
+    from jax.sharding import PartitionSpec as P
+
+    def leaf(t: PT):
+        if not t.axes:
+            return P()
+        used: set = set()
+        out = []
+        for dim, a in enumerate(t.axes):
+            mesh_axes = rules.get(a) if a else None
+            if mesh_axes is None:
+                out.append(None)
+                continue
+            flat = (mesh_axes,) if isinstance(mesh_axes, str) \
+                else tuple(mesh_axes)
+            keep = tuple(m for m in flat if m not in used)
+            if keep != flat:
+                keep = ()  # partial tuples change divisibility; drop whole
+            if keep and mesh_shape is not None:
+                size = 1
+                for m in keep:
+                    size *= mesh_shape[m]
+                if t.shape[dim] % size:
+                    keep = ()
+            used.update(keep)
+            out.append(keep if len(keep) > 1 else (keep[0] if keep else None))
+        return P(*out)
+
+    return jax.tree_util.tree_map(leaf, templates,
+                                  is_leaf=lambda x: isinstance(x, PT))
+
+
+def param_count(templates) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        templates, is_leaf=lambda x: isinstance(x, PT))
+    return sum(int(np.prod(t.shape)) for t in leaves)
+
+
+def stack_layers(template_fn, n_layers: int):
+    """Stack a per-layer template tree along a leading scan axis."""
+    t = template_fn()
+    return jax.tree_util.tree_map(
+        lambda p: PT((n_layers,) + p.shape, p.init, (None,) + tuple(p.axes or (None,) * len(p.shape)),
+                     p.dtype, p.scale),
+        t, is_leaf=lambda x: isinstance(x, PT))
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations.
+# ---------------------------------------------------------------------------
+
+def rmsnorm(w, x, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+            ).astype(x.dtype)
+
+
+def layernorm(w, b, x, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+# ---------------------------------------------------------------------------
+# RoPE.
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (B, H, S, D) ; positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(d, theta), jnp.float32)
+    pos = positions.astype(jnp.float32)
+    ang = pos[..., None] * inv                 # (S, D/2) or (B, S, D/2)
+    if ang.ndim == 2:
+        ang = ang[None, None]                  # (1, 1, S, D/2)
+    else:
+        ang = ang[:, None]                     # (B, 1, S, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int):
+    pos = np.arange(n)[:, None]
+    div = np.exp(-np.log(10000.0) * np.arange(0, d, 2) / d)
+    pe = np.zeros((n, d), np.float32)
+    pe[:, 0::2] = np.sin(pos * div)
+    pe[:, 1::2] = np.cos(pos * div)
+    return jnp.asarray(pe)
+
+
+# ---------------------------------------------------------------------------
+# MLPs.
+# ---------------------------------------------------------------------------
+
+def swiglu_templates(d_model: int, d_ff: int):
+    return {
+        "gate": PT((d_model, d_ff), "scaled", ("embed", "ffn")),
+        "up": PT((d_model, d_ff), "scaled", ("embed", "ffn")),
+        "down": PT((d_ff, d_model), "scaled", ("ffn", "embed")),
+    }
+
+
+def swiglu_apply(p, x):
+    g = silu(jnp.einsum("...d,df->...f", x, p["gate"]))
+    u = jnp.einsum("...d,df->...f", x, p["up"])
+    return jnp.einsum("...f,fd->...d", g * u, p["down"])
+
+
+def gelu_mlp_templates(d_model: int, d_ff: int):
+    return {
+        "up": PT((d_model, d_ff), "scaled", ("embed", "ffn")),
+        "up_b": PT((d_ff,), "zeros", ("ffn",)),
+        "down": PT((d_ff, d_model), "scaled", ("ffn", "embed")),
+        "down_b": PT((d_model,), "zeros", ("embed",)),
+    }
+
+
+def gelu_mlp_apply(p, x):
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, p["up"]) + p["up_b"])
+    return jnp.einsum("...f,fd->...d", h, p["down"]) + p["down_b"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding + chunked cross-entropy (fused with the LM head so the full
+# (B, S, V) logits tensor never materializes).
+# ---------------------------------------------------------------------------
+
+def embed_templates(vocab: int, d_model: int):
+    return {"embedding": PT((vocab, d_model), "normal", ("vocab", "embed"))}
+
+
+def embed_lookup(p, tokens):
+    return jnp.take(p["embedding"], tokens, axis=0)
+
+
+def softmax_xent_chunked(h, w_out, labels, *, chunk=512, label_mask=None,
+                         logit_softcap=None, valid_vocab=None):
+    """h: (B, S, D), w_out: (D, V), labels: (B, S) int32.
+    Returns (mean_loss, total_correct).  Scans over S chunks."""
+    b, s, d = h.shape
+    chunk = min(chunk, s)
+    while s % chunk:   # largest divisor of s <= requested chunk
+        chunk -= 1     # (vlm text lengths like 3520 aren't powers of two)
+    nc = s // chunk
+    hc = jnp.moveaxis(h.reshape(b, nc, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+    mc = (jnp.moveaxis(label_mask.reshape(b, nc, chunk), 1, 0)
+          if label_mask is not None else jnp.ones_like(lc, jnp.float32))
+
+    @jax.checkpoint  # recompute chunk logits in bwd: they are V-wide f32
+    def step(carry, inp):
+        from ..distributed.act_sharding import constrain
+        loss_sum, n_tok, n_correct = carry
+        hb, lb, mb = inp
+        logits = jnp.einsum("bsd,dv->bsv", hb.astype(jnp.float32),
+                            w_out.astype(jnp.float32))
+        logits = constrain(logits, "logits")  # (B, chunk, V): V over TP
+        if valid_vocab is not None and valid_vocab < logits.shape[-1]:
+            # mask Megatron-style vocab padding columns
+            col = jnp.arange(logits.shape[-1])
+            logits = jnp.where(col < valid_vocab, logits, -1e30)
+        if logit_softcap is not None:
+            logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        loss_sum += jnp.sum((lse - gold) * mb)
+        n_tok += jnp.sum(mb)
+        n_correct += jnp.sum((jnp.argmax(logits, -1) == lb) * mb)
+        return (loss_sum, n_tok, n_correct), None
+
+    init = (jnp.float32(0), jnp.float32(0), jnp.float32(0))
+    (loss_sum, n_tok, n_correct), _ = jax.lax.scan(step, init, (hc, lc, mc))
+    return loss_sum / jnp.maximum(n_tok, 1.0), n_correct / jnp.maximum(n_tok, 1.0)

@@ -1,0 +1,136 @@
+"""Mamba2 (SSD) block: fused in-projection, causal depthwise conv, SSD scan
+(``repro.kernels.ssd_scan``), gated RMSNorm, out-projection.
+
+Decode keeps O(1)/token state: (conv_state (B, conv_dim, K-1),
+ssm_state (B, H, P, N)) - this is what makes the hybrid/ssm archs eligible
+for the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .layers import PT, rmsnorm, silu
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaDims:
+    d_model: int
+    d_inner: int
+    head_dim: int
+    n_heads: int
+    n_groups: int
+    d_state: int
+    d_conv: int = 4
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+    @property
+    def proj_dim(self) -> int:
+        # [z (d_inner), x (d_inner), B (G*N), C (G*N), dt (H)]
+        return 2 * self.d_inner + 2 * self.n_groups * self.d_state + self.n_heads
+
+
+def mamba_dims(cfg) -> MambaDims:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    head_dim = cfg.ssm_head_dim
+    return MambaDims(cfg.d_model, d_inner, head_dim, d_inner // head_dim,
+                     cfg.ssm_groups, cfg.ssm_state, cfg.ssm_conv)
+
+
+def mamba_templates(dims: MambaDims):
+    return {
+        "in_proj": PT((dims.d_model, dims.proj_dim), "scaled",
+                      ("embed", "dinner")),
+        "conv_w": PT((dims.d_conv, dims.conv_dim), "scaled", (None, "dinner")),
+        "conv_b": PT((dims.conv_dim,), "zeros", ("dinner",)),
+        "a_log": PT((dims.n_heads,), "ssm_a", (None,), dtype=jnp.float32),
+        "dt_bias": PT((dims.n_heads,), "ssm_dt", (None,), dtype=jnp.float32),
+        "d_skip": PT((dims.n_heads,), "ones", (None,), dtype=jnp.float32),
+        "norm_w": PT((dims.d_inner,), "zeros", ("dinner",)),
+        "out_proj": PT((dims.d_inner, dims.d_model), "scaled",
+                       ("dinner", "embed")),
+    }
+
+
+def _split_proj(zxbcdt, dims: MambaDims):
+    di, gn, h = dims.d_inner, dims.n_groups * dims.d_state, dims.n_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * gn]
+    dt = zxbcdt[..., di + di + 2 * gn:]
+    assert dt.shape[-1] == h
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, *, conv_state=None):
+    """Depthwise causal conv along time.  xbc: (B, S, C); w: (K, C).
+    If conv_state (B, K-1, C) given, prepend it (decode/chunked prefill);
+    returns (out, new_conv_state)."""
+    k = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    out = out + b
+    new_state = xp[:, -(k - 1):, :] if k > 1 else pad[:, :0]
+    return silu(out), new_state
+
+
+def mamba_forward(p, x, dims: MambaDims, *, ssm_state=None, conv_state=None,
+                  return_state=False, norm_eps=1e-6):
+    """Full-sequence forward.  x: (B, S, d_model)."""
+    b, s, _ = x.shape
+    zxbcdt = jnp.einsum("bsd,dp->bsp", x, p["in_proj"])
+    z, xbc, dt = _split_proj(zxbcdt, dims)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                 conv_state=conv_state)
+    xi = xbc[..., :dims.d_inner]
+    bmat = xbc[..., dims.d_inner:dims.d_inner + dims.n_groups * dims.d_state]
+    cmat = xbc[..., dims.d_inner + dims.n_groups * dims.d_state:]
+    xh = xi.reshape(b, s, dims.n_heads, dims.head_dim)
+    bm = bmat.reshape(b, s, dims.n_groups, dims.d_state)
+    cm = cmat.reshape(b, s, dims.n_groups, dims.d_state)
+    dt_act = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    y, h_final = ops.ssd_scan(xh, dt_act, p["a_log"], bm, cm,
+                              d_skip=p["d_skip"], h0=ssm_state)
+    y = y.reshape(b, s, dims.d_inner)
+    y = rmsnorm(p["norm_w"], y * silu(z), norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    if return_state:
+        return out, (new_conv, h_final)
+    return out
+
+
+def mamba_decode(p, x, conv_state, ssm_state, dims: MambaDims,
+                 norm_eps=1e-6):
+    """One-token step.  x: (B, 1, d_model); conv_state: (B, K-1, conv_dim);
+    ssm_state: (B, H, P, N).  Returns (out, conv_state, ssm_state)."""
+    b = x.shape[0]
+    zxbcdt = jnp.einsum("bsd,dp->bsp", x, p["in_proj"])
+    z, xbc, dt = _split_proj(zxbcdt, dims)
+    # conv: shift state, apply taps
+    xp = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", xp, p["conv_w"]) + p["conv_b"]
+    conv_out = silu(conv_out)[:, None, :]
+    new_conv = xp[:, 1:, :]
+    xi = conv_out[..., :dims.d_inner]
+    bmat = conv_out[..., dims.d_inner:dims.d_inner + dims.n_groups * dims.d_state]
+    cmat = conv_out[..., dims.d_inner + dims.n_groups * dims.d_state:]
+    xh = xi.reshape(b, dims.n_heads, dims.head_dim)
+    bm = bmat.reshape(b, dims.n_groups, dims.d_state)
+    cm = cmat.reshape(b, dims.n_groups, dims.d_state)
+    dt_act = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    y, ssm_state = ops.ssd_step(ssm_state, xh, dt_act, p["a_log"], bm, cm,
+                                d_skip=p["d_skip"])
+    y = y.reshape(b, 1, dims.d_inner)
+    y = rmsnorm(p["norm_w"], y * silu(z), norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return out, new_conv, ssm_state

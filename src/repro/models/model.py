@@ -1,0 +1,124 @@
+"""Family dispatch: one uniform Model API over all 10 assigned archs.
+
+  model.templates            - param template tree (shapes + logical axes)
+  model.init(key)            - parameter pytree
+  model.loss(params, batch)  - (loss, metrics); batch from input_specs
+  model.prefill(params, batch, cache_len)   - (logits, cache)
+  model.decode(params, cache, tokens)       - (logits, cache)
+  model.cache_shapes(batch, cache_len)      - ShapeDtypeStructs for dry-run
+  input_specs(cfg, shape)    - ShapeDtypeStruct batch for an assigned cell
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import encdec, hybrid, transformer, xlstm_lm
+from .layers import init_params, param_count, param_pspecs
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    templates: Any
+    loss: Callable
+    prefill: Callable
+    decode: Callable
+    cache_shapes: Callable
+
+    def init(self, key):
+        return init_params(self.templates, key)
+
+    def pspecs(self, rules, mesh_shape=None):
+        return param_pspecs(self.templates, rules, mesh_shape)
+
+    @property
+    def n_params(self) -> int:
+        return param_count(self.templates)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return Model(
+            cfg, transformer.decoder_templates(cfg),
+            functools.partial(transformer.decoder_loss, cfg=cfg),
+            functools.partial(transformer.decoder_prefill, cfg=cfg),
+            functools.partial(transformer.decoder_decode_step, cfg=cfg),
+            functools.partial(transformer.make_decode_cache_specs, cfg),
+        )
+    if fam == "hybrid":
+        return Model(
+            cfg, hybrid.hybrid_templates(cfg),
+            functools.partial(hybrid.hybrid_loss, cfg=cfg),
+            functools.partial(hybrid.hybrid_prefill, cfg=cfg),
+            functools.partial(hybrid.hybrid_decode_step, cfg=cfg),
+            functools.partial(hybrid.hybrid_cache_shapes, cfg),
+        )
+    if fam == "ssm":
+        return Model(
+            cfg, xlstm_lm.xlstm_templates(cfg),
+            functools.partial(xlstm_lm.xlstm_loss, cfg=cfg),
+            functools.partial(xlstm_lm.xlstm_prefill, cfg=cfg),
+            functools.partial(xlstm_lm.xlstm_decode_step, cfg=cfg),
+            functools.partial(xlstm_lm.xlstm_cache_shapes, cfg),
+        )
+    if fam == "encdec":
+        return Model(
+            cfg, encdec.encdec_templates(cfg),
+            functools.partial(encdec.encdec_loss, cfg=cfg),
+            functools.partial(encdec.encdec_prefill, cfg=cfg),
+            functools.partial(encdec.encdec_decode_step, cfg=cfg),
+            functools.partial(encdec.encdec_cache_shapes, cfg),
+        )
+    raise ValueError(f"unknown family {fam}")
+
+
+# ---------------------------------------------------------------------------
+# Input specs for the assigned (arch x shape) cells: ShapeDtypeStruct
+# stand-ins, weak-type-correct, no allocation.
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *,
+                dtype=jnp.bfloat16) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def tok(bb, ss):
+        return jax.ShapeDtypeStruct((bb, ss), i32)
+
+    if shape.kind == "train":
+        if cfg.family == "vlm":
+            s_text = s - cfg.n_patches
+            return {"tokens": tok(b, s_text), "labels": tok(b, s_text),
+                    "patches": jax.ShapeDtypeStruct(
+                        (b, cfg.n_patches, cfg.patch_embed_dim), dtype)}
+        if cfg.family == "encdec":
+            return {"frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), dtype),
+                    "tokens": tok(b, s), "labels": tok(b, s)}
+        return {"tokens": tok(b, s), "labels": tok(b, s)}
+
+    if shape.kind == "prefill":
+        if cfg.family == "vlm":
+            s_text = s - cfg.n_patches
+            return {"tokens": tok(b, s_text),
+                    "patches": jax.ShapeDtypeStruct(
+                        (b, cfg.n_patches, cfg.patch_embed_dim), dtype)}
+        if cfg.family == "encdec":
+            return {"frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), dtype),
+                    "tokens": tok(b, s)}
+        return {"tokens": tok(b, s)}
+
+    # decode: one new token against a seq_len cache
+    return {"tokens": tok(b, 1)}
+
+
+def decode_cache_specs(cfg: ModelConfig, shape: ShapeConfig,
+                       dtype=jnp.bfloat16):
+    model = build_model(cfg)
+    return model.cache_shapes(shape.global_batch, shape.seq_len, dtype)

@@ -1,0 +1,252 @@
+"""Decoder-only transformer families: dense, moe, vlm.
+
+One scanned layer body per family (homogeneous stacks compile to small HLO
+even at 94 layers); gemma3's 5:1 local:global pattern rides through the scan
+as a per-layer traced window scalar.  Train / prefill / decode share the
+same parameter tree.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.act_sharding import constrain
+from .attention import (attn_decode, attn_forward, attn_prefill,
+                        attn_templates)
+from .layers import (PT, embed_lookup, embed_templates, init_params,
+                     param_pspecs, rmsnorm, softmax_xent_chunked,
+                     stack_layers, swiglu_apply, swiglu_templates)
+from .moe import moe_apply, moe_templates
+
+_BIG_WINDOW = 1 << 30  # "global" layers: window larger than any context
+
+
+# ---------------------------------------------------------------------------
+# Templates.
+# ---------------------------------------------------------------------------
+
+def layer_templates(cfg):
+    t = {
+        "ln1": PT((cfg.d_model,), "zeros", ("embed",)),
+        "attn": attn_templates(cfg),
+        "ln2": PT((cfg.d_model,), "zeros", ("embed",)),
+    }
+    if cfg.family == "moe":
+        t["moe"] = moe_templates(cfg.d_model, cfg.d_ff, cfg.n_experts)
+    else:
+        t["mlp"] = swiglu_templates(cfg.d_model, cfg.d_ff)
+    return t
+
+
+def decoder_templates(cfg):
+    t = {
+        "embed": embed_templates(cfg.padded_vocab, cfg.d_model),
+        "layers": stack_layers(lambda: layer_templates(cfg), cfg.n_layers),
+        "final_norm": PT((cfg.d_model,), "zeros", ("embed",)),
+    }
+    if not cfg.tie_embeddings:
+        t["lm_head"] = PT((cfg.d_model, cfg.padded_vocab), "scaled",
+                          ("embed", "vocab"))
+    if cfg.family == "vlm":
+        t["patch_proj"] = PT((cfg.patch_embed_dim, cfg.d_model), "scaled",
+                             (None, "embed"))
+    return t
+
+
+def windows_array(cfg) -> jnp.ndarray | None:
+    """Per-layer sliding windows as a traced scan input (None if uniform)."""
+    if not cfg.local_window:
+        return None
+    ws = [cfg.layer_window(i) or _BIG_WINDOW for i in range(cfg.n_layers)]
+    return jnp.asarray(ws, jnp.int32)
+
+
+def lm_head_weight(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"]["embedding"].T
+    return params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# Layer body (shared by train/prefill; decode has its own).
+# ---------------------------------------------------------------------------
+
+def _ffn(lp, h, cfg, exact=False):
+    if cfg.family == "moe":
+        return moe_apply(lp["moe"], h, top_k=cfg.top_k,
+                         capacity_factor=cfg.capacity_factor, exact=exact)
+    return swiglu_apply(lp["mlp"], h)
+
+
+def _layer(lp, x, cfg, window, positions):
+    h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    x = x + attn_forward(lp["attn"], h, cfg, positions=positions,
+                         window=window)
+    x = constrain(x, "hidden")
+    h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    x = x + _ffn(lp, h, cfg)
+    return constrain(x, "hidden")
+
+
+def _scan_layers(params, x, cfg, positions, *, remat=False):
+    windows = windows_array(cfg)
+    body = functools.partial(_layer, cfg=cfg, positions=positions)
+    if remat:
+        body = jax.checkpoint(body, static_argnums=())
+
+    if windows is None:
+        def scan_fn(carry, lp):
+            return body(lp, carry, window=None), None
+        x, _ = jax.lax.scan(scan_fn, x, params["layers"])
+    else:
+        def scan_fn(carry, inp):
+            lp, w = inp
+            return body(lp, carry, window=w), None
+        x, _ = jax.lax.scan(scan_fn, x, (params["layers"], windows))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Embedding of the (token | patch+token) input.
+# ---------------------------------------------------------------------------
+
+def embed_input(params, batch, cfg):
+    """Returns (x (B, S_total, D), n_prefix).  For vlm, the stub patch
+    embeddings occupy the first n_patches positions."""
+    tok = embed_lookup(params["embed"], batch["tokens"])
+    if cfg.family == "vlm":
+        patches = jnp.einsum("bpe,ed->bpd", batch["patches"],
+                             params["patch_proj"]).astype(tok.dtype)
+        return jnp.concatenate([patches, tok], axis=1), cfg.n_patches
+    return tok, 0
+
+
+# ---------------------------------------------------------------------------
+# Train forward + loss.
+# ---------------------------------------------------------------------------
+
+def decoder_loss(params, batch, cfg, *, remat=True, xent_chunk=512):
+    x, n_prefix = embed_input(params, batch, cfg)
+    x = constrain(x, "hidden")
+    s_total = x.shape[1]
+    positions = jnp.arange(s_total)
+    x = _scan_layers(params, x, cfg, positions, remat=remat)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    loss, acc = softmax_xent_chunked(
+        x, lm_head_weight(params, cfg), batch["labels"], chunk=xent_chunk,
+        label_mask=batch.get("label_mask"), logit_softcap=cfg.logit_softcap,
+        valid_vocab=cfg.vocab_size)
+    return loss, {"loss": loss, "accuracy": acc}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode.
+# ---------------------------------------------------------------------------
+
+def decoder_prefill(params, batch, cfg, *, cache_len=None):
+    """Returns (last-token logits (B, V), cache dict)."""
+    x, n_prefix = embed_input(params, batch, cfg)
+    s_total = x.shape[1]
+    cache_len = cache_len or s_total
+    assert cache_len >= s_total, (
+        f"cache_len {cache_len} < prompt length {s_total} "
+        "(vlm prompts include n_patches prefix positions)")
+    windows = windows_array(cfg)
+
+    b = x.shape[0]
+    hd = cfg.head_dim_resolved
+    cache_shape = (cfg.n_layers, b, cfg.n_kv_heads,
+                   min(cache_len, cache_len), hd)
+    k0 = jnp.zeros(cache_shape, x.dtype)
+    v0 = jnp.zeros(cache_shape, x.dtype)
+
+    def scan_fn(carry, inp):
+        x, kc_all, vc_all = carry
+        if windows is None:
+            (lp, idx), w = inp, None
+        else:
+            lp, idx, w = inp
+        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        a, (kc, vc) = attn_prefill(lp["attn"], h, cfg, cache_len=cache_len,
+                                   window=w)
+        x = x + a
+        h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = constrain(x + _ffn(lp, h, cfg), "hidden")
+        # write the layer cache in place (carried, not stacked as scan ys:
+        # ys accumulation double-buffers the full multi-GB cache)
+        kc_all = jax.lax.dynamic_update_index_in_dim(kc_all, kc, idx, 0)
+        vc_all = jax.lax.dynamic_update_index_in_dim(vc_all, vc, idx, 0)
+        return (x, kc_all, vc_all), None
+
+    idxs = jnp.arange(cfg.n_layers)
+    xs = ((params["layers"], idxs) if windows is None
+          else (params["layers"], idxs, windows))
+    (x, k_cache, v_cache), _ = jax.lax.scan(scan_fn, (x, k0, v0), xs)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1].astype(jnp.float32),
+                        lm_head_weight(params, cfg).astype(jnp.float32))
+    logits = logits[:, :cfg.vocab_size]
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    cache = {"k": k_cache, "v": v_cache,
+             "pos": jnp.int32(s_total)}
+    return logits, cache
+
+
+def decoder_decode_step(params, cache, tokens, cfg):
+    """tokens: (B, 1).  Returns (logits (B, V), new cache).
+
+    The stacked KV caches ride in the scan *carry* and each layer updates
+    its slice in place (dynamic_update_index): with the cache donated, XLA
+    aliases the whole while-loop state.  Carrying them as scan xs/ys
+    double-buffers the full cache (~2.6x cache bytes of temp measured on
+    phi-3-vision decode_32k; see EXPERIMENTS.md §Perf)."""
+    x = embed_lookup(params["embed"], tokens)
+    pos = cache["pos"]
+    windows = windows_array(cfg)
+
+    def scan_fn(carry, inp):
+        x, kc_all, vc_all = carry
+        if windows is None:
+            (lp, idx), w = inp, None
+        else:
+            lp, idx, w = inp
+        kc = jax.lax.dynamic_index_in_dim(kc_all, idx, 0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(vc_all, idx, 0, keepdims=False)
+        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        a, kc, vc = attn_decode(lp["attn"], h, kc, vc, pos, cfg, window=w)
+        x = x + a
+        h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + _ffn(lp, h, cfg, exact=True)
+        kc_all = jax.lax.dynamic_update_index_in_dim(kc_all, kc, idx, 0)
+        vc_all = jax.lax.dynamic_update_index_in_dim(vc_all, vc, idx, 0)
+        return (x, kc_all, vc_all), None
+
+    idxs = jnp.arange(cfg.n_layers)
+    xs = ((params["layers"], idxs) if windows is None
+          else (params["layers"], idxs, windows))
+    (x, k_new, v_new), _ = jax.lax.scan(
+        scan_fn, (x, cache["k"], cache["v"]), xs)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1].astype(jnp.float32),
+                        lm_head_weight(params, cfg).astype(jnp.float32))
+    logits = logits[:, :cfg.vocab_size]
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    cache = {"k": k_new, "v": v_new, "pos": pos + 1}
+    return logits, cache
+
+
+def make_decode_cache_specs(cfg, batch_size: int, cache_len: int,
+                            dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for the decode cache (dry-run inputs)."""
+    hd = cfg.head_dim_resolved
+    shape = (cfg.n_layers, batch_size, cfg.n_kv_heads, cache_len, hd)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}

@@ -1,0 +1,3 @@
+from .adamw import AdamW, clip_by_global_norm
+from .adamw8bit import AdamW8bit
+from .schedule import warmup_cosine, wsd

@@ -1,0 +1,82 @@
+"""AdamW from scratch, mixed precision: bf16 compute params derived from
+fp32 masters; m/v fp32.  Optimizer state inherits the parameter shardings
+(ZeRO-3 when the policy FSDP-shards params)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    # skip weight decay on 1-D params (norms, biases)
+    decay_min_ndim: int = 2
+
+    def init(self, params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "master": jax.tree_util.tree_map(
+                lambda p: p.astype(jnp.float32), params),
+            "m": jax.tree_util.tree_map(f32, params),
+            "v": jax.tree_util.tree_map(f32, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.float32(self.lr)
+
+    def update(self, grads, state):
+        """Returns (new_params_bf16-like-masters-cast, new_state)."""
+        step = state["step"] + 1
+        lr = self._lr(step)
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, master):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / c1
+            vh = v / c2
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            if master.ndim >= self.decay_min_ndim and self.weight_decay:
+                delta = delta + self.weight_decay * master
+            master = master - lr * delta
+            return m, v, master
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_w = treedef.flatten_up_to(state["master"])
+        new_m, new_v, new_w = [], [], []
+        for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w):
+            m2, v2, w2 = upd(g, m, v, w)
+            new_m.append(m2)
+            new_v.append(v2)
+            new_w.append(w2)
+        unf = treedef.unflatten
+        state = {"master": unf(new_w), "m": unf(new_m), "v": unf(new_v),
+                 "step": step}
+        return state
+
+    def params_from_state(self, state, like):
+        """Cast fp32 masters to the compute dtypes of ``like``."""
+        return jax.tree_util.tree_map(
+            lambda w, p: w.astype(p.dtype), state["master"], like)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype),
+                                  grads), gn

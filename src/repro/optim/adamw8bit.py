@@ -1,0 +1,133 @@
+"""8-bit AdamW: m/v stored as int8 quantized per 256-value block along each
+parameter's LAST axis (bitsandbytes-style, layout-preserving).
+
+Layout preservation is the point: q keeps the parameter's shape (last dim
+padded to a block multiple) and the scales keep the leading dims, so both
+inherit the parameter's sharding - a flattened block layout forces GSPMD to
+replicate the fp32 de/re-quantization intermediates (measured ~1 TB/device
+on the 235B MoE train cell).  Masters stay fp32.  m uses symmetric int8;
+v >= 0 uses unsigned uint8.  State is re-quantized from the updated fp32
+value each step, so the ~0.4%-of-block-max rounding error does not
+accumulate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+_I8_MAX = 127.0
+_U8_MAX = 255.0
+
+
+def padded_last(n: int) -> int:
+    return -(-n // BLOCK) * BLOCK
+
+
+def _blocks(x):
+    *lead, n = x.shape
+    npad = padded_last(n) - n
+    if npad:
+        pad = [(0, 0)] * (x.ndim - 1) + [(0, npad)]
+        x = jnp.pad(x, pad)
+    return x.reshape(*lead, x.shape[-1] // BLOCK, BLOCK)
+
+
+def _q_sym(x):
+    b = _blocks(x.astype(jnp.float32))
+    scale = jnp.max(jnp.abs(b), axis=-1) / _I8_MAX
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(b / scale[..., None]), -_I8_MAX, _I8_MAX
+                 ).astype(jnp.int8)
+    return q.reshape(*x.shape[:-1], -1), scale
+
+
+def _q_pos(x):
+    """v is stored as quantized sqrt(v): halves the dynamic range, so small
+    second moments keep ~2x more precision (matters near convergence)."""
+    b = jnp.sqrt(_blocks(x.astype(jnp.float32)))
+    scale = jnp.max(b, axis=-1) / _U8_MAX
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(b / scale[..., None]), 0, _U8_MAX
+                 ).astype(jnp.uint8)
+    return q.reshape(*x.shape[:-1], -1), scale
+
+
+def _dq(q, scale, shape, *, square=False):
+    *lead, npad = q.shape
+    b = q.reshape(*lead, npad // BLOCK, BLOCK).astype(jnp.float32)
+    x = (b * scale[..., None]).reshape(*lead, npad)
+    x = x[..., :shape[-1]].reshape(shape)
+    return x * x if square else x
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW8bit:
+    lr: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    decay_min_ndim: int = 2
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.float32(self.lr)
+
+    def init(self, params):
+        def qm(p):
+            q, s = _q_sym(jnp.zeros(p.shape, jnp.float32))
+            return {"q": q, "s": s}
+
+        def qv(p):
+            q, s = _q_pos(jnp.zeros(p.shape, jnp.float32))
+            return {"q": q, "s": s}
+
+        return {
+            "master": jax.tree_util.tree_map(
+                lambda p: p.astype(jnp.float32), params),
+            "m": jax.tree_util.tree_map(qm, params),
+            "v": jax.tree_util.tree_map(qv, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads, state):
+        step = state["step"] + 1
+        lr = self._lr(step)
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, mq, vq, master):
+            g = g.astype(jnp.float32)
+            m = _dq(mq["q"], mq["s"], g.shape)
+            v = _dq(vq["q"], vq["s"], g.shape, square=True)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            delta = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
+            if master.ndim >= self.decay_min_ndim and self.weight_decay:
+                delta = delta + self.weight_decay * master
+            master = master - lr * delta
+            q_m, s_m = _q_sym(m)
+            q_v, s_v = _q_pos(v)
+            return {"q": q_m, "s": s_m}, {"q": q_v, "s": s_v}, master
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_w = treedef.flatten_up_to(state["master"])
+        new_m, new_v, new_w = [], [], []
+        for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w):
+            m2, v2, w2 = upd(g, m, v, w)
+            new_m.append(m2)
+            new_v.append(v2)
+            new_w.append(w2)
+        unf = treedef.unflatten
+        return {"master": unf(new_w), "m": unf(new_m), "v": unf(new_v),
+                "step": step}
+
+    def params_from_state(self, state, like):
+        return jax.tree_util.tree_map(
+            lambda w, p: w.astype(p.dtype), state["master"], like)

@@ -1,0 +1,34 @@
+"""LR schedules (from scratch; callables of step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (min_ratio + (1 - min_ratio)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return lr
+
+
+def wsd(peak_lr: float, warmup_steps: int, total_steps: int,
+        decay_frac: float = 0.1):
+    """Warmup-stable-decay."""
+    decay_steps = int(total_steps * decay_frac)
+    stable_end = total_steps - decay_steps
+
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        dec = peak_lr * jnp.clip((total_steps - step) / max(decay_steps, 1),
+                                 0.0, 1.0)
+        out = jnp.where(step < warmup_steps, warm,
+                        jnp.where(step < stable_end, peak_lr, dec))
+        return out
+    return lr

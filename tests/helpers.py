@@ -1,0 +1,22 @@
+"""Shared test utilities."""
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def run_with_devices(script: str, n_devices: int = 8, timeout=600):
+    """Run a python snippet in a subprocess with N fake CPU devices.
+    The snippet must print 'PASS' on success."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
+                          capture_output=True, text=True, env=env,
+                          timeout=timeout)
+    assert proc.returncode == 0, f"stderr:\n{proc.stderr[-4000:]}"
+    assert "PASS" in proc.stdout, f"stdout:\n{proc.stdout[-2000:]}" \
+                                  f"\nstderr:\n{proc.stderr[-2000:]}"
+    return proc.stdout

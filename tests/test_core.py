@@ -1,0 +1,151 @@
+"""Core vector-engine layer: lanes, slides, reductions, interconnect model."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (decompose_pow2, hierarchical_reduce, mux_count,
+                        reduction_drain_cycles, rotate, simd_tree_reduce,
+                        sldu_saving, slide, vector_reduction_cycles)
+from repro.core.lanes import (reshuffle, stripe, stripe_bytes, unstripe,
+                              unstripe_bytes)
+
+settings.register_profile("fast", max_examples=25, deadline=None)
+settings.load_profile("fast")
+
+
+# ---------------------------------------------------------------------------
+# C2: pow2 slide decomposition.
+# ---------------------------------------------------------------------------
+
+@given(st.integers(min_value=-200, max_value=200))
+def test_decompose_pow2_sums_to_amount(amount):
+    parts = decompose_pow2(amount)
+    assert sum(parts) == amount
+    for p in parts:
+        v = abs(p)
+        assert v & (v - 1) == 0 and v > 0
+    # <= log2 micro-ops (the paper's area argument)
+    if amount:
+        assert len(parts) <= abs(amount).bit_length()
+
+
+@given(st.integers(min_value=-40, max_value=40),
+       st.integers(min_value=1, max_value=64))
+def test_slide_equals_single_shift(amount, n):
+    x = jnp.arange(1, n + 1, dtype=jnp.float32)
+    got = np.asarray(slide(x, amount))
+    want = np.zeros(n, np.float32)
+    src = np.arange(1, n + 1, dtype=np.float32)
+    if amount >= 0:
+        m = max(0, n - amount)
+        want[amount:amount + m] = src[:m]
+    else:
+        m = max(0, n + amount)
+        want[:m] = src[-amount:-amount + m]
+    np.testing.assert_allclose(got, want)
+
+
+@given(st.integers(min_value=0, max_value=257),
+       st.sampled_from([4, 8, 16, 32]))
+def test_rotate_equals_roll(amount, n):
+    x = jnp.arange(n, dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(rotate(x, amount)),
+                               np.roll(np.arange(n, dtype=np.float32), amount))
+
+
+# ---------------------------------------------------------------------------
+# C1: lane striping / byte layout.
+# ---------------------------------------------------------------------------
+
+@given(st.integers(min_value=1, max_value=100),
+       st.sampled_from([2, 4, 8, 16]))
+def test_stripe_roundtrip(n, lanes):
+    x = jnp.arange(n, dtype=jnp.float32)
+    assert np.array_equal(np.asarray(unstripe(stripe(x, lanes), n)),
+                          np.asarray(x))
+
+
+def test_stripe_element_to_lane_mapping():
+    # element i lives in lane i % L (the Ara2 byte layout, §2)
+    lanes = stripe(jnp.arange(12, dtype=jnp.int32), 4)
+    for i in range(12):
+        assert int(lanes[i % 4, i // 4]) == i
+
+
+@given(st.sampled_from([np.float64, np.float32, np.uint16]),
+       st.sampled_from([2, 4, 8]))
+def test_byte_image_roundtrip(dtype, lanes):
+    n = 16
+    x = np.arange(n).astype(dtype)
+    img = stripe_bytes(x, lanes)
+    back = unstripe_bytes(img, dtype, n)
+    np.testing.assert_array_equal(back, x)
+
+
+def test_reshuffle_preserves_byte_stream():
+    # EW64 -> EW32 re-encode: logical byte stream invariant (§2)
+    x = np.arange(8).astype(np.float64)
+    img = stripe_bytes(x, 4)
+    img32 = reshuffle(img, np.float64, np.float32, 8)
+    back = unstripe_bytes(img32, np.float32, 16)
+    np.testing.assert_array_equal(back.view(np.float64), x)
+
+
+# ---------------------------------------------------------------------------
+# C3: hierarchical reductions.
+# ---------------------------------------------------------------------------
+
+@given(st.integers(min_value=1, max_value=300),
+       st.sampled_from([2, 4, 8, 16]))
+def test_hierarchical_reduce_equals_sum(n, lanes):
+    x = jnp.asarray(np.random.default_rng(n * lanes).standard_normal(n),
+                    jnp.float32)
+    got = float(hierarchical_reduce(x, lanes))
+    np.testing.assert_allclose(got, float(np.sum(np.asarray(x))), rtol=1e-5,
+                               atol=1e-5)
+
+
+@given(st.integers(min_value=1, max_value=65))
+def test_simd_tree_reduce(n):
+    x = jnp.asarray(np.random.default_rng(n).standard_normal((3, n)),
+                    jnp.float32)
+    np.testing.assert_allclose(np.asarray(simd_tree_reduce(x, axis=-1)),
+                               np.asarray(x).sum(-1), rtol=2e-5, atol=2e-5)
+
+
+def test_reduction_drain_formula():
+    # paper closed form: R*(1+log2(R)) - 1 for power-of-two R (§3)
+    import math
+    for r in (2, 4, 8):
+        assert reduction_drain_cycles(r) == r * (1 + math.log2(r)) - 1
+    # non-integer R: R*(1+log2(ceil R)) - (ceil R - R) - 1
+    assert reduction_drain_cycles(3.5) == pytest.approx(
+        3.5 * (1 + 2) - (4 - 3.5) - 1)
+
+
+def test_reduction_latency_grows_with_lanes():
+    # Fig 4-left: dotproduct ideality decreases with lane count at fixed
+    # bytes/lane because the inter-lane tree deepens
+    lat = [vector_reduction_cycles(1024, L, 64, 4) -
+           1024 / L for L in (2, 4, 8, 16)]
+    assert lat == sorted(lat)
+
+
+# ---------------------------------------------------------------------------
+# C2: interconnect cost model (Fig 3).
+# ---------------------------------------------------------------------------
+
+def test_mux_count_scaling():
+    # all-to-all grows ~quadratically; slideP2 ~n log n
+    a2a = [mux_count(l, "all_to_all") for l in (2, 4, 8, 16)]
+    p2 = [mux_count(l, "slideP2_tmux") for l in (2, 4, 8, 16)]
+    assert a2a[-1] / a2a[-2] > 3.5          # ~4x per lane doubling
+    assert p2[-1] / p2[-2] < 2.5            # ~2x per lane doubling
+
+
+def test_sldu_saving_70pct_at_16_lanes():
+    # §3/Fig 2: "saving up to 70% of the estimated area and wires"
+    assert 0.65 <= sldu_saving(16) <= 0.75
+    # saving grows with lanes
+    assert sldu_saving(16) > sldu_saving(8)

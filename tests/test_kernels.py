@@ -1,0 +1,155 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) and XLA impls vs the
+pure-jnp oracles in ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.key(42)
+
+
+def rn(i, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(jax.random.fold_in(KEY, i), shape,
+                              jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul: shape x dtype sweep.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 384, 128),
+                                   (128, 256, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_pallas_sweep(m, k, n, dtype):
+    x, w = rn(1, (m, k), dtype), rn(2, (k, n), dtype)
+    got = ops.matmul(x, w, impl="interpret", out_dtype=jnp.float32)
+    want = ref.matmul_ref(x, w, out_dtype=jnp.float32)
+    tol = 2e-5 * k if dtype == jnp.float32 else 2e-2 * np.sqrt(k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=tol,
+                               rtol=1e-2)
+
+
+@pytest.mark.parametrize("blocks", [(128, 128, 128), (64, 128, 256)])
+def test_matmul_block_shapes(blocks):
+    bm, bn, bk = blocks
+    x, w = rn(3, (256, 256)), rn(4, (256, 256))
+    got = ops.matmul(x, w, impl="interpret", bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.matmul_ref(x, w)),
+                               atol=1e-3, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Pool kernels.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1024, 4096])
+@pytest.mark.parametrize("impl", ["interpret", "xla"])
+def test_dotproduct(n, impl):
+    x, y = rn(5, (n,)), rn(6, (n,))
+    got = float(ops.dotproduct(x, y, impl=impl))
+    np.testing.assert_allclose(got, float(ref.dotproduct_ref(x, y)),
+                               rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("shape", [(8, 128), (32, 512)])
+@pytest.mark.parametrize("impl", ["interpret", "xla"])
+def test_softmax(shape, impl):
+    x = rn(7, shape, scale=3.0)
+    np.testing.assert_allclose(np.asarray(ops.softmax(x, impl=impl)),
+                               np.asarray(ref.softmax_ref(x)), atol=1e-6)
+
+
+@pytest.mark.parametrize("impl", ["interpret", "xla"])
+def test_exp_poly(impl):
+    x = rn(8, (2048,), scale=4.0)
+    np.testing.assert_allclose(np.asarray(ops.exp(x, impl=impl)),
+                               np.asarray(ref.exp_ref(x)), rtol=2e-5,
+                               atol=1e-6)
+
+
+def test_exp_poly_range():
+    # the paper's software-exp must stay accurate across the fp range used
+    x = jnp.linspace(-20.0, 20.0, 4096)
+    got = np.asarray(ops.exp(x, impl="interpret"))
+    np.testing.assert_allclose(got, np.exp(np.asarray(x)), rtol=5e-5)
+
+
+@pytest.mark.parametrize("rate", [0.1, 0.5])
+def test_dropout(rate):
+    x = rn(9, (2048,))
+    bits = jax.random.bits(jax.random.fold_in(KEY, 10), (2048,), jnp.uint32)
+    got = ops.dropout(x, bits, rate=rate, impl="interpret")
+    want = ref.dropout_ref(x, bits, rate)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+    kept = float(jnp.mean(got != 0))
+    assert abs(kept - (1 - rate)) < 0.06
+
+
+@pytest.mark.parametrize("hw", [(38, 64), (22, 32)])
+def test_conv2d(hw):
+    h, w = hw
+    x, k = rn(11, (3, h, w)), rn(12, (3, 7, 7), scale=0.3)
+    got = ops.conv2d(x, k, impl="interpret")
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.conv2d_ref(x, k)),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_jacobi2d():
+    x = rn(13, (34, 66))
+    got = ops.jacobi2d(x, impl="interpret")
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.jacobi2d_ref(x)), atol=1e-6)
+
+
+@pytest.mark.parametrize("levels", [1, 2, 3])
+def test_dwt(levels):
+    x = rn(14, (1024,))
+    got = ops.dwt_haar(x, levels=levels, impl="interpret")
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.dwt_haar_ref(x, levels)),
+                               atol=1e-4)
+    # orthonormal: energy preserved
+    np.testing.assert_allclose(float(jnp.sum(got ** 2)),
+                               float(jnp.sum(x ** 2)), rtol=1e-4)
+
+
+@pytest.mark.parametrize("impl", ["interpret", "xla"])
+def test_pathfinder(impl):
+    w = jnp.abs(rn(15, (20, 257)))
+    got = ops.pathfinder(w, impl=impl)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.pathfinder_ref(w)), atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [64, 512, 2048])
+@pytest.mark.parametrize("impl", ["interpret", "xla"])
+def test_fft(n, impl):
+    xr, xi = rn(16, (n,)), rn(17, (n,))
+    gr, gi = ops.fft(xr, xi, impl=impl)
+    wr, wi = ref.fft_ref(xr, xi)
+    np.testing.assert_allclose(np.asarray(gr), np.asarray(wr),
+                               atol=1e-2 * np.sqrt(n))
+    np.testing.assert_allclose(np.asarray(gi), np.asarray(wi),
+                               atol=1e-2 * np.sqrt(n))
+
+
+def test_fft_parseval():
+    n = 1024
+    xr, xi = rn(18, (n,)), rn(19, (n,))
+    gr, gi = ops.fft(xr, xi, impl="xla")
+    e_t = float(jnp.sum(xr ** 2 + xi ** 2))
+    e_f = float(jnp.sum(gr ** 2 + gi ** 2)) / n
+    np.testing.assert_allclose(e_f, e_t, rtol=1e-4)
+
+
+def test_roi_align():
+    feat = rn(20, (4, 32, 32))
+    y0, x0 = jnp.abs(rn(21, (5,))) * 3, jnp.abs(rn(22, (5,))) * 3
+    rois = jnp.stack([y0, x0, y0 + 11, x0 + 9], -1)
+    got = ops.roi_align(feat, rois)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.roi_align_ref(feat, rois)),
+                               atol=1e-4)

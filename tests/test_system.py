@@ -1,0 +1,148 @@
+"""End-to-end system behaviour: trainer loop with checkpoint/auto-resume,
+straggler watchdog, serving engine, mesh policy, HLO cost parser."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config, smoke_config
+from repro.data import SyntheticTokens
+from repro.distributed.mesh_policy import choose_mesh, enumerate_policies
+from repro.distributed.sharding import ShardingPolicy
+from repro.models import build_model
+from repro.optim import AdamW, warmup_cosine
+from repro.serving import Request, ServeEngine
+from repro.train import TrainConfig, Trainer, Watchdog
+
+
+def _mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def _trainer(tmp_path, steps, arch="qwen3-0.6b", **kw):
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    # fixed schedule horizon: resume determinism requires the schedule to be
+    # a function of the global step only, not of the run length
+    opt = AdamW(lr=warmup_cosine(1e-3, 2, 20))
+    data = SyntheticTokens(cfg, batch_size=4, seq_len=32, seed=0)
+    tc = TrainConfig(steps=steps, ckpt_dir=str(tmp_path), ckpt_every=4,
+                     log_every=100, **kw)
+    return Trainer(model, opt, ShardingPolicy(fsdp=False), _mesh11(), data,
+                   tc, log=lambda *_: None)
+
+
+def test_train_loss_decreases_and_resumes(tmp_path):
+    tr = _trainer(tmp_path, steps=8)
+    state, log = tr.run()
+    assert log[-1]["loss"] < log[0]["loss"]
+    assert log[-1]["step"] == 8
+    # resume continues from the written checkpoint, exact step accounting
+    tr2 = _trainer(tmp_path, steps=11)
+    _, log2 = tr2.run()
+    assert [r["step"] for r in log2] == [9, 10, 11]
+
+
+def test_resume_is_deterministic(tmp_path):
+    """Train 6 straight vs 4 (ckpt) + resume to 6: same final loss (restart
+    determinism: checkpoint + pure-function data stream)."""
+    t_a = _trainer(tmp_path / "a", steps=6)
+    _, log_a = t_a.run()
+    t_b1 = _trainer(tmp_path / "b", steps=4)
+    t_b1.run()
+    t_b2 = _trainer(tmp_path / "b", steps=6)
+    _, log_b = t_b2.run()
+    np.testing.assert_allclose(log_a[-1]["loss"], log_b[-1]["loss"],
+                               rtol=1e-4)
+
+
+def test_watchdog():
+    w = Watchdog(factor=2.0, max_step_time=10.0)
+    for _ in range(6):
+        assert w.observe(1.0) is None
+    assert w.observe(3.5) == "straggler"
+    assert w.stragglers == 1
+    assert w.observe(11.0) == "abort"
+
+
+def test_serving_engine_batches_and_slots():
+    cfg = smoke_config("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = ServeEngine(model, params, max_batch=2, cache_len=64)
+    reqs = [Request([1, 2, 3], 6, rid=0), Request([4, 5], 4, rid=1),
+            Request([9], 5, rid=2)]
+    res = eng.generate(reqs)
+    assert sorted(r.rid for r in res) == [0, 1, 2]
+    lens = {r.rid: len(r.tokens) for r in res}
+    assert lens == {0: 6, 1: 4, 2: 5}
+    for r in res:
+        assert all(0 <= t < cfg.vocab_size for t in r.tokens)
+
+
+def test_serving_greedy_deterministic():
+    cfg = smoke_config("yi-6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(1))
+    eng = ServeEngine(model, params, max_batch=2, cache_len=32)
+    r1 = eng.generate([Request([1, 2, 3], 5, rid=0)])
+    r2 = eng.generate([Request([1, 2, 3], 5, rid=0)])
+    assert r1[0].tokens == r2[0].tokens
+
+
+# ---------------------------------------------------------------------------
+# Mesh policy (C4 transplant).
+# ---------------------------------------------------------------------------
+
+def test_enumerate_policies():
+    ps = enumerate_policies(256)
+    assert (256, 1) in ps and (1, 256) in ps and (16, 16) in ps
+    assert all(dp * tp == 256 for dp, tp in ps)
+
+
+def test_policy_prefers_dp_for_small_models():
+    """The paper's multi-core insight at mesh level: a small dense model's
+    train step wants many replicas (large dp, the '8 small cores')."""
+    small = choose_mesh(get_config("qwen3-0.6b"), SHAPES["train_4k"], 256)
+    assert small[0].dp >= small[0].tp
+    big = choose_mesh(get_config("qwen3-moe-235b-a22b"), SHAPES["train_4k"],
+                      256)
+    assert any(c.fits for c in big)
+
+
+def test_policy_decode_is_memory_bound():
+    c = choose_mesh(get_config("yi-6b"), SHAPES["decode_32k"], 256)[0]
+    assert c.t_memory > c.t_compute
+
+
+# ---------------------------------------------------------------------------
+# HLO cost parser (subprocess: needs multiple devices).
+# ---------------------------------------------------------------------------
+
+def test_hlo_cost_parser_on_known_program():
+    from helpers import run_with_devices
+    run_with_devices("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.roofline.hlo_cost import HloCost
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        def body(x, w):
+            def step(c, wi):
+                return jnp.tanh(c @ wi), None
+            out, _ = jax.lax.scan(step, x, w)
+            return out.sum()
+        K, N = 7, 256
+        f = jax.jit(body, in_shardings=(
+            NamedSharding(mesh, P("data", None)),
+            NamedSharding(mesh, P(None, None, "model"))))
+        co = f.lower(jax.ShapeDtypeStruct((64, N), jnp.float32),
+                     jax.ShapeDtypeStruct((K, N, N), jnp.float32)).compile()
+        c = HloCost(co.as_text()).cost()
+        # per-device dot: (32,256)@(256,64) x 7 trips
+        assert c.flops == 2 * 32 * 256 * 64 * K, c.flops
+        ag = c.coll_breakdown["all-gather"]
+        assert abs(ag - 32 * 256 * 4 / 4 * K) < 1, ag
+        print("PASS")
+    """)

@@ -1,0 +1,202 @@
+"""Generate EXPERIMENTS.md from results/dryrun/*.json + results/perf_log.md.
+
+  PYTHONPATH=src python tools/make_experiments.py
+"""
+import glob
+import json
+import os
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load():
+    recs = {}
+    for f in glob.glob(os.path.join(ROOT, "results", "dryrun", "*.json")):
+        r = json.load(open(f))
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_cell(r, arch=None, shape=None):
+    if r is None:
+        # skip records aren't persisted; re-derive applicability
+        if arch and shape:
+            from repro.configs import get_config, SHAPES, cell_applicable
+            ok, _ = cell_applicable(get_config(arch), SHAPES[shape])
+            if not ok:
+                return "skip"
+        return "—"
+    if r["status"] == "skipped":
+        return "skip"
+    if r["status"] != "ok":
+        return "ERR"
+    return f"{r['hbm_used_gb']:.1f}GB"
+
+
+def dryrun_section(recs):
+    from repro.configs import list_archs
+    out = ["## §Dry-run", "",
+           "Every assigned (arch × shape) cell lowered + compiled with full "
+           "in/out shardings on the production meshes (single-pod "
+           "`(data=16, model=16)` = 256 chips and multi-pod "
+           "`(pod=2, data=16, model=16)` = 512; 512 forced host devices).",
+           "Cell values: `memory_analysis()` bytes/device "
+           "(args+outputs+temps−aliased). v5e budget: 16 GB/chip.",
+           "`long_500k` runs only for the sub-quadratic archs (zamba2, "
+           "xlstm); the 8 full-attention archs skip it by design "
+           "(DESIGN.md §4).", ""]
+    for mesh in ("data16xmodel16", "pod2xdata16xmodel16"):
+        out.append(f"### mesh `{mesh}`")
+        out.append("")
+        out.append("| arch | " + " | ".join(SHAPE_ORDER) + " |")
+        out.append("|---" * (len(SHAPE_ORDER) + 1) + "|")
+        for arch in list_archs():
+            row = [fmt_cell(recs.get((arch, s, mesh)), arch, s)
+                   for s in SHAPE_ORDER]
+            out.append(f"| {arch} | " + " | ".join(row) + " |")
+        out.append("")
+    # collective schedule summary
+    out.append("### Collective schedules (per-device bytes/step, single-pod)")
+    out.append("")
+    out.append("| cell | all-gather | all-reduce | reduce-scatter | "
+               "all-to-all | collective-permute |")
+    out.append("|---|---|---|---|---|---|")
+    for (arch, shape, mesh), r in sorted(recs.items()):
+        if mesh != "data16xmodel16" or r["status"] != "ok":
+            continue
+        bd = r["roofline"]["coll_breakdown"]
+        out.append(
+            f"| {arch}/{shape} | "
+            + " | ".join(f"{bd.get(k, 0)/1e9:.2f}G" for k in
+                         ("all-gather", "all-reduce", "reduce-scatter",
+                          "all-to-all", "collective-permute")) + " |")
+    out.append("")
+    return out
+
+
+def roofline_section(recs):
+    out = ["## §Roofline", "",
+           "Terms per the spec (v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s "
+           "ICI/link): `compute = HLO_FLOPs/dev ÷ peak`, `memory = "
+           "HLO_bytes/dev ÷ HBM_bw`, `collective = coll_bytes/dev ÷ "
+           "link_bw`, all in seconds/step. FLOPs/bytes come from the "
+           "while-trip-scaled HLO parser (`repro.roofline.hlo_cost`): this "
+           "jax build's `cost_analysis()` counts scan bodies once, which "
+           "would undercount every layer stack ~n_layers× (verified). "
+           "`useful` = MODEL_FLOPS ÷ (HLO_FLOPs × chips); `frac` = "
+           "MODEL_FLOPS/(t_bound × cluster peak) — the roofline fraction. "
+           "Single-pod mesh (per spec).", "",
+           "| cell | t_comp | t_mem | t_coll | dominant | useful | frac | "
+           "one-line lever |",
+           "|---|---|---|---|---|---|---|---|"]
+    levers = {
+        "compute": "more MXU-efficient attention/expert tiling (pallas)",
+        "memory": "pallas flash/SSD kernels keep score+state traffic in "
+                  "VMEM; fuse elementwise chains",
+        "collective": "shrink FSDP gathers (bigger per-step tokens) or "
+                      "overlap grad RS/AG with bwd compute",
+    }
+    for shape in SHAPE_ORDER:
+        for (arch, s, mesh), r in sorted(recs.items()):
+            if s != shape or mesh != "data16xmodel16" or r["status"] != "ok":
+                continue
+            rf = r["roofline"]
+            out.append(
+                f"| {arch}/{s} | {rf['t_compute']:.3f} | "
+                f"{rf['t_memory']:.3f} | {rf['t_collective']:.3f} | "
+                f"{rf['dominant']} | {rf['useful_flops_fraction']:.2f} | "
+                f"{rf['roofline_fraction']:.4f} | {levers[rf['dominant']]} |")
+    out.append("")
+    out.append(
+        "Reading the table: decode cells are memory-dominant by physics "
+        "(weight+cache streaming per token); their roofline *fraction of "
+        "compute peak* is inherently small and the right metric there is "
+        "t_mem vs the cache+weights bytes lower bound. The CPU-lowered XLA "
+        "path overstates memory traffic vs the TPU+Pallas target (flash/SSD "
+        "keep score traffic in VMEM; CPU fusion is weaker) — the Pallas "
+        "kernels in `src/repro/kernels/` are the deployment path for the "
+        "memory-dominant terms.")
+    out.append("")
+    return out
+
+
+def main():
+    recs = load()
+    parts = [
+        "# EXPERIMENTS", "",
+        "Reproduction of *Ara2: Exploring Single- and Multi-Core Vector "
+        "Processing...* (TC 2024) as a JAX/TPU framework + the assigned "
+        "10-arch × 4-shape production matrix. See DESIGN.md for the "
+        "paper→TPU mapping.", "",
+    ]
+    # paper validation
+    parts += [
+        "## §Paper-validation", "",
+        "The paper-faithful layer (perf model + PPA tables + kernels) "
+        "reproduces the paper's printed claims; each is pinned by a test "
+        "in `tests/test_paper_claims.py` / `tests/test_core.py` "
+        "(all green in test_output.txt):", "",
+        "| paper claim | source | ours |",
+        "|---|---|---|",
+    ]
+    from repro.core import (energy_efficiency_gflops_w, ideality,
+                            issue_rate_limit_opc, matmul_opc, mux_count,
+                            pool_average_ideality, sldu_saving,
+                            dotproduct_speedup_vs_scalar)
+    from repro.core.ppa import sldu_area_saving
+    from repro.core.vector_engine import ClusterConfig, VectorEngineConfig
+    e2, e4, e16 = (VectorEngineConfig(n_lanes=l) for l in (2, 4, 16))
+    rows = [
+        ("16 DP-FLOP/cycle issue bound at 32³ (§7.1)", "16",
+         f"{issue_rate_limit_opc(32):.1f}"),
+        ("matmul ≥95% ideality from 128 B/lane (§5.2)", "≥0.95",
+         f"{ideality('matmul', 128*4, e4):.3f}"),
+        ("matmul ≥75% from 64 B/lane (§5.2)", "≥0.75",
+         f"{ideality('matmul', 64*4, e4):.3f}"),
+        ("pool average ≥50% from 128 B/lane (§5.2)", "≥0.50",
+         f"{pool_average_ideality(128, e4):.3f}"),
+        ("8×2L ≈23.6 DP-FLOP/cycle at 32³ (§7.1)", "23.6",
+         f"{matmul_opc(32, ClusterConfig(8, e2)):.1f}"),
+        ("8×2L > 3× 1×16L at 32³ (abstract)", ">3×",
+         f"{matmul_opc(32, ClusterConfig(8, e2)) / matmul_opc(32, ClusterConfig(1, e16)):.2f}×"),
+        ("SLDU interconnect saving ~70% predicted (Fig 3)", "~0.70",
+         f"{sldu_saving(16):.2f}"),
+        ("SLDU area saving ≥83% measured at 8L (§6)", "0.837",
+         f"{sldu_area_saving(8):.3f}"),
+        ("4×4L most efficient, ≈39 GFLOPS/W at 256³ (§7.2)", "39.2",
+         f"{energy_efficiency_gflops_w(256, ClusterConfig(4, VectorEngineConfig(n_lanes=4))):.1f}"),
+        ("2-lane dot speedup vs CVA6: 1.4× fp / 2.2× int (§8.1)",
+         "1.4 / 2.2",
+         f"{dotproduct_speedup_vs_scalar(128, e2, 'fp'):.2f} / "
+         f"{dotproduct_speedup_vs_scalar(128, e2, 'int'):.2f}"),
+    ]
+    parts += [f"| {a} | {b} | {c} |" for a, b, c in rows]
+    parts += ["",
+              "Known modeling deviation: Fig 15's '16L overtakes 8×2L at "
+              "256³' is not reproduced by our power anchors "
+              "(core/ppa.py docstring).", ""]
+    parts += dryrun_section(recs)
+    parts += roofline_section(recs)
+    # Perf section: the iteration log verbatim + summary
+    parts += ["## §Perf", "",
+              "Method: hypothesis → change → re-lower/re-analyse → "
+              "confirm/refute, iterating on the dominant roofline term of "
+              "the three hillclimb cells (worst-fraction: qwen3-moe "
+              "train_4k; most collective-bound: qwen3-moe/granite train; "
+              "most paper-representative: qwen3-0.6b train_4k, the C1–C4 "
+              "stack). The paper-faithful baseline (It.0) and every "
+              "beyond-paper step are recorded separately below.", ""]
+    log = open(os.path.join(ROOT, "results", "perf_log.md")).read()
+    parts.append(log[log.index("\n") + 1:])
+    with open(os.path.join(ROOT, "EXPERIMENTS.md"), "w") as f:
+        f.write("\n".join(parts))
+    print("wrote EXPERIMENTS.md",
+          f"({sum(1 for r in recs.values() if r['status']=='ok')} ok cells)")
+
+
+if __name__ == "__main__":
+    main()
