@@ -1,0 +1,75 @@
+"""Serving scheduler benchmark: continuous batching vs lock-step groups.
+
+The serving analog of the paper's fixed-FPU-budget sweep (Ara2 §7.1:
+eight 2-lane cores beat one 16-lane core at equal FPU count because eight
+independent issue streams remove the single-dispatcher bottleneck).  Here
+the FPU budget is the ``max_batch`` slot pool and the trace mixes short
+and long requests (``max_new_tokens`` in {8, 64}): lock-step pins every
+slot to its group's slowest member, continuous batching refills freed
+slots immediately.
+
+Emits ``name,us_per_call,derived`` CSV rows like the other benches:
+  serving_lockstep,<wall_us>,tok/s=...;occ=...
+  serving_continuous,<wall_us>,tok/s=...;occ=...
+  serving_speedup,,continuous/lockstep=...
+"""
+import jax
+
+from benchmarks.common import emit
+
+MAX_BATCH = 4
+CACHE_LEN = 128
+PROMPT_LEN = 8
+SHORT_NEW, LONG_NEW = 8, 64
+N_REQS = 16
+
+
+def _trace(vocab):
+    from repro.serving import Request
+    reqs = []
+    for i in range(N_REQS):
+        prompt = [(7 * i + j) % vocab for j in range(PROMPT_LEN)]
+        max_new = SHORT_NEW if i % 2 else LONG_NEW
+        reqs.append(Request(prompt, max_new, temperature=0.0, rid=i))
+    return reqs
+
+
+def run():
+    from repro.configs import smoke_config
+    from repro.models import build_model
+    from repro.serving import Request, ServeEngine
+
+    cfg = smoke_config("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    reqs = _trace(cfg.vocab_size)
+
+    stats = {}
+    for mode in ("lockstep", "continuous"):
+        eng = ServeEngine(model, params, max_batch=MAX_BATCH,
+                          cache_len=CACHE_LEN, mode=mode)
+        # warmup: compile prefill/decode/sample outside the timed run
+        eng.generate([Request(list(range(PROMPT_LEN)), 2, rid=-1)
+                      for _ in range(MAX_BATCH)])
+        eng.generate(reqs)
+        s = eng.last_stats
+        stats[mode] = s
+        emit(f"serving_{mode}", s.wall_s * 1e6,
+             f"tok/s={s.tokens_per_s:.1f};occ={s.occupancy:.2f};"
+             f"steps={s.decode_steps};ttft_ms={s.ttft_ms_mean:.1f}")
+    speedup = (stats["continuous"].tokens_per_s
+               / max(stats["lockstep"].tokens_per_s, 1e-9))
+    emit("serving_speedup", "",
+         f"continuous/lockstep={speedup:.2f}x "
+         f"(trace: {N_REQS} reqs, max_new {SHORT_NEW}/{LONG_NEW}, "
+         f"{MAX_BATCH} slots)")
+    return speedup
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    print("name,us_per_call,derived")
+    run()

@@ -10,7 +10,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 def main() -> None:
     from benchmarks import (bench_ideality, bench_mesh_policy,
                             bench_multicore, bench_ppa, bench_reduction,
-                            bench_roofline, bench_slide, bench_whatif)
+                            bench_roofline, bench_serving, bench_slide,
+                            bench_whatif)
     benches = [
         ("ideality (Figs 4-5, Table 2)", bench_ideality),
         ("slide unit (Fig 3, Table 5)", bench_slide),
@@ -20,6 +21,7 @@ def main() -> None:
         ("PPA (Tables 3-4)", bench_ppa),
         ("mesh policy (par.7 on TPU)", bench_mesh_policy),
         ("roofline (dry-run)", bench_roofline),
+        ("serving scheduler (par.7 analog)", bench_serving),
     ]
     print("name,us_per_call,derived")
     failed = 0

@@ -14,6 +14,7 @@ import jax  # noqa: E402
 from repro.configs import smoke_config  # noqa: E402
 from repro.data import SyntheticTokens  # noqa: E402
 from repro.distributed.sharding import ShardingPolicy  # noqa: E402
+from repro.launch.mesh import make_mesh  # noqa: E402
 from repro.models import build_model  # noqa: E402
 from repro.optim import AdamW, warmup_cosine  # noqa: E402
 from repro.serving import Request, ServeEngine  # noqa: E402
@@ -25,8 +26,7 @@ def main():
     model = build_model(cfg)
     print(f"model: {cfg.name} ({model.n_params/1e3:.0f}k params)")
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     data = SyntheticTokens(cfg, batch_size=8, seq_len=64, seed=0)
     with tempfile.TemporaryDirectory() as ckpt:
         tc = TrainConfig(steps=30, ckpt_dir=ckpt, ckpt_every=10, log_every=5)

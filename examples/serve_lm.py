@@ -1,5 +1,6 @@
-"""Batched serving example: prefill + KV-cache decode with the engine's
-continuous-batching-lite scheduler, over any assigned arch.
+"""Batched serving example: prefill-on-admit continuous batching with the
+slot-pool scheduler, over any assigned arch (scan-cache families fall back
+to lock-step group batching automatically).
 
   PYTHONPATH=src python examples/serve_lm.py --arch zamba2-1.2b
 """
@@ -15,11 +16,15 @@ from repro.configs import list_archs, smoke_config  # noqa: E402
 from repro.models import build_model  # noqa: E402
 from repro.serving import Request, ServeEngine  # noqa: E402
 
+N_REQS = 6
+
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b", choices=list_archs())
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--mode", default="auto",
+                    choices=["auto", "continuous", "lockstep"])
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch)
@@ -28,19 +33,22 @@ def main():
     extra = {}
     if cfg.family == "vlm":
         import jax.numpy as jnp
-        extra["patches"] = jnp.zeros((4, cfg.n_patches, cfg.patch_embed_dim),
-                                     jnp.bfloat16)
+        extra["patches"] = jnp.zeros(
+            (N_REQS, cfg.n_patches, cfg.patch_embed_dim), jnp.bfloat16)
     if cfg.family == "encdec":
         import jax.numpy as jnp
-        extra["frames"] = jnp.zeros((4, 16, cfg.d_model), jnp.bfloat16)
+        extra["frames"] = jnp.zeros((N_REQS, 16, cfg.d_model), jnp.bfloat16)
     eng = ServeEngine(model, params, max_batch=4, cache_len=128,
-                      extra_inputs=extra)
+                      extra_inputs=extra, mode=args.mode)
     reqs = [Request([i + 1, i + 2, i + 3], args.max_new,
                     temperature=0.7 if i % 2 else 0.0, rid=i)
-            for i in range(6)]
+            for i in range(N_REQS)]
     for r in eng.generate(reqs):
-        print(f"[serve_lm] rid={r.rid} prefill={r.prefill_ms:.0f}ms "
+        print(f"[serve_lm] rid={r.rid} ttft={r.prefill_ms:.0f}ms "
               f"decode={r.decode_ms_per_tok:.1f}ms/tok -> {r.tokens}")
+    s = eng.last_stats
+    print(f"[serve_lm] mode={s.mode} tokens/s={s.tokens_per_s:.1f} "
+          f"occupancy={s.occupancy:.2f} ttft_mean={s.ttft_ms_mean:.0f}ms")
 
 
 if __name__ == "__main__":

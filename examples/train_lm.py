@@ -21,6 +21,7 @@ import jax  # noqa: E402
 from repro.configs.base import ModelConfig  # noqa: E402
 from repro.data import SyntheticTokens  # noqa: E402
 from repro.distributed.sharding import ShardingPolicy  # noqa: E402
+from repro.launch.mesh import make_mesh  # noqa: E402
 from repro.models import build_model  # noqa: E402
 from repro.optim import AdamW, warmup_cosine  # noqa: E402
 from repro.train import TrainConfig, Trainer  # noqa: E402
@@ -53,8 +54,7 @@ def main():
     model = build_model(cfg)
     print(f"[train_lm] {cfg.name}: {model.n_params/1e6:.1f}M params, "
           f"{args.steps} steps @ batch {args.batch} x seq {args.seq}")
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     data = SyntheticTokens(cfg, args.batch, args.seq, seed=0)
     tc = TrainConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
                      ckpt_every=max(10, args.steps // 5), log_every=5)

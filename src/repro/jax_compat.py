@@ -1,0 +1,21 @@
+"""jax version-drift shims used across the package.
+
+Kept import-cycle-free (imports jax only).  Mesh construction drift is
+handled in ``repro.launch.mesh.make_mesh``; Pallas CompilerParams drift in
+``repro.kernels.pallas_compat``.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a mapped axis inside shard_map.
+
+    Newer jax exposes ``jax.lax.axis_size``; on older releases the
+    time-honored ``psum(1, axis)`` idiom constant-folds to a Python int.
+    """
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return jax.lax.psum(1, axis_name)

@@ -1,0 +1,33 @@
+"""Pallas API-drift compatibility layer.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and
+back-compat shims vary by release), so kernels never touch the class
+directly - they build their compiler params through
+``tpu_compiler_params(...)``, which resolves whichever spelling the
+installed jax provides.  Kept free of intra-package imports so both
+``ops`` and the kernel modules can use it without import cycles.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams", None)
+
+
+def tpu_compiler_params(**kwargs):
+    """Build a Pallas TPU CompilerParams across jax versions.
+
+    Accepts the keyword arguments common to both spellings (notably
+    ``dimension_semantics``); unknown keywords for the resolved class are
+    dropped rather than raised so newer call sites degrade gracefully on
+    older jax.
+    """
+    if _COMPILER_PARAMS_CLS is None:  # pragma: no cover - ancient jax
+        raise AttributeError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams "
+            "nor TPUCompilerParams")
+    fields = getattr(_COMPILER_PARAMS_CLS, "__dataclass_fields__", None)
+    if fields is not None:
+        kwargs = {k: v for k, v in kwargs.items() if k in fields}
+    return _COMPILER_PARAMS_CLS(**kwargs)

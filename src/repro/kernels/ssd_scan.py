@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_compat import tpu_compiler_params
+
 
 def _chunk_body(h_in, xc, dtc, a, bc, cc):
     """One chunk, all heads vectorized.
@@ -178,7 +180,7 @@ def ssd_pallas(x, dt, a_log, b_mat, c_mat, *, chunk=64, interpret=False):
             jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, a, b_mat, c_mat)

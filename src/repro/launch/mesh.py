@@ -1,20 +1,30 @@
 """Production meshes.  Defined as functions so importing this module never
-touches jax device state (required by the dry-run contract)."""
+touches jax device state (required by the dry-run contract).
+
+``make_mesh`` doubles as the jax API-drift shim: newer jax exposes
+``jax.sharding.AxisType`` and ``jax.make_mesh(..., axis_types=...)``, older
+releases have neither.  All mesh construction (src, tests, examples) goes
+through here so the drift is handled exactly once.
+"""
 from __future__ import annotations
 
 import jax
 
 
+def make_mesh(shape, axes):
+    """jax.make_mesh across versions (with/without AxisType / axis_types)."""
+    shape, axes = tuple(shape), tuple(axes)
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
-
-
-def make_mesh(shape, axes):
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def mesh_desc(mesh) -> str:

@@ -1,4 +1,4 @@
-"""Serving launcher: batched generation over the uniform Model API.
+"""Serving launcher: continuous-batching generation over the Model API.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
       --prompts "1 2 3" "4 5" --max-new 16
@@ -24,6 +24,8 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--cache-len", type=int, default=256)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--mode", default="auto",
+                    choices=["auto", "continuous", "lockstep"])
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -31,13 +33,17 @@ def main():
     model = build_model(cfg)
     params = model.init(jax.random.key(args.seed))
     eng = ServeEngine(model, params, max_batch=args.max_batch,
-                      cache_len=args.cache_len)
+                      cache_len=args.cache_len, mode=args.mode)
     reqs = [Request([int(t) % cfg.vocab_size for t in p.split()],
                     args.max_new, args.temperature, rid=i)
             for i, p in enumerate(args.prompts)]
     for r in eng.generate(reqs):
-        print(f"[serve] rid={r.rid} prefill={r.prefill_ms:.1f}ms "
+        print(f"[serve] rid={r.rid} ttft={r.prefill_ms:.1f}ms "
               f"decode={r.decode_ms_per_tok:.1f}ms/tok tokens={r.tokens}")
+    s = eng.last_stats
+    print(f"[serve] mode={s.mode} tokens/s={s.tokens_per_s:.1f} "
+          f"generated={s.generated_tokens} steps={s.decode_steps} "
+          f"occupancy={s.occupancy:.2f} ttft_mean={s.ttft_ms_mean:.1f}ms")
 
 
 if __name__ == "__main__":

@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import zlib
 from typing import Any
 
 import jax
@@ -53,12 +54,17 @@ def _init_leaf(t: PT, key) -> jnp.ndarray:
 
 
 def init_params(templates, key):
-    """Walk a template pytree, deriving one PRNG key per leaf from its path."""
+    """Walk a template pytree, deriving one PRNG key per leaf from its path.
+
+    The path is folded in via crc32, not ``hash()``: Python string hashing
+    is salted per process (PYTHONHASHSEED), which made "same seed, same
+    params" silently untrue across processes."""
     leaves, treedef = jax.tree_util.tree_flatten_with_path(
         templates, is_leaf=lambda x: isinstance(x, PT))
     out = []
     for path, t in leaves:
-        pkey = jax.random.fold_in(key, abs(hash(jax.tree_util.keystr(path))) % (2 ** 31))
+        digest = zlib.crc32(jax.tree_util.keystr(path).encode())
+        pkey = jax.random.fold_in(key, digest % (2 ** 31))
         out.append(_init_leaf(t, pkey))
     return jax.tree_util.tree_unflatten(treedef, out)
 

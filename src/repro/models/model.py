@@ -7,6 +7,17 @@
   model.decode(params, cache, tokens)       - (logits, cache)
   model.cache_shapes(batch, cache_len)      - ShapeDtypeStructs for dry-run
   input_specs(cfg, shape)    - ShapeDtypeStruct batch for an assigned cell
+
+Families with an addressable KV cache (dense/moe/vlm) additionally expose
+the slot-pool serving hooks used by continuous batching:
+
+  model.cache_expand(sub, batch)        - batch-1 prefill cache -> empty
+                                          B-slot pool with per-slot positions
+  model.cache_slot_write(cache, sub, i) - write a batch-1 prefill cache into
+                                          slot i (prefill-on-admit)
+
+Both are None for scan-layout caches (ssm/hybrid/encdec); the serving
+engine falls back to lock-step group batching there.
 """
 from __future__ import annotations
 
@@ -30,6 +41,10 @@ class Model:
     prefill: Callable
     decode: Callable
     cache_shapes: Callable
+    # slot-pool serving hooks (None when the cache layout is not slot
+    # addressable; the serving engine then uses lock-step group batching)
+    cache_expand: Callable | None = None
+    cache_slot_write: Callable | None = None
 
     def init(self, key):
         return init_params(self.templates, key)
@@ -51,6 +66,8 @@ def build_model(cfg: ModelConfig) -> Model:
             functools.partial(transformer.decoder_prefill, cfg=cfg),
             functools.partial(transformer.decoder_decode_step, cfg=cfg),
             functools.partial(transformer.make_decode_cache_specs, cfg),
+            cache_expand=transformer.decoder_cache_expand,
+            cache_slot_write=transformer.decoder_cache_slot_write,
         )
     if fam == "hybrid":
         return Model(

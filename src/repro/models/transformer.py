@@ -201,6 +201,11 @@ def decoder_prefill(params, batch, cfg, *, cache_len=None):
 def decoder_decode_step(params, cache, tokens, cfg):
     """tokens: (B, 1).  Returns (logits (B, V), new cache).
 
+    ``cache["pos"]`` is either a scalar (uniform-position layout: every row
+    decodes at the same position) or a (B,) vector (the serving engine's
+    slot-pool layout: each slot tracks its own position; the new KV lands
+    at each row's own slot via the one-hot path in ``attn_decode``).
+
     The stacked KV caches ride in the scan *carry* and each layer updates
     its slice in place (dynamic_update_index): with the cache donated, XLA
     aliases the whole while-loop state.  Carrying them as scan xs/ys
@@ -250,3 +255,30 @@ def make_decode_cache_specs(cfg, batch_size: int, cache_len: int,
     return {"k": jax.ShapeDtypeStruct(shape, dtype),
             "v": jax.ShapeDtypeStruct(shape, dtype),
             "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Slot-pool cache support (continuous-batching serving).
+# ---------------------------------------------------------------------------
+
+def decoder_cache_expand(sub, batch: int):
+    """Grow a batch-1 prefill cache into an empty ``batch``-slot decode
+    cache.  Positions become a per-slot (B,) vector; all slots start empty
+    (pos 0), to be filled by :func:`decoder_cache_slot_write` on admission."""
+    def grow(x):
+        return jnp.zeros(x.shape[:1] + (batch,) + x.shape[2:], x.dtype)
+    return {"k": grow(sub["k"]), "v": grow(sub["v"]),
+            "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def decoder_cache_slot_write(cache, sub, slot):
+    """Write a batch-1 prefill cache into batch index ``slot`` of a
+    slot-pool decode cache (prefill-on-admit).  ``slot`` may be traced, so
+    a jitted caller compiles once for all slots."""
+    k = jax.lax.dynamic_update_index_in_dim(cache["k"], sub["k"][:, 0],
+                                            slot, 1)
+    v = jax.lax.dynamic_update_index_in_dim(cache["v"], sub["v"][:, 0],
+                                            slot, 1)
+    pos = jax.lax.dynamic_update_index_in_dim(
+        cache["pos"], jnp.asarray(sub["pos"], jnp.int32), slot, 0)
+    return {"k": k, "v": v, "pos": pos}

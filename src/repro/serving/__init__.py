@@ -1,1 +1,1 @@
-from .engine import Request, Result, ServeEngine
+from .engine import EngineStats, Request, Result, ServeEngine

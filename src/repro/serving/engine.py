@@ -1,12 +1,36 @@
-"""Serving engine: batched prefill + decode with continuous-batching-lite.
+"""Slot-based continuous-batching serving engine.
 
-Fixed B decode slots; finished sequences free their slot for the next
-queued request (re-prefilled into the shared cache at the slot's batch
-index is out of scope for the scan-cache layout, so slot refill re-runs a
-batched prefill over the waiting group - documented trade-off).
+The paper's multi-core result (Ara2 §7.1: eight 2-lane cores beat one
+16-lane core by >3x at equal FPU count, because eight independent issue
+streams remove the single-dispatcher bottleneck) maps onto serving as:
+many independently scheduled decode *slots* beat one lock-step batch whose
+cadence is set by its slowest member.
+
+Two scheduling modes:
+
+* ``continuous`` (default for slot-addressable caches: dense/moe/vlm) - a
+  fixed pool of ``max_batch`` decode slots with per-slot KV state and
+  per-slot positions.  An admission scheduler prefills a queued request
+  into a freed slot *immediately* (prefill-on-admit via
+  ``model.cache_slot_write``); the other slots keep decoding on the next
+  step.  A short request never holds its neighbors hostage.
+
+* ``lockstep`` - the legacy group scheduler, kept behind the ``mode`` flag
+  for scan-layout caches (ssm/hybrid/encdec, where per-slot cache writes
+  are not addressable): requests run in groups of ``max_batch``; a
+  finished sequence's slot idles until the whole group drains, and slot
+  refill re-runs a batched prefill over the next waiting group.
+
+Prompts are prefilled at their exact length (one compile per distinct
+prompt length; serving traces with many unique lengths should bucket
+prompts client-side).  Per-request sampling is vectorized: temperature<=0
+rows take argmax (deterministic regardless of the shared PRNG key),
+temperature>0 rows sample at their own temperature - never at the batch
+max.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Any
@@ -30,29 +54,231 @@ class Request:
 class Result:
     rid: int
     tokens: list[int]
-    prefill_ms: float = 0.0
+    prefill_ms: float = 0.0        # time-to-first-token for this request
     decode_ms_per_tok: float = 0.0
 
 
-def _sample(logits, temperature, key):
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1)
-    return jax.random.categorical(key, logits / temperature, axis=-1)
+@dataclasses.dataclass
+class EngineStats:
+    """Aggregate metrics for the last ``generate`` call."""
+    mode: str
+    wall_s: float
+    generated_tokens: int
+    tokens_per_s: float
+    decode_steps: int
+    occupancy: float               # busy slot-steps / (max_batch * steps)
+    ttft_ms_mean: float            # mean time-to-first-token
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    order: int                     # submission index (stable result order)
+    tokens: list[int]
+    ttft_ms: float
+    decode_s: float = 0.0
+    steps: int = 0
+
+
+def _sample_rows(logits, temps, key):
+    """Per-row temperature sampling over (B, V) logits.
+
+    temps: (B,).  Rows with temperature <= 0 take argmax (greedy,
+    independent of the key); rows with temperature > 0 sample a categorical
+    at their own temperature."""
+    greedy = jnp.argmax(logits, axis=-1)
+    safe = jnp.maximum(temps, 1e-6)[:, None]
+    sampled = jax.random.categorical(key, logits / safe, axis=-1)
+    return jnp.where(temps > 0.0, sampled, greedy)
 
 
 class ServeEngine:
-    """Greedy/temperature batched generation over the uniform Model API."""
+    """Batched generation over the uniform Model API.
+
+    mode: "auto" (continuous when the model exposes slot-cache hooks,
+    else lockstep), "continuous", or "lockstep".  Requesting "continuous"
+    on a scan-layout cache silently falls back to lockstep - check
+    ``engine.mode`` for the resolved scheduler.
+
+    ``extra_inputs`` (vlm patches / encdec frames): leaves carry one row
+    per request, indexed by submission order; a leaf with leading dim 1
+    broadcasts to every request.  Too few rows is an error, not a clamp.
+    """
 
     def __init__(self, model: Model, params, *, max_batch: int = 8,
-                 cache_len: int = 1024, extra_inputs: dict | None = None):
+                 cache_len: int = 1024, extra_inputs: dict | None = None,
+                 mode: str = "auto"):
+        assert mode in ("auto", "continuous", "lockstep"), mode
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.cache_len = cache_len
         self.extra = extra_inputs or {}
-        self._decode = jax.jit(model.decode)
+        slot_capable = model.cache_slot_write is not None
+        if mode == "auto":
+            mode = "continuous" if slot_capable else "lockstep"
+        if mode == "continuous" and not slot_capable:
+            mode = "lockstep"      # re-prefill fallback (scan-cache layout)
+        self.mode = mode
+        self.last_stats: EngineStats | None = None
+        # the cache is dead after every call that consumes it - donate so
+        # XLA updates the multi-GB KV buffers in place instead of copying
+        self._decode = jax.jit(model.decode, donate_argnums=(1,))
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, cache_len=cache_len))
+        self._sample = jax.jit(_sample_rows)
+        self._slot_capable = slot_capable
+        if slot_capable:
+            self._cache_expand = jax.jit(model.cache_expand,
+                                         static_argnums=(1,))
+            self._slot_write = jax.jit(model.cache_slot_write,
+                                       donate_argnums=(0,))
+
+    # ------------------------------------------------------------------
+    # Public API.
+    # ------------------------------------------------------------------
+
+    def generate(self, requests: list[Request], key=None) -> list[Result]:
+        key = key if key is not None else jax.random.key(0)
+        requests = list(requests)
+        if not requests or all(r.max_new_tokens <= 0 for r in requests):
+            self.last_stats = EngineStats(self.mode, 0.0, 0, 0.0, 0, 0.0,
+                                          0.0)
+            return [Result(r.rid, []) for r in requests]
+        # max_new_tokens <= 0 requests produce no tokens and never occupy
+        # a slot; everything else goes to the scheduler
+        todo = [(i, r) for i, r in enumerate(requests)
+                if r.max_new_tokens > 0]
+        if self.mode == "continuous":
+            done = self._generate_continuous(todo, key)
+        else:
+            done = self._generate_lockstep(todo, key)
+        results = [Result(r.rid, []) for r in requests]
+        for (i, _), res in zip(todo, done):
+            results[i] = res
+        return results
+
+    # ------------------------------------------------------------------
+    # Continuous batching (slot pool + admission scheduler).
+    # ------------------------------------------------------------------
+
+    def _gather_extra(self, rows: list[int]) -> dict:
+        """Select extra-input rows by submission order (dim-1 broadcasts)."""
+        out = {}
+        for k, v in self.extra.items():
+            if v.shape[0] == 1:
+                out[k] = jnp.broadcast_to(jnp.asarray(v),
+                                          (len(rows),) + tuple(v.shape[1:]))
+            elif max(rows) < v.shape[0]:
+                out[k] = jnp.asarray(v)[jnp.asarray(rows)]
+            else:
+                raise ValueError(
+                    f"extra_inputs[{k!r}] has {v.shape[0]} rows but request "
+                    f"#{max(rows)} needs its own (pass one row per request, "
+                    "or a single row to broadcast)")
+        return out
+
+    def _check_budget(self, prefill_pos: int, max_new: int, rid) -> None:
+        """Every position written past prefill must fit in cache_len
+        (writes beyond it are silently dropped by the one-hot update)."""
+        writes = prefill_pos + max(max_new - 1, 0)
+        if writes > self.cache_len:
+            raise ValueError(
+                f"request rid={rid} needs {writes} cache positions "
+                f"(prefill {prefill_pos} + {max_new - 1} decode writes) "
+                f"but cache_len={self.cache_len}")
+
+    def _admit(self, r: Request, order: int, seq: int, slot: int, cache,
+               key):
+        """Prefill ``r`` into ``slot`` and sample its first token.
+
+        ``order`` is the original submission index (extra-input row);
+        ``seq`` indexes the scheduler's result list."""
+        prompt = np.asarray(r.prompt, np.int32)
+        t0 = time.perf_counter()
+        batch = {"tokens": jnp.asarray(prompt[None]),
+                 **self._gather_extra([order])}
+        logits, sub = self._prefill(self.params, batch)
+        # sub["pos"] covers any model-side prefix (e.g. vlm patches)
+        self._check_budget(int(np.asarray(sub["pos"])), r.max_new_tokens,
+                           r.rid)
+        if cache is None:
+            cache = self._cache_expand(sub, self.max_batch)
+        cache = self._slot_write(cache, sub, slot)
+        tok = self._sample(logits, jnp.full((1,), r.temperature), key)
+        tok = int(np.asarray(jax.block_until_ready(tok))[0])
+        ttft_ms = (time.perf_counter() - t0) * 1e3
+        return cache, _Slot(req=r, order=seq, tokens=[tok],
+                            ttft_ms=ttft_ms)
+
+    def _generate_continuous(self, items, key) -> list[Result]:
+        """items: [(submission order, Request)]; results align with items."""
+        bsz = self.max_batch
+        queue = collections.deque(
+            (seq, order, r) for seq, (order, r) in enumerate(items))
+        slots: list[_Slot | None] = [None] * bsz
+        results: list[Result | None] = [None] * len(items)
+        cache = None
+        toks = np.zeros((bsz, 1), np.int32)
+        temps = np.zeros((bsz,), np.float32)
+        decode_steps = busy_steps = 0
+        ttfts: list[float] = []
+        t_start = time.perf_counter()
+
+        def _finish(s: _Slot):
+            per_tok = s.decode_s * 1e3 / max(s.steps, 1)
+            results[s.order] = Result(s.req.rid, s.tokens, s.ttft_ms,
+                                      per_tok)
+
+        while queue or any(s is not None for s in slots):
+            # admission: refill every free slot before the next decode step
+            for i in range(bsz):
+                if slots[i] is None and queue:
+                    seq, order, r = queue.popleft()
+                    key, sk = jax.random.split(key)
+                    cache, s = self._admit(r, order, seq, i, cache, sk)
+                    ttfts.append(s.ttft_ms)
+                    if len(s.tokens) >= r.max_new_tokens:
+                        _finish(s)      # satisfied by prefill alone
+                    else:
+                        slots[i] = s
+                        toks[i, 0] = s.tokens[-1]
+                        temps[i] = r.temperature
+            active = [i for i in range(bsz) if slots[i] is not None]
+            if not active:
+                continue
+            # one decode step over the whole slot pool (fixed shapes; idle
+            # slots compute too - their rows are masked by per-slot pos and
+            # fully rewritten on the next admission)
+            t0 = time.perf_counter()
+            key, sk = jax.random.split(key)
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(toks))
+            nxt = np.asarray(self._sample(logits, jnp.asarray(temps), sk))
+            dt = time.perf_counter() - t0
+            decode_steps += 1
+            busy_steps += len(active)
+            for i in active:
+                s = slots[i]
+                s.tokens.append(int(nxt[i]))
+                s.steps += 1
+                s.decode_s += dt
+                toks[i, 0] = nxt[i]
+                if len(s.tokens) >= s.req.max_new_tokens:
+                    _finish(s)
+                    slots[i] = None     # freed: refilled on the next pass
+
+        wall = time.perf_counter() - t_start
+        gen = sum(len(r.tokens) for r in results)
+        self.last_stats = EngineStats(
+            "continuous", wall, gen, gen / max(wall, 1e-9), decode_steps,
+            busy_steps / max(bsz * decode_steps, 1),
+            float(np.mean(ttfts)) if ttfts else 0.0)
+        return results
+
+    # ------------------------------------------------------------------
+    # Lock-step group batching (legacy / scan-cache fallback).
+    # ------------------------------------------------------------------
 
     def _pad_prompts(self, prompts: list[list[int]]) -> np.ndarray:
         # left-pad to a common length (uniform-position cache layout)
@@ -62,40 +288,67 @@ class ServeEngine:
             out[i, maxlen - len(p):] = p
         return out
 
-    def generate(self, requests: list[Request], key=None) -> list[Result]:
-        key = key if key is not None else jax.random.key(0)
-        results: list[Result] = []
-        queue = list(requests)
+    def _generate_lockstep(self, items, key) -> list[Result]:
+        """items: [(submission order, Request)]; results align with items."""
+        results: list[Result | None] = [None] * len(items)
+        queue = [(seq, order, r) for seq, (order, r) in enumerate(items)]
+        decode_steps = busy_steps = 0
+        ttfts: list[float] = []
+        t_start = time.perf_counter()
         while queue:
             group = queue[: self.max_batch]
             queue = queue[self.max_batch:]
-            results.extend(self._generate_group(group, key))
-            key = jax.random.fold_in(key, len(results))
+            key = jax.random.fold_in(key, len(queue))
+            stats = self._generate_group(group, key, results)
+            decode_steps += stats[0]
+            busy_steps += stats[1]
+            ttfts.extend(stats[2])
+        wall = time.perf_counter() - t_start
+        gen = sum(len(r.tokens) for r in results)
+        self.last_stats = EngineStats(
+            "lockstep", wall, gen, gen / max(wall, 1e-9), decode_steps,
+            busy_steps / max(self.max_batch * decode_steps, 1),
+            float(np.mean(ttfts)) if ttfts else 0.0)
         return results
 
-    def _generate_group(self, group: list[Request], key) -> list[Result]:
-        prompts = self._pad_prompts([r.prompt for r in group])
-        batch = {"tokens": jnp.asarray(prompts), **self.extra}
+    def _generate_group(self, group, key, results):
+        reqs = [r for _, _, r in group]
+        prompts = self._pad_prompts([r.prompt for r in reqs])
+        batch = {"tokens": jnp.asarray(prompts),
+                 **self._gather_extra([order for _, order, _ in group])}
         t0 = time.perf_counter()
         logits, cache = self._prefill(self.params, batch)
         jax.block_until_ready(logits)
         prefill_ms = (time.perf_counter() - t0) * 1e3
-        max_new = max(r.max_new_tokens for r in group)
-        temps = np.array([r.temperature for r in group], np.float32)
-        toks = np.asarray(_sample(logits, float(temps.max()), key))[:, None]
-        outs = [[int(toks[i, 0])] for i in range(len(group))]
+        max_new = max(r.max_new_tokens for r in reqs)
+        if self._slot_capable:
+            # uniform-position KV layout: the whole group decodes in step,
+            # so the group's slowest member sets the write budget (scan/ring
+            # cache families manage their own state length)
+            self._check_budget(int(np.asarray(cache["pos"])), max_new,
+                               [r.rid for r in reqs])
+        temps = jnp.asarray([r.temperature for r in reqs], jnp.float32)
+        key, sk = jax.random.split(key)
+        toks = np.asarray(self._sample(logits, temps, sk))[:, None]
+        outs = [[int(toks[i, 0])] for i in range(len(reqs))]
         t1 = time.perf_counter()
         n_steps = 0
-        for stepi in range(max_new - 1):
+        for _ in range(max_new - 1):
             logits, cache = self._decode(self.params, cache,
                                          jnp.asarray(toks, jnp.int32))
-            key = jax.random.fold_in(key, stepi)
-            toks = np.asarray(_sample(logits, float(temps.max()), key))[:, None]
+            key, sk = jax.random.split(key)
+            toks = np.asarray(self._sample(logits, temps, sk))[:, None]
             n_steps += 1
-            for i, r in enumerate(group):
+            for i, r in enumerate(reqs):
                 if len(outs[i]) < r.max_new_tokens:
                     outs[i].append(int(toks[i, 0]))
         jax.block_until_ready(logits)
         decode_ms = ((time.perf_counter() - t1) * 1e3 / max(n_steps, 1))
-        return [Result(r.rid, outs[i], prefill_ms, decode_ms)
-                for i, r in enumerate(group)]
+        busy_total = 0
+        # recompute busy slot-steps: request i is busy for its first
+        # (max_new_tokens - 1) decode steps of this group
+        for r in reqs:
+            busy_total += min(max(r.max_new_tokens - 1, 0), max(n_steps, 0))
+        for i, (seq, _, r) in enumerate(group):
+            results[seq] = Result(r.rid, outs[i], prefill_ms, decode_ms)
+        return n_steps, busy_total, [prefill_ms] * len(reqs)

@@ -1,10 +1,74 @@
-"""Shared test utilities."""
+"""Shared test utilities, including an optional-``hypothesis`` shim.
+
+Property tests import ``given``/``settings``/``st`` from here instead of
+from ``hypothesis`` directly.  When hypothesis is installed the real
+objects are re-exported; when it is missing the shim turns every
+``@given``-decorated test into a single skipped test with a clear reason,
+so tier-1 collection never errors on the missing dependency.
+"""
 import os
 import subprocess
 import sys
 import textwrap
 
+import pytest
+
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+    class _Strategy:
+        """Opaque stand-in so module-level strategy expressions evaluate."""
+
+        def __init__(self, name="strategy"):
+            self._name = name
+
+        def __call__(self, *a, **kw):
+            return _Strategy(self._name)
+
+        def __getattr__(self, item):
+            return _Strategy(f"{self._name}.{item}")
+
+    class _StrategiesModule:
+        def __getattr__(self, item):
+            return _Strategy(f"st.{item}")
+
+    st = _StrategiesModule()
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # NB: no functools.wraps - copying fn's signature would make
+            # pytest treat the hypothesis-drawn arguments as fixtures.
+            def skipper():
+                pytest.skip("hypothesis not installed (see "
+                            "requirements-dev.txt); property test skipped")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco
+
+    class _Settings:
+        """No-op hypothesis.settings replacement (decorator + profiles)."""
+
+        def __init__(self, *a, **kw):
+            pass
+
+        def __call__(self, fn):
+            return fn
+
+        @staticmethod
+        def register_profile(*a, **kw):
+            pass
+
+        @staticmethod
+        def load_profile(*a, **kw):
+            pass
+
+    settings = _Settings
 
 
 def run_with_devices(script: str, n_devices: int = 8, timeout=600):
@@ -13,7 +77,17 @@ def run_with_devices(script: str, n_devices: int = 8, timeout=600):
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
+    # every snippet gets the version-compat mesh constructor plus a
+    # jax.shard_map alias (older jax only has jax.experimental.shard_map)
+    prelude = textwrap.dedent("""\
+        from repro.launch.mesh import make_mesh
+        import jax as _jax_compat
+        if not hasattr(_jax_compat, "shard_map"):
+            from jax.experimental.shard_map import shard_map as _shard_map
+            _jax_compat.shard_map = _shard_map
+        """)
+    proc = subprocess.run([sys.executable, "-c",
+                           prelude + textwrap.dedent(script)],
                           capture_output=True, text=True, env=env,
                           timeout=timeout)
     assert proc.returncode == 0, f"stderr:\n{proc.stderr[-4000:]}"

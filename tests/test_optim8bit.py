@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.launch.mesh import make_mesh
 from repro.optim import AdamW, AdamW8bit
 from repro.optim.adamw8bit import _dq, _q_pos, _q_sym
 
@@ -71,8 +72,7 @@ def test_microbatching_matches_full_batch():
     cfg = smoke_config("qwen3-0.6b")
     model = build_model(cfg)
     opt = AdamW(lr=1e-3)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     policy = ShardingPolicy(fsdp=False)
     batch = {k: jnp.asarray(v)
              for k, v in SyntheticTokens(cfg, 8, 32, seed=0)(0).items()}

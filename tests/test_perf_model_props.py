@@ -1,0 +1,65 @@
+"""Property-style invariants of the analytical performance model.
+
+Runs as hypothesis property tests when hypothesis is installed and as a
+parametrized grid otherwise (the shim in ``helpers`` only covers skip-on-
+missing; these tests keep coverage either way, per the Fig. 4 claims).
+"""
+import pytest
+
+from helpers import HAS_HYPOTHESIS
+from repro.core.perf_model import KERNELS, ideality
+from repro.core.vector_engine import VectorEngineConfig
+
+if HAS_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+
+LANES = [2, 4, 8, 16]
+BPL_GRID = [8.0, 12.0, 16.0, 24.0, 32.0, 48.0, 64.0, 96.0, 128.0,
+            192.0, 256.0, 384.0, 512.0]
+# Diagonal invariant: exact for kernels without a reduction tail (the tail
+# is a fixed latency whose amortization depends on absolute vector length,
+# not bytes/lane - the paper plots those kernels separately).
+DIAG_KERNELS = sorted(k for k, s in KERNELS.items()
+                      if not s.uses_reduction)
+COMPUTE_BOUND = sorted(k for k, s in KERNELS.items() if s.compute_bound)
+
+
+def _check_diagonal(kernel, bpl):
+    """Fig. 4 diagonal: ideality depends on bytes/lane only - constant
+    across (lanes, vector length) pairs at fixed bytes/lane."""
+    vals = [ideality(kernel, bpl * lanes, VectorEngineConfig(n_lanes=lanes))
+            for lanes in LANES]
+    assert max(vals) - min(vals) < 1e-9, (kernel, bpl, vals)
+
+
+def _check_monotone(kernel, lanes):
+    """Ideality of compute-bound kernels is monotone nondecreasing in
+    bytes/lane (more per-PE work amortizes issue/setup non-idealities)."""
+    eng = VectorEngineConfig(n_lanes=lanes)
+    vals = [ideality(kernel, bpl * lanes, eng) for bpl in BPL_GRID]
+    for lo, hi, b in zip(vals, vals[1:], BPL_GRID[1:]):
+        assert hi >= lo - 1e-12, (kernel, lanes, b, vals)
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(st.sampled_from(DIAG_KERNELS),
+           st.floats(min_value=8.0, max_value=512.0,
+                     allow_nan=False, allow_infinity=False))
+    def test_fig4_diagonal_invariant(kernel, bpl):
+        _check_diagonal(kernel, bpl)
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.sampled_from(COMPUTE_BOUND), st.sampled_from(LANES))
+    def test_ideality_monotone_in_bytes_per_lane(kernel, lanes):
+        _check_monotone(kernel, lanes)
+else:
+    @pytest.mark.parametrize("bpl", BPL_GRID)
+    @pytest.mark.parametrize("kernel", DIAG_KERNELS)
+    def test_fig4_diagonal_invariant(kernel, bpl):
+        _check_diagonal(kernel, bpl)
+
+    @pytest.mark.parametrize("lanes", LANES)
+    @pytest.mark.parametrize("kernel", COMPUTE_BOUND)
+    def test_ideality_monotone_in_bytes_per_lane(kernel, lanes):
+        _check_monotone(kernel, lanes)

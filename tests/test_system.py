@@ -9,6 +9,7 @@ from repro.configs import SHAPES, get_config, smoke_config
 from repro.data import SyntheticTokens
 from repro.distributed.mesh_policy import choose_mesh, enumerate_policies
 from repro.distributed.sharding import ShardingPolicy
+from repro.launch.mesh import make_mesh
 from repro.models import build_model
 from repro.optim import AdamW, warmup_cosine
 from repro.serving import Request, ServeEngine
@@ -16,8 +17,7 @@ from repro.train import TrainConfig, Trainer, Watchdog
 
 
 def _mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def _trainer(tmp_path, steps, arch="qwen3-0.6b", **kw):
@@ -126,8 +126,7 @@ def test_hlo_cost_parser_on_known_program():
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.roofline.hlo_cost import HloCost
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         def body(x, w):
             def step(c, wi):
                 return jnp.tanh(c @ wi), None
