@@ -1,4 +1,5 @@
-"""Serving scheduler benchmark: continuous batching vs lock-step groups.
+"""Serving scheduler benchmark: lock-step groups vs continuous batching
+(dense slot KV) vs continuous batching with the paged KV layout.
 
 The serving analog of the paper's fixed-FPU-budget sweep (Ara2 §7.1:
 eight 2-lane cores beat one 16-lane core at equal FPU count because eight
@@ -8,10 +9,23 @@ and long requests (``max_new_tokens`` in {8, 64}): lock-step pins every
 slot to its group's slowest member, continuous batching refills freed
 slots immediately.
 
+The paged run demonstrates the memory-side claim (Ara2's bottleneck
+analysis: memory organization, not raw FPU count, gates utilization): its
+block pool holds exactly the dense layout's KV footprint
+(``max_batch * cache_len`` positions), yet it admits a trace whose
+*summed* KV footprint exceeds that capacity, because finished requests
+return their blocks immediately instead of holding a worst-case
+``cache_len`` reservation.  The bench asserts paged greedy tokens match
+the dense run token-for-token, so CI catches layout divergence.
+
 Emits ``name,us_per_call,derived`` CSV rows like the other benches:
   serving_lockstep,<wall_us>,tok/s=...;occ=...
   serving_continuous,<wall_us>,tok/s=...;occ=...
+  serving_paged,<wall_us>,tok/s=...;occ=...;block_util=...;compiles=...
   serving_speedup,,continuous/lockstep=...
+  serving_paged_admission,,footprint=...;capacity=...;admitted=...
+
+``--smoke`` shrinks the trace/model work for the CI CPU regression gate.
 """
 import jax
 
@@ -19,50 +33,86 @@ from benchmarks.common import emit
 
 MAX_BATCH = 4
 CACHE_LEN = 128
+BLOCK = 16
 PROMPT_LEN = 8
 SHORT_NEW, LONG_NEW = 8, 64
 N_REQS = 16
 
 
-def _trace(vocab):
+def _trace(vocab, n_reqs, short_new, long_new):
     from repro.serving import Request
     reqs = []
-    for i in range(N_REQS):
+    for i in range(n_reqs):
         prompt = [(7 * i + j) % vocab for j in range(PROMPT_LEN)]
-        max_new = SHORT_NEW if i % 2 else LONG_NEW
+        max_new = short_new if i % 2 else long_new
         reqs.append(Request(prompt, max_new, temperature=0.0, rid=i))
     return reqs
 
 
-def run():
+def run(smoke: bool = False):
     from repro.configs import smoke_config
     from repro.models import build_model
     from repro.serving import Request, ServeEngine
 
+    cache_len = 32 if smoke else CACHE_LEN
+    n_reqs = 8 if smoke else N_REQS
+    long_new = 16 if smoke else LONG_NEW
     cfg = smoke_config("qwen3-0.6b")
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
-    reqs = _trace(cfg.vocab_size)
+    reqs = _trace(cfg.vocab_size, n_reqs, SHORT_NEW, long_new)
 
-    stats = {}
-    for mode in ("lockstep", "continuous"):
+    # paged pool sized to the dense layout's exact KV footprint: admission
+    # beyond it can only come from block recycling, not extra memory
+    pool_positions = MAX_BATCH * cache_len
+    engines = {
+        "lockstep": dict(mode="lockstep"),
+        "continuous": dict(mode="continuous"),
+        "paged": dict(mode="continuous", kv_layout="paged",
+                      block_size=BLOCK,
+                      n_blocks=pool_positions // BLOCK + 1),
+    }
+    stats, tokens = {}, {}
+    for name, kw in engines.items():
         eng = ServeEngine(model, params, max_batch=MAX_BATCH,
-                          cache_len=CACHE_LEN, mode=mode)
+                          cache_len=cache_len, **kw)
         # warmup: compile prefill/decode/sample outside the timed run
         eng.generate([Request(list(range(PROMPT_LEN)), 2, rid=-1)
                       for _ in range(MAX_BATCH)])
-        eng.generate(reqs)
+        res = eng.generate(reqs)
+        tokens[name] = [r.tokens for r in res]
         s = eng.last_stats
-        stats[mode] = s
-        emit(f"serving_{mode}", s.wall_s * 1e6,
+        stats[name] = s
+        extra = ""
+        if name == "paged":
+            extra = (f";block_util={s.block_util_peak:.2f}"
+                     f";compiles={s.prefill_compiles}")
+        emit(f"serving_{name}", s.wall_s * 1e6,
              f"tok/s={s.tokens_per_s:.1f};occ={s.occupancy:.2f};"
-             f"steps={s.decode_steps};ttft_ms={s.ttft_ms_mean:.1f}")
+             f"steps={s.decode_steps};ttft_ms={s.ttft_ms_mean:.1f}" + extra)
+
+    assert tokens["paged"] == tokens["continuous"], \
+        "paged KV layout diverged from dense greedy tokens"
+
     speedup = (stats["continuous"].tokens_per_s
                / max(stats["lockstep"].tokens_per_s, 1e-9))
     emit("serving_speedup", "",
          f"continuous/lockstep={speedup:.2f}x "
-         f"(trace: {N_REQS} reqs, max_new {SHORT_NEW}/{LONG_NEW}, "
+         f"(trace: {n_reqs} reqs, max_new {SHORT_NEW}/{long_new}, "
          f"{MAX_BATCH} slots)")
+
+    # admission headline: summed trace KV footprint vs the pool capacity
+    # (== dense max_batch * cache_len) that nonetheless served it
+    footprint = sum(len(r.prompt) + r.max_new_tokens - 1 for r in reqs)
+    served = all(len(t) == r.max_new_tokens
+                 for t, r in zip(tokens["paged"], reqs))
+    assert footprint > pool_positions, \
+        "trace too small to demonstrate block recycling"
+    assert served, "paged engine failed to serve the full trace"
+    emit("serving_paged_admission", "",
+         f"footprint={footprint}pos;capacity={pool_positions}pos;"
+         f"admitted=all({n_reqs});block_util_peak="
+         f"{stats['paged'].block_util_peak:.2f}")
     return speedup
 
 
@@ -71,5 +121,6 @@ if __name__ == "__main__":
     import sys
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    smoke = "--smoke" in sys.argv
     print("name,us_per_call,derived")
-    run()
+    run(smoke=smoke)

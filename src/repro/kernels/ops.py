@@ -28,6 +28,8 @@ from .expk import exp_pallas, exp_xla
 from .fft import fft_pallas, fft_xla
 from .jacobi2d import jacobi2d_pallas, jacobi2d_xla
 from .matmul import matmul_pallas, matmul_xla
+from .paged_attention import (paged_decode_attention_pallas,
+                              paged_decode_attention_xla)
 from .pathfinder import pathfinder_pallas, pathfinder_xla
 from .roi_align import roi_align_xla
 from .softmax import softmax_pallas, softmax_xla
@@ -91,6 +93,22 @@ def attention(q, k, v, *, impl=None, causal=True, window=None, scale=None,
 def decode_attention(q, k_cache, v_cache, kv_len, *, scale=None, window=None):
     return decode_attention_xla(q, k_cache, v_cache, kv_len, scale=scale,
                                 window=window)
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_table, kv_len, *,
+                           impl=None, scale=None, window=None):
+    """Single-token attention against a paged KV pool via a block table.
+
+    Sliding windows ride the jnp gather path (the Pallas kernel keeps the
+    prefix-mask fast path; traced per-layer windows would defeat its
+    block-skip predicate anyway)."""
+    impl = impl or default_impl()
+    if impl == "xla" or window is not None:
+        return paged_decode_attention_xla(q, k_pool, v_pool, block_table,
+                                          kv_len, scale=scale, window=window)
+    return paged_decode_attention_pallas(q, k_pool, v_pool, block_table,
+                                         kv_len, scale=scale,
+                                         interpret=impl == "interpret")
 
 
 def ssd_scan(x, dt, a_log, b_mat, c_mat, *, impl=None, d_skip=None, h0=None,

@@ -26,14 +26,28 @@ def main():
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--mode", default="auto",
                     choices=["auto", "continuous", "lockstep"])
+    ap.add_argument("--kv-layout", default="dense",
+                    choices=["dense", "paged"])
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged layout: KV positions per pool block")
+    ap.add_argument("--n-blocks", type=int, default=None,
+                    help="paged layout: pool size (default: the dense "
+                         "footprint, max_batch * cache_len positions)")
+    ap.add_argument("--bucket", default=None,
+                    help="prefill length bucketing: 'pow2' or an integer "
+                         "pad-to-multiple (default: exact lengths)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.key(args.seed))
+    bucket = (int(args.bucket) if args.bucket and args.bucket != "pow2"
+              else args.bucket)
     eng = ServeEngine(model, params, max_batch=args.max_batch,
-                      cache_len=args.cache_len, mode=args.mode)
+                      cache_len=args.cache_len, mode=args.mode,
+                      kv_layout=args.kv_layout, block_size=args.block_size,
+                      n_blocks=args.n_blocks, bucket=bucket)
     reqs = [Request([int(t) % cfg.vocab_size for t in p.split()],
                     args.max_new, args.temperature, rid=i)
             for i, p in enumerate(args.prompts)]
@@ -41,9 +55,13 @@ def main():
         print(f"[serve] rid={r.rid} ttft={r.prefill_ms:.1f}ms "
               f"decode={r.decode_ms_per_tok:.1f}ms/tok tokens={r.tokens}")
     s = eng.last_stats
-    print(f"[serve] mode={s.mode} tokens/s={s.tokens_per_s:.1f} "
+    paged = (f" block_util_peak={s.block_util_peak:.2f}"
+             if s.kv_layout == "paged" else "")
+    print(f"[serve] mode={s.mode} kv={s.kv_layout} "
+          f"tokens/s={s.tokens_per_s:.1f} "
           f"generated={s.generated_tokens} steps={s.decode_steps} "
-          f"occupancy={s.occupancy:.2f} ttft_mean={s.ttft_ms_mean:.1f}ms")
+          f"occupancy={s.occupancy:.2f} ttft_mean={s.ttft_ms_mean:.1f}ms "
+          f"prefill_compiles={s.prefill_compiles}{paged}")
 
 
 if __name__ == "__main__":

@@ -124,14 +124,10 @@ def attn_prefill(p, x, cfg, *, cache_len: int, window=None):
     return out, (k, v)
 
 
-def attn_decode(p, x, k_cache, v_cache, kv_len, cfg, *, window=None,
-                ring: bool = False):
-    """One-token decode.  x: (B, 1, D); the new token's position is
-    kv_len (0-based) and the caches are updated in place at that slot.
-    ``ring=True``: the cache is a ring buffer of its full length W; the new
-    kv goes to slot pos % W and attention covers min(pos+1, W) entries
-    (slot order is irrelevant to softmax; keys carry absolute RoPE).
-    Returns (out, k_cache, v_cache)."""
+def _project_decode_qkv(p, x, kv_len, cfg):
+    """Single-token q/k/v projection with RoPE at position ``kv_len``
+    ((B,) vector or scalar).  Shared by the dense and paged decode paths so
+    both layouts see bitwise-identical projections."""
     b = x.shape[0]
     hd = cfg.head_dim_resolved
     q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
@@ -149,6 +145,19 @@ def attn_decode(p, x, k_cache, v_cache, kv_len, cfg, *, window=None,
         pos = kv_len.reshape(b, 1) if kv_len.ndim else jnp.full((b, 1), kv_len)
         q = apply_rope(q, pos, cfg.rope_theta)
         k = apply_rope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_decode(p, x, k_cache, v_cache, kv_len, cfg, *, window=None,
+                ring: bool = False):
+    """One-token decode.  x: (B, 1, D); the new token's position is
+    kv_len (0-based) and the caches are updated in place at that slot.
+    ``ring=True``: the cache is a ring buffer of its full length W; the new
+    kv goes to slot pos % W and attention covers min(pos+1, W) entries
+    (slot order is irrelevant to softmax; keys carry absolute RoPE).
+    Returns (out, k_cache, v_cache)."""
+    b = x.shape[0]
+    q, k, v = _project_decode_qkv(p, x, kv_len, cfg)
     # scatter the new kv at slot kv_len: in-place dynamic slice for a shared
     # scalar position (the serving engine's layout), one-hot blend otherwise
     w_cache = k_cache.shape[2]
@@ -170,6 +179,34 @@ def attn_decode(p, x, k_cache, v_cache, kv_len, cfg, *, window=None,
                                window=None if ring else window)
     out = out.transpose(0, 2, 1, 3).reshape(b, 1, -1)
     return jnp.einsum("bsh,hd->bsd", out, p["wo"]), k_cache, v_cache
+
+
+def attn_decode_paged(p, x, k_pool, v_pool, block_table, kv_len, cfg, *,
+                      window=None):
+    """One-token decode against a paged KV pool.  x: (B, 1, D);
+    k_pool/v_pool: (n_blocks, Hkv, block_size, D) for this layer;
+    block_table: (B, max_blocks) int32; kv_len: (B,) current lengths.
+
+    The new token's KV lands in pool block ``block_table[b, kv_len // bs]``
+    at offset ``kv_len % bs`` (the engine guarantees that entry is
+    allocated before the step — idle slots' tables point at the null
+    block, so their stale writes stay in scratch).
+    Returns (out, k_pool, v_pool)."""
+    b = x.shape[0]
+    bs = k_pool.shape[2]
+    q, k, v = _project_decode_qkv(p, x, kv_len, cfg)
+    blk = jnp.take_along_axis(block_table, (kv_len // bs)[:, None],
+                              axis=1)[:, 0]
+    off = kv_len % bs
+    # per-row scatter into the pool: rows own distinct blocks, so writes
+    # never collide (idle rows all hit the null block — last write wins,
+    # and nothing reads it)
+    k_pool = k_pool.at[blk, :, off, :].set(k[:, :, 0, :])
+    v_pool = v_pool.at[blk, :, off, :].set(v[:, :, 0, :])
+    out = ops.paged_decode_attention(q, k_pool, v_pool, block_table,
+                                     kv_len + 1, window=window)
+    out = out.transpose(0, 2, 1, 3).reshape(b, 1, -1)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), k_pool, v_pool
 
 
 def attn_cross_decode(p, x, k_cross, v_cross, cfg):

@@ -16,7 +16,16 @@ the slot-pool serving hooks used by continuous batching:
   model.cache_slot_write(cache, sub, i) - write a batch-1 prefill cache into
                                           slot i (prefill-on-admit)
 
-Both are None for scan-layout caches (ssm/hybrid/encdec); the serving
+and the paged-KV hooks used by the engine's ``kv_layout="paged"`` (block
+pool + per-slot block tables; see ``repro.serving.kvcache``):
+
+  model.paged_cache_init(batch=, n_blocks=, block_size=, max_blocks=,
+                         dtype=)              - empty block-pool cache
+  model.cache_paged_write(pc, sub, i, ids)    - scatter a batch-1 prefill
+                                                cache into pool blocks
+  model.decode_paged(params, pc, tokens)      - decode via block tables
+
+All are None for scan-layout caches (ssm/hybrid/encdec); the serving
 engine falls back to lock-step group batching there.
 """
 from __future__ import annotations
@@ -45,6 +54,10 @@ class Model:
     # addressable; the serving engine then uses lock-step group batching)
     cache_expand: Callable | None = None
     cache_slot_write: Callable | None = None
+    # paged-KV serving hooks (None when the family has no paged layout)
+    paged_cache_init: Callable | None = None
+    cache_paged_write: Callable | None = None
+    decode_paged: Callable | None = None
 
     def init(self, key):
         return init_params(self.templates, key)
@@ -68,6 +81,11 @@ def build_model(cfg: ModelConfig) -> Model:
             functools.partial(transformer.make_decode_cache_specs, cfg),
             cache_expand=transformer.decoder_cache_expand,
             cache_slot_write=transformer.decoder_cache_slot_write,
+            paged_cache_init=functools.partial(
+                transformer.decoder_paged_cache_init, cfg),
+            cache_paged_write=transformer.decoder_cache_paged_write,
+            decode_paged=functools.partial(
+                transformer.decoder_decode_step_paged, cfg=cfg),
         )
     if fam == "hybrid":
         return Model(

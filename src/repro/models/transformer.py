@@ -14,8 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..distributed.act_sharding import constrain
-from .attention import (attn_decode, attn_forward, attn_prefill,
-                        attn_templates)
+from .attention import (attn_decode, attn_decode_paged, attn_forward,
+                        attn_prefill, attn_templates)
 from .layers import (PT, embed_lookup, embed_templates, init_params,
                      param_pspecs, rmsnorm, softmax_xent_chunked,
                      stack_layers, swiglu_apply, swiglu_templates)
@@ -68,6 +68,16 @@ def lm_head_weight(params, cfg):
     if cfg.tie_embeddings:
         return params["embed"]["embedding"].T
     return params["lm_head"]
+
+
+def _lm_logits(params, x_last, cfg):
+    """(B, D) final-norm'd last-token hiddens -> (B, V) serving logits."""
+    logits = jnp.einsum("bd,dv->bv", x_last.astype(jnp.float32),
+                        lm_head_weight(params, cfg).astype(jnp.float32))
+    logits = logits[:, :cfg.vocab_size]
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits
 
 
 # ---------------------------------------------------------------------------
@@ -149,7 +159,15 @@ def decoder_loss(params, batch, cfg, *, remat=True, xent_chunk=512):
 # ---------------------------------------------------------------------------
 
 def decoder_prefill(params, batch, cfg, *, cache_len=None):
-    """Returns (last-token logits (B, V), cache dict)."""
+    """Returns (last-token logits (B, V), cache dict).
+
+    ``batch["prefill_len"]`` (optional, (B,) int32): per-row true token
+    count when ``tokens`` is right-padded to a bucket length (the serving
+    engine's prompt-length bucketing).  Causality already hides the pads
+    from real tokens, pad KV lands at positions >= the true length (masked
+    in decode and overwritten as decode proceeds), so only the last-token
+    gather and the cache position depend on it; ``cache["pos"]`` becomes a
+    (B,) vector of true lengths."""
     x, n_prefix = embed_input(params, batch, cfg)
     s_total = x.shape[1]
     cache_len = cache_len or s_total
@@ -160,8 +178,7 @@ def decoder_prefill(params, batch, cfg, *, cache_len=None):
 
     b = x.shape[0]
     hd = cfg.head_dim_resolved
-    cache_shape = (cfg.n_layers, b, cfg.n_kv_heads,
-                   min(cache_len, cache_len), hd)
+    cache_shape = (cfg.n_layers, b, cfg.n_kv_heads, cache_len, hd)
     k0 = jnp.zeros(cache_shape, x.dtype)
     v0 = jnp.zeros(cache_shape, x.dtype)
 
@@ -188,31 +205,30 @@ def decoder_prefill(params, batch, cfg, *, cache_len=None):
           else (params["layers"], idxs, windows))
     (x, k_cache, v_cache), _ = jax.lax.scan(scan_fn, (x, k0, v0), xs)
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    logits = jnp.einsum("bd,dv->bv", x[:, -1].astype(jnp.float32),
-                        lm_head_weight(params, cfg).astype(jnp.float32))
-    logits = logits[:, :cfg.vocab_size]
-    if cfg.logit_softcap:
-        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
-    cache = {"k": k_cache, "v": v_cache,
-             "pos": jnp.int32(s_total)}
-    return logits, cache
+    if "prefill_len" in batch:
+        pos = n_prefix + batch["prefill_len"].astype(jnp.int32)   # (B,)
+        x_last = jnp.take_along_axis(x, (pos - 1)[:, None, None],
+                                     axis=1)[:, 0]
+    else:
+        pos = jnp.int32(s_total)
+        x_last = x[:, -1]
+    cache = {"k": k_cache, "v": v_cache, "pos": pos}
+    return _lm_logits(params, x_last, cfg), cache
 
 
-def decoder_decode_step(params, cache, tokens, cfg):
-    """tokens: (B, 1).  Returns (logits (B, V), new cache).
-
-    ``cache["pos"]`` is either a scalar (uniform-position layout: every row
-    decodes at the same position) or a (B,) vector (the serving engine's
-    slot-pool layout: each slot tracks its own position; the new KV lands
-    at each row's own slot via the one-hot path in ``attn_decode``).
+def _decode_scan(params, tokens, k_all, v_all, cfg, attn_fn):
+    """Shared one-token decode body for both KV layouts: embed, scan the
+    layer stack updating each layer's KV slice in place, final-norm, lm
+    head.  ``attn_fn(lp, h, kc, vc, window) -> (attn_out, kc, vc)`` is the
+    only layout-specific piece.
 
     The stacked KV caches ride in the scan *carry* and each layer updates
     its slice in place (dynamic_update_index): with the cache donated, XLA
     aliases the whole while-loop state.  Carrying them as scan xs/ys
     double-buffers the full cache (~2.6x cache bytes of temp measured on
-    phi-3-vision decode_32k; see EXPERIMENTS.md §Perf)."""
+    phi-3-vision decode_32k; see EXPERIMENTS.md §Perf).
+    Returns (logits, k_all, v_all)."""
     x = embed_lookup(params["embed"], tokens)
-    pos = cache["pos"]
     windows = windows_array(cfg)
 
     def scan_fn(carry, inp):
@@ -224,7 +240,7 @@ def decoder_decode_step(params, cache, tokens, cfg):
         kc = jax.lax.dynamic_index_in_dim(kc_all, idx, 0, keepdims=False)
         vc = jax.lax.dynamic_index_in_dim(vc_all, idx, 0, keepdims=False)
         h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
-        a, kc, vc = attn_decode(lp["attn"], h, kc, vc, pos, cfg, window=w)
+        a, kc, vc = attn_fn(lp["attn"], h, kc, vc, w)
         x = x + a
         h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
         x = x + _ffn(lp, h, cfg, exact=True)
@@ -235,16 +251,24 @@ def decoder_decode_step(params, cache, tokens, cfg):
     idxs = jnp.arange(cfg.n_layers)
     xs = ((params["layers"], idxs) if windows is None
           else (params["layers"], idxs, windows))
-    (x, k_new, v_new), _ = jax.lax.scan(
-        scan_fn, (x, cache["k"], cache["v"]), xs)
+    (x, k_all, v_all), _ = jax.lax.scan(scan_fn, (x, k_all, v_all), xs)
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    logits = jnp.einsum("bd,dv->bv", x[:, -1].astype(jnp.float32),
-                        lm_head_weight(params, cfg).astype(jnp.float32))
-    logits = logits[:, :cfg.vocab_size]
-    if cfg.logit_softcap:
-        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
-    cache = {"k": k_new, "v": v_new, "pos": pos + 1}
-    return logits, cache
+    return _lm_logits(params, x[:, -1], cfg), k_all, v_all
+
+
+def decoder_decode_step(params, cache, tokens, cfg):
+    """tokens: (B, 1).  Returns (logits (B, V), new cache).
+
+    ``cache["pos"]`` is either a scalar (uniform-position layout: every row
+    decodes at the same position) or a (B,) vector (the serving engine's
+    slot-pool layout: each slot tracks its own position; the new KV lands
+    at each row's own slot via the one-hot path in ``attn_decode``)."""
+    pos = cache["pos"]
+    logits, k_new, v_new = _decode_scan(
+        params, tokens, cache["k"], cache["v"], cfg,
+        lambda lp, h, kc, vc, w: attn_decode(lp, h, kc, vc, pos, cfg,
+                                             window=w))
+    return logits, {"k": k_new, "v": v_new, "pos": pos + 1}
 
 
 def make_decode_cache_specs(cfg, batch_size: int, cache_len: int,
@@ -280,5 +304,71 @@ def decoder_cache_slot_write(cache, sub, slot):
     v = jax.lax.dynamic_update_index_in_dim(cache["v"], sub["v"][:, 0],
                                             slot, 1)
     pos = jax.lax.dynamic_update_index_in_dim(
-        cache["pos"], jnp.asarray(sub["pos"], jnp.int32), slot, 0)
+        cache["pos"],
+        jnp.reshape(jnp.asarray(sub["pos"], jnp.int32), ()), slot, 0)
     return {"k": k, "v": v, "pos": pos}
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache (block-pool serving layout; see repro.serving.kvcache).
+# ---------------------------------------------------------------------------
+
+def decoder_paged_cache_init(cfg, *, batch: int, n_blocks: int,
+                             block_size: int, max_blocks: int,
+                             dtype=jnp.bfloat16):
+    """Empty paged decode cache: one global KV block pool shared by all
+    ``batch`` slots, per-slot block tables pointing at the null block, and
+    per-slot positions at 0."""
+    hd = cfg.head_dim_resolved
+    pool = (cfg.n_layers, n_blocks, cfg.n_kv_heads, block_size, hd)
+    return {"kp": jnp.zeros(pool, dtype), "vp": jnp.zeros(pool, dtype),
+            "bt": jnp.zeros((batch, max_blocks), jnp.int32),
+            "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def decoder_cache_paged_write(pcache, sub, slot, block_ids):
+    """Prefill-on-admit for the paged layout: scatter a batch-1 dense
+    prefill cache into pool blocks and install slot ``slot``'s block table.
+
+    sub["k"]/["v"]: (L, 1, Hkv, S, hd); sub["pos"]: true length (<= S when
+    the prompt was bucketed).  ``block_ids``: the slot's full (max_blocks,)
+    int32 table row — allocated ids for the first ceil(true_len/bs)
+    entries, null (0) beyond, so pad-only tail chunks land in the scratch
+    block.  ``slot`` and ``block_ids`` may be traced (one compile covers
+    all slots and block assignments)."""
+    kp, vp = pcache["kp"], pcache["vp"]
+    bs = kp.shape[3]
+    l, _, hkv, s, hd = sub["k"].shape
+    n_chunks = -(-s // bs)
+    assert n_chunks <= block_ids.shape[0], (
+        f"prefill of {s} positions needs {n_chunks} blocks but the block "
+        f"table holds {block_ids.shape[0]}")
+    pad = n_chunks * bs - s
+
+    def chunks(x):
+        x = x[:, 0]                              # (L, Hkv, S, hd)
+        if pad:
+            x = jnp.concatenate(
+                [x, jnp.zeros((l, hkv, pad, hd), x.dtype)], axis=2)
+        return x.reshape(l, hkv, n_chunks, bs, hd).transpose(0, 2, 1, 3, 4)
+
+    ids = block_ids[:n_chunks]
+    kp = kp.at[:, ids].set(chunks(sub["k"]))
+    vp = vp.at[:, ids].set(chunks(sub["v"]))
+    bt = pcache["bt"].at[slot].set(jnp.asarray(block_ids, jnp.int32))
+    pos = pcache["pos"].at[slot].set(
+        jnp.reshape(jnp.asarray(sub["pos"], jnp.int32), ()))
+    return {"kp": kp, "vp": vp, "bt": bt, "pos": pos}
+
+
+def decoder_decode_step_paged(params, pcache, tokens, cfg):
+    """tokens: (B, 1) against the paged cache
+    {"kp"/"vp": (L, n_blocks, Hkv, bs, hd), "bt": (B, M), "pos": (B,)}.
+    Same layer body as :func:`decoder_decode_step`; only the KV read/write
+    goes through the block table."""
+    pos, bt = pcache["pos"], pcache["bt"]
+    logits, kp, vp = _decode_scan(
+        params, tokens, pcache["kp"], pcache["vp"], cfg,
+        lambda lp, h, kc, vc, w: attn_decode_paged(lp, h, kc, vc, bt, pos,
+                                                   cfg, window=w))
+    return logits, {"kp": kp, "vp": vp, "bt": bt, "pos": pos + 1}

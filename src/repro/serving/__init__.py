@@ -1,1 +1,2 @@
 from .engine import EngineStats, Request, Result, ServeEngine
+from .kvcache import BlockAllocator, BlockPoolStats, blocks_needed

@@ -21,12 +21,35 @@ Two scheduling modes:
   finished sequence's slot idles until the whole group drains, and slot
   refill re-runs a batched prefill over the next waiting group.
 
-Prompts are prefilled at their exact length (one compile per distinct
-prompt length; serving traces with many unique lengths should bucket
-prompts client-side).  Per-request sampling is vectorized: temperature<=0
-rows take argmax (deterministic regardless of the shared PRNG key),
-temperature>0 rows sample at their own temperature - never at the batch
-max.
+Continuous mode supports two KV layouts (``kv_layout``):
+
+* ``dense`` (default) - every slot reserves a full ``(Hkv, cache_len, D)``
+  KV strip per layer, so admission enforces ``prefill + decode writes <=
+  cache_len`` per request and memory is bounded by worst-case reservation
+  (``max_batch * cache_len`` positions live at all times).
+
+* ``paged`` - KV lives in one global pool of fixed-size blocks
+  (``repro.serving.kvcache.BlockAllocator``) addressed through per-slot
+  block tables; decode runs the paged-attention kernel
+  (``repro.kernels.paged_attention``).  Admission is bounded by *free
+  blocks*, not a per-slot length: a request is admitted when the pool can
+  cover its worst-case block count, blocks are allocated lazily as its
+  position grows, and a finished request returns its blocks immediately -
+  so a trace whose summed KV footprint exceeds ``max_batch * cache_len``
+  still serves as long as the *concurrently live* footprint fits the pool.
+  ``cache_len`` remains only the per-request context bound (the block
+  table's width).
+
+Prompt-length bucketing (``bucket=``): prompts are prefilled at their
+exact length by default - one compile per distinct length.  With
+``bucket="pow2"`` (or an integer multiple), continuous-mode prefills are
+right-padded up to the bucket boundary and the true length rides in
+``batch["prefill_len"]``; causal masking hides the pads, so outputs are
+identical while compiles drop to one per bucket
+(``EngineStats.prefill_compiles`` counts distinct compiled prefill
+shapes).  Per-request sampling is vectorized: temperature<=0 rows take
+argmax (deterministic regardless of the shared PRNG key), temperature>0
+rows sample at their own temperature - never at the batch max.
 """
 from __future__ import annotations
 
@@ -40,6 +63,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models.model import Model
+from . import kvcache
+from .kvcache import BlockAllocator, blocks_needed
 
 
 @dataclasses.dataclass
@@ -68,6 +93,9 @@ class EngineStats:
     decode_steps: int
     occupancy: float               # busy slot-steps / (max_batch * steps)
     ttft_ms_mean: float            # mean time-to-first-token
+    kv_layout: str = "dense"
+    prefill_compiles: int = 0      # distinct prefill shapes compiled so far
+    block_util_peak: float = 0.0   # paged: peak live blocks / pool capacity
 
 
 @dataclasses.dataclass
@@ -78,6 +106,10 @@ class _Slot:
     ttft_ms: float
     decode_s: float = 0.0
     steps: int = 0
+    # paged layout bookkeeping
+    prefill_pos: int = 0           # cache positions written by prefill
+    blocks: list[int] = dataclasses.field(default_factory=list)
+    reserve_left: int = 0          # worst-case blocks not yet allocated
 
 
 def _sample_rows(logits, temps, key):
@@ -103,36 +135,74 @@ class ServeEngine:
     ``extra_inputs`` (vlm patches / encdec frames): leaves carry one row
     per request, indexed by submission order; a leaf with leading dim 1
     broadcasts to every request.  Too few rows is an error, not a clamp.
+
+    kv_layout: "dense" or "paged" (continuous mode only; see module doc).
+    block_size / n_blocks size the paged pool - n_blocks defaults to the
+    dense layout's footprint (max_batch * cache_len positions) plus the
+    null block.  bucket: None (exact-length prefills), "pow2", or an
+    integer pad-to-multiple.
     """
 
     def __init__(self, model: Model, params, *, max_batch: int = 8,
                  cache_len: int = 1024, extra_inputs: dict | None = None,
-                 mode: str = "auto"):
+                 mode: str = "auto", kv_layout: str = "dense",
+                 block_size: int = 16, n_blocks: int | None = None,
+                 bucket: str | int | None = None):
         assert mode in ("auto", "continuous", "lockstep"), mode
+        assert kv_layout in ("dense", "paged"), kv_layout
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.cache_len = cache_len
         self.extra = extra_inputs or {}
+        self.bucket = bucket
         slot_capable = model.cache_slot_write is not None
         if mode == "auto":
             mode = "continuous" if slot_capable else "lockstep"
         if mode == "continuous" and not slot_capable:
             mode = "lockstep"      # re-prefill fallback (scan-cache layout)
+        if kv_layout == "paged":
+            if model.decode_paged is None:
+                raise ValueError(
+                    f"kv_layout='paged': family {model.cfg.family!r} has "
+                    "no paged cache hooks")
+            if mode != "continuous":
+                raise ValueError(
+                    "kv_layout='paged' requires the continuous scheduler")
         self.mode = mode
+        self.kv_layout = kv_layout
         self.last_stats: EngineStats | None = None
+        self._prefill_shapes: set[int] = set()   # compiled prefill lengths
         # the cache is dead after every call that consumes it - donate so
         # XLA updates the multi-GB KV buffers in place instead of copying
-        self._decode = jax.jit(model.decode, donate_argnums=(1,))
-        self._prefill = jax.jit(
-            lambda p, b: model.prefill(p, b, cache_len=cache_len))
         self._sample = jax.jit(_sample_rows)
         self._slot_capable = slot_capable
-        if slot_capable:
-            self._cache_expand = jax.jit(model.cache_expand,
-                                         static_argnums=(1,))
-            self._slot_write = jax.jit(model.cache_slot_write,
-                                       donate_argnums=(0,))
+        if kv_layout == "paged":
+            self.block_size = block_size
+            self.max_blocks = blocks_needed(cache_len, block_size)
+            if n_blocks is None:
+                n_blocks = max_batch * self.max_blocks + 1
+            self.allocator = BlockAllocator(n_blocks, block_size)
+            self._reserved = 0     # worst-case blocks promised, not yet live
+            # prefill at the (bucketed) prompt length - the paged write
+            # scatters it into blocks, no cache_len padding needed
+            self._prefill = jax.jit(
+                lambda p, b: model.prefill(p, b, cache_len=None))
+            self._decode = jax.jit(model.decode_paged, donate_argnums=(1,))
+            self._paged_write = jax.jit(model.cache_paged_write,
+                                        donate_argnums=(0,))
+            self._bt_set = jax.jit(kvcache.bt_set_entry, donate_argnums=(0,))
+            self._slot_release = jax.jit(kvcache.slot_release,
+                                         donate_argnums=(0,))
+        else:
+            self._decode = jax.jit(model.decode, donate_argnums=(1,))
+            self._prefill = jax.jit(
+                lambda p, b: model.prefill(p, b, cache_len=cache_len))
+            if slot_capable:
+                self._cache_expand = jax.jit(model.cache_expand,
+                                             static_argnums=(1,))
+                self._slot_write = jax.jit(model.cache_slot_write,
+                                           donate_argnums=(0,))
 
     # ------------------------------------------------------------------
     # Public API.
@@ -142,13 +212,29 @@ class ServeEngine:
         key = key if key is not None else jax.random.key(0)
         requests = list(requests)
         if not requests or all(r.max_new_tokens <= 0 for r in requests):
-            self.last_stats = EngineStats(self.mode, 0.0, 0, 0.0, 0, 0.0,
-                                          0.0)
+            self.last_stats = EngineStats(
+                self.mode, 0.0, 0, 0.0, 0, 0.0, 0.0,
+                kv_layout=self.kv_layout,
+                prefill_compiles=len(self._prefill_shapes))
             return [Result(r.rid, []) for r in requests]
         # max_new_tokens <= 0 requests produce no tokens and never occupy
         # a slot; everything else goes to the scheduler
         todo = [(i, r) for i, r in enumerate(requests)
                 if r.max_new_tokens > 0]
+        if self.kv_layout == "paged":
+            # reject impossible requests before any work is scheduled: a
+            # raise mid-schedule would abort the batch with blocks still
+            # allocated (and _can_admit would otherwise stall forever on a
+            # request that can never fit)
+            for _, r in todo:
+                self._check_budget(self._n_prefix() + len(r.prompt),
+                                   r.max_new_tokens, r.rid)
+                worst = self._worst_blocks(r)
+                if worst > self.allocator.capacity:
+                    raise ValueError(
+                        f"request rid={r.rid} needs {worst} KV blocks "
+                        f"(block_size={self.block_size}) but the pool only "
+                        f"has {self.allocator.capacity}")
         if self.mode == "continuous":
             done = self._generate_continuous(todo, key)
         else:
@@ -179,14 +265,49 @@ class ServeEngine:
         return out
 
     def _check_budget(self, prefill_pos: int, max_new: int, rid) -> None:
-        """Every position written past prefill must fit in cache_len
-        (writes beyond it are silently dropped by the one-hot update)."""
+        """Every position written past prefill must fit in cache_len: the
+        per-slot strip length (dense; writes beyond it are silently dropped
+        by the one-hot update) or the block-table width (paged)."""
         writes = prefill_pos + max(max_new - 1, 0)
         if writes > self.cache_len:
             raise ValueError(
                 f"request rid={rid} needs {writes} cache positions "
                 f"(prefill {prefill_pos} + {max_new - 1} decode writes) "
                 f"but cache_len={self.cache_len}")
+
+    def _n_prefix(self) -> int:
+        """Model-side prefix positions prefill adds ahead of the tokens."""
+        cfg = self.model.cfg
+        return cfg.n_patches if cfg.family == "vlm" else 0
+
+    def _bucket_len(self, n: int) -> int:
+        """Round a prompt length up to its bucket (pow2 or pad-to-multiple),
+        capped so the padded sequence still fits the per-request bound."""
+        if not self.bucket:
+            return n
+        if self.bucket == "pow2":
+            b = 1
+            while b < n:
+                b <<= 1
+        else:
+            b = -(-n // int(self.bucket)) * int(self.bucket)
+        return max(min(b, self.cache_len - self._n_prefix()), n)
+
+    def _worst_blocks(self, r: Request) -> int:
+        """Worst-case block count for a request (all cache positions it can
+        ever write), computable before prefill runs."""
+        writes = self._n_prefix() + len(r.prompt) + max(r.max_new_tokens - 1,
+                                                        0)
+        return blocks_needed(writes, self.block_size)
+
+    def _can_admit(self, r: Request) -> bool:
+        """Paged admission: the pool must cover the request's worst case on
+        top of what is already reserved for in-flight requests (so lazy
+        growth can never fail mid-decode).  ``generate`` has already
+        rejected requests that exceed the whole pool, so a False here
+        always clears once live requests finish and recycle blocks."""
+        return (self.allocator.n_free - self._reserved
+                >= self._worst_blocks(r))
 
     def _admit(self, r: Request, order: int, seq: int, slot: int, cache,
                key):
@@ -196,24 +317,57 @@ class ServeEngine:
         ``seq`` indexes the scheduler's result list."""
         prompt = np.asarray(r.prompt, np.int32)
         t0 = time.perf_counter()
-        batch = {"tokens": jnp.asarray(prompt[None]),
-                 **self._gather_extra([order])}
+        plen = len(prompt)
+        sb = self._bucket_len(plen)
+        if self.bucket:
+            # right-pad to the bucket and pass the true length: causality
+            # hides the pads, pad KV lands past pos (masked in decode and
+            # overwritten as decode proceeds), so outputs are unchanged
+            toks = np.zeros((1, sb), np.int32)
+            toks[0, :plen] = prompt
+            batch = {"tokens": jnp.asarray(toks),
+                     "prefill_len": jnp.asarray([plen], np.int32),
+                     **self._gather_extra([order])}
+        else:
+            batch = {"tokens": jnp.asarray(prompt[None]),
+                     **self._gather_extra([order])}
+        self._prefill_shapes.add(batch["tokens"].shape[1])
         logits, sub = self._prefill(self.params, batch)
         # sub["pos"] covers any model-side prefix (e.g. vlm patches)
-        self._check_budget(int(np.asarray(sub["pos"])), r.max_new_tokens,
-                           r.rid)
-        if cache is None:
-            cache = self._cache_expand(sub, self.max_batch)
-        cache = self._slot_write(cache, sub, slot)
+        prefill_pos = int(np.asarray(sub["pos"]).reshape(()))
+        self._check_budget(prefill_pos, r.max_new_tokens, r.rid)
+        blocks: list[int] = []
+        reserve_left = 0
+        if self.kv_layout == "paged":
+            n_pref = blocks_needed(prefill_pos, self.block_size)
+            blocks = self.allocator.alloc_n(n_pref)
+            reserve_left = self._worst_blocks(r) - n_pref
+            self._reserved += reserve_left
+            if cache is None:
+                cache = self.model.paged_cache_init(
+                    batch=self.max_batch, n_blocks=self.allocator.n_blocks,
+                    block_size=self.block_size, max_blocks=self.max_blocks,
+                    dtype=sub["k"].dtype)
+            row = np.zeros((self.max_blocks,), np.int32)
+            row[:n_pref] = blocks
+            cache = self._paged_write(cache, sub, slot, jnp.asarray(row))
+        else:
+            if cache is None:
+                cache = self._cache_expand(sub, self.max_batch)
+            cache = self._slot_write(cache, sub, slot)
         tok = self._sample(logits, jnp.full((1,), r.temperature), key)
         tok = int(np.asarray(jax.block_until_ready(tok))[0])
         ttft_ms = (time.perf_counter() - t0) * 1e3
-        return cache, _Slot(req=r, order=seq, tokens=[tok],
-                            ttft_ms=ttft_ms)
+        return cache, _Slot(req=r, order=seq, tokens=[tok], ttft_ms=ttft_ms,
+                            prefill_pos=prefill_pos, blocks=blocks,
+                            reserve_left=reserve_left)
 
     def _generate_continuous(self, items, key) -> list[Result]:
         """items: [(submission order, Request)]; results align with items."""
         bsz = self.max_batch
+        paged = self.kv_layout == "paged"
+        if paged:
+            self.allocator.reset_peak()
         queue = collections.deque(
             (seq, order, r) for seq, (order, r) in enumerate(items))
         slots: list[_Slot | None] = [None] * bsz
@@ -230,50 +384,104 @@ class ServeEngine:
             results[s.order] = Result(s.req.rid, s.tokens, s.ttft_ms,
                                       per_tok)
 
-        while queue or any(s is not None for s in slots):
-            # admission: refill every free slot before the next decode step
-            for i in range(bsz):
-                if slots[i] is None and queue:
-                    seq, order, r = queue.popleft()
-                    key, sk = jax.random.split(key)
-                    cache, s = self._admit(r, order, seq, i, cache, sk)
-                    ttfts.append(s.ttft_ms)
-                    if len(s.tokens) >= r.max_new_tokens:
-                        _finish(s)      # satisfied by prefill alone
-                    else:
-                        slots[i] = s
-                        toks[i, 0] = s.tokens[-1]
-                        temps[i] = r.temperature
-            active = [i for i in range(bsz) if slots[i] is not None]
-            if not active:
-                continue
-            # one decode step over the whole slot pool (fixed shapes; idle
-            # slots compute too - their rows are masked by per-slot pos and
-            # fully rewritten on the next admission)
-            t0 = time.perf_counter()
-            key, sk = jax.random.split(key)
-            logits, cache = self._decode(self.params, cache,
-                                         jnp.asarray(toks))
-            nxt = np.asarray(self._sample(logits, jnp.asarray(temps), sk))
-            dt = time.perf_counter() - t0
-            decode_steps += 1
-            busy_steps += len(active)
-            for i in active:
-                s = slots[i]
-                s.tokens.append(int(nxt[i]))
-                s.steps += 1
-                s.decode_s += dt
-                toks[i, 0] = nxt[i]
-                if len(s.tokens) >= s.req.max_new_tokens:
-                    _finish(s)
-                    slots[i] = None     # freed: refilled on the next pass
+        def _release(s: _Slot, i: int):
+            """Paged: return the slot's blocks to the pool immediately and
+            park its block-table row on the null block so its idle decode
+            writes cannot touch recycled blocks."""
+            nonlocal cache
+            if not paged:
+                return
+            self.allocator.free(s.blocks)
+            self._reserved -= s.reserve_left
+            s.blocks, s.reserve_left = [], 0
+            cache = self._slot_release(cache, i)
+
+        try:
+            while queue or any(s is not None for s in slots):
+                # admission: refill every free slot before the next decode
+                # step
+                for i in range(bsz):
+                    if slots[i] is None and queue:
+                        # paged: admit only when the pool covers the
+                        # request's worst case beyond standing reservations
+                        # (FIFO - no skip-ahead, so a big request cannot
+                        # starve)
+                        if paged and not self._can_admit(queue[0][2]):
+                            break
+                        seq, order, r = queue.popleft()
+                        key, sk = jax.random.split(key)
+                        cache, s = self._admit(r, order, seq, i, cache, sk)
+                        ttfts.append(s.ttft_ms)
+                        if len(s.tokens) >= r.max_new_tokens:
+                            _finish(s)      # satisfied by prefill alone
+                            _release(s, i)
+                        else:
+                            slots[i] = s
+                            toks[i, 0] = s.tokens[-1]
+                            temps[i] = r.temperature
+                active = [i for i in range(bsz) if slots[i] is not None]
+                if not active:
+                    continue
+                if paged:
+                    # lazy growth: each slot's next write position must
+                    # have a block before the step; admission reserved the
+                    # worst case, so these allocations can never fail
+                    # mid-flight
+                    for i in active:
+                        s = slots[i]
+                        pos = s.prefill_pos + s.steps
+                        while len(s.blocks) * self.block_size <= pos:
+                            blk = self.allocator.alloc()
+                            cache = self._bt_set(cache, i, len(s.blocks),
+                                                 blk)
+                            s.blocks.append(blk)
+                            s.reserve_left -= 1
+                            self._reserved -= 1
+                # one decode step over the whole slot pool (fixed shapes;
+                # idle slots compute too - their rows are masked by
+                # per-slot pos and fully rewritten on the next admission;
+                # paged idle rows write into the null block)
+                t0 = time.perf_counter()
+                key, sk = jax.random.split(key)
+                logits, cache = self._decode(self.params, cache,
+                                             jnp.asarray(toks))
+                nxt = np.asarray(self._sample(logits, jnp.asarray(temps),
+                                              sk))
+                dt = time.perf_counter() - t0
+                decode_steps += 1
+                busy_steps += len(active)
+                for i in active:
+                    s = slots[i]
+                    s.tokens.append(int(nxt[i]))
+                    s.steps += 1
+                    s.decode_s += dt
+                    toks[i, 0] = nxt[i]
+                    if len(s.tokens) >= s.req.max_new_tokens:
+                        _finish(s)
+                        _release(s, i)
+                        slots[i] = None  # freed: refilled on the next pass
+        except BaseException:
+            # keep the allocator consistent if anything aborts the batch
+            # mid-schedule (the device cache is rebuilt from scratch per
+            # generate call, so host-side block ownership is the only
+            # state that must survive for the engine to stay usable)
+            if paged:
+                for s in slots:
+                    if s is not None and s.blocks:
+                        self.allocator.free(s.blocks)
+                        self._reserved -= s.reserve_left
+            raise
 
         wall = time.perf_counter() - t_start
         gen = sum(len(r.tokens) for r in results)
         self.last_stats = EngineStats(
             "continuous", wall, gen, gen / max(wall, 1e-9), decode_steps,
             busy_steps / max(bsz * decode_steps, 1),
-            float(np.mean(ttfts)) if ttfts else 0.0)
+            float(np.mean(ttfts)) if ttfts else 0.0,
+            kv_layout=self.kv_layout,
+            prefill_compiles=len(self._prefill_shapes),
+            block_util_peak=(self.allocator.stats().peak_utilization
+                             if paged else 0.0))
         return results
 
     # ------------------------------------------------------------------
@@ -308,12 +516,14 @@ class ServeEngine:
         self.last_stats = EngineStats(
             "lockstep", wall, gen, gen / max(wall, 1e-9), decode_steps,
             busy_steps / max(self.max_batch * decode_steps, 1),
-            float(np.mean(ttfts)) if ttfts else 0.0)
+            float(np.mean(ttfts)) if ttfts else 0.0,
+            prefill_compiles=len(self._prefill_shapes))
         return results
 
     def _generate_group(self, group, key, results):
         reqs = [r for _, _, r in group]
         prompts = self._pad_prompts([r.prompt for r in reqs])
+        self._prefill_shapes.add(prompts.shape[1])
         batch = {"tokens": jnp.asarray(prompts),
                  **self._gather_extra([order for _, order, _ in group])}
         t0 = time.perf_counter()

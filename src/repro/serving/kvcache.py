@@ -1,0 +1,149 @@
+"""Paged KV-cache subsystem: block allocator + device-side table helpers.
+
+The serving analog of Ara2's memory-subsystem finding (bottleneck analysis:
+memory organization, not raw FPU count, gates utilization): the dense slot
+pool reserves ``cache_len`` KV positions per slot no matter how short the
+request, so admission is bounded by worst-case reservation.  Paging (vLLM's
+PagedAttention, Kwon et al. SOSP 2023) splits the KV cache into fixed-size
+blocks drawn from one global pool:
+
+* ``BlockAllocator`` - a host-side free list over ``n_blocks`` pool blocks.
+  Block 0 is reserved as the *null block*: freed/idle decode slots point
+  every block-table entry at it, so their stale one-token writes land in a
+  scratch block instead of corrupting a live request's KV.
+* per-request **block tables** - ordered rows of block ids mapping logical
+  KV positions ``[i * block_size, (i+1) * block_size)`` to pool blocks.
+  Rows live in the device cache (``pcache["bt"]``) so the decode kernel can
+  gather them; ownership/accounting lives here on the host.
+
+The pool layout itself ((n_layers, n_blocks, n_kv_heads, block_size,
+head_dim)) is built by the model family (``model.paged_cache_init``); this
+module only manages block ownership and the layout-agnostic table/position
+updates shared by every paged family.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+NULL_BLOCK = 0
+
+
+def blocks_needed(n_positions: int, block_size: int) -> int:
+    """Number of KV blocks covering ``n_positions`` cache positions."""
+    return -(-n_positions // block_size)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPoolStats:
+    n_blocks: int                  # pool size including the null block
+    block_size: int
+    capacity: int                  # allocatable blocks (null excluded)
+    n_live: int
+    n_free: int
+    peak_live: int
+    utilization: float             # n_live / capacity
+    peak_utilization: float        # peak_live / capacity
+
+
+class BlockAllocator:
+    """Free-list allocator over a global pool of fixed-size KV blocks.
+
+    Freed blocks are reused LIFO (most recently freed first), which keeps
+    hot pool regions hot.  Block 0 (``NULL_BLOCK``) is never handed out.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int):
+        if n_blocks < 2:
+            raise ValueError(
+                f"n_blocks={n_blocks}: need at least the null block plus "
+                "one allocatable block")
+        if block_size < 1:
+            raise ValueError(f"block_size={block_size} must be >= 1")
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self.reset()
+
+    # -- lifecycle -----------------------------------------------------
+
+    def reset(self) -> None:
+        """Return every block to the free list and clear stats."""
+        # stacked so that pop() hands out 1, 2, 3, ... on a fresh pool
+        self._free = list(range(self.n_blocks - 1, 0, -1))
+        self._live: set[int] = set()
+        self._peak = 0
+
+    def reset_peak(self) -> None:
+        self._peak = len(self._live)
+
+    # -- alloc / free --------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        return self.n_blocks - 1
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_live(self) -> int:
+        return len(self._live)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise MemoryError(
+                f"KV block pool exhausted ({self.capacity} blocks of "
+                f"{self.block_size} positions, all live)")
+        blk = self._free.pop()
+        self._live.add(blk)
+        self._peak = max(self._peak, len(self._live))
+        return blk
+
+    def alloc_n(self, n: int) -> list[int]:
+        """Allocate ``n`` blocks atomically (all or nothing)."""
+        if n > self.n_free:
+            raise MemoryError(
+                f"KV block pool exhausted: need {n} blocks, "
+                f"{self.n_free}/{self.capacity} free")
+        return [self.alloc() for _ in range(n)]
+
+    def free(self, blocks) -> None:
+        for blk in blocks:
+            if blk not in self._live:
+                raise ValueError(
+                    f"free of block {blk} which is not live "
+                    "(double free or foreign id)")
+            self._live.discard(blk)
+            self._free.append(blk)
+
+    def stats(self) -> BlockPoolStats:
+        cap = self.capacity
+        return BlockPoolStats(
+            self.n_blocks, self.block_size, cap, self.n_live, self.n_free,
+            self._peak, self.n_live / cap, self._peak / cap)
+
+
+# ---------------------------------------------------------------------------
+# Device-side block-table updates (layout-agnostic, jittable).
+#
+# Every paged cache dict carries "bt" (B, max_blocks) int32 block tables and
+# "pos" (B,) int32 per-slot positions next to its model-specific pools.
+# ---------------------------------------------------------------------------
+
+def bt_set_entry(pcache: dict, slot, idx, block) -> dict:
+    """Install pool block ``block`` as entry ``idx`` of ``slot``'s block
+    table (lazy growth: called when a slot's position enters a new block)."""
+    return dict(pcache, bt=pcache["bt"].at[slot, idx].set(
+        jnp.asarray(block, jnp.int32)))
+
+
+def slot_release(pcache: dict, slot) -> dict:
+    """Point a freed slot's whole block table at the null block and reset
+    its position, so idle decode writes land in scratch, never in a block
+    that has been recycled to another request."""
+    return dict(
+        pcache,
+        bt=pcache["bt"].at[slot].set(jnp.int32(NULL_BLOCK)),
+        pos=pcache["pos"].at[slot].set(jnp.int32(0)))
