@@ -1,0 +1,202 @@
+"""Multi-replica cluster benchmark: 1x8 vs 2x4 vs 4x2 replica shapes on
+one fixed 512-position shared KV block pool.
+
+The paper's headline multi-core sweep (Ara2 §7: eight 2-lane cores with
+16 FPUs beat one 16-lane core with the same 16 FPUs by >3x on 32x32x32
+matmul, because many small issue streams overcome the single scalar
+core's issue-rate bound).  The serving analog at a fixed slot budget
+(= FPU count): a single wide engine's decode step has a fixed compiled
+width, so it pays for all 8 slot lanes even when short-request traffic
+leaves most of them idle (the drain tail); narrow replicas strand at
+most their own width, and a fully drained replica skips its step
+entirely.  All shapes draw from the *same* 512-position block pool, so
+the memory budget is constant across the sweep - only the issue
+structure changes.
+
+Two traces:
+
+* **short-request trace** - mostly 4-token requests plus two 64-token
+  stragglers (heavy-tailed traffic).  Greedy outputs must be
+  token-identical across every replica shape and the plain single
+  engine; the many-small shapes must beat 1x8 tokens/s (asserted in the
+  full run, reported in ROADMAP).
+
+* **pressure trace** - 8 concurrent requests whose worst case (40
+  blocks) exceeds the pool (32 blocks).  Under the cluster's overcommit
+  admission this forces **preemption**: lazy block growth finds the pool
+  empty, the youngest request is evicted and re-queued with its
+  generated prefix.  Asserted: at least one preemption fires and the
+  preempted outputs are still token-identical to a reserve-admission
+  reference on the same pool (preemption is invisible in the output).
+
+Emits ``name,us_per_call,derived`` CSV rows like the other benches:
+  cluster_single_1x8,<wall_us>,tok/s=...;occ=...
+  cluster_{1x8,2x4,4x2},<wall_us>,tok/s=...;occ=...;preempted=...
+  cluster_speedup,,best_small/1x8=...
+  cluster_pressure_{reserve,preempt},<wall_us>,tok/s=...;preempted=...
+
+``--smoke`` shrinks to the smoke model for the CI gate: it asserts
+token identity and the preemption count but not the throughput ordering
+(the tiny model's step cost is dispatch-bound, not width-bound).
+"""
+import dataclasses
+import sys
+
+import jax
+
+from benchmarks.common import check_tokens, emit
+
+TOTAL_SLOTS = 8
+CACHE_LEN = 512                # per-request context bound (block-table
+                               # width: decode pays it per slot lane, live
+                               # or idle - the width cost the sweep measures)
+BLOCK = 16
+POOL_POSITIONS = 512           # fixed shared budget for every shape
+PROMPT_LEN = 16
+SHORT_NEW, TAIL_NEW = 4, 64
+N_SHORT_REQS = 12
+N_PRESSURE_REQS = 8
+
+
+def _serve_config(smoke: bool):
+    """Mid-size config for the full run: decode cost must be dominated by
+    per-row work (attention + per-token matmuls), not per-launch dispatch,
+    for the replica-shape comparison to measure the paper's effect."""
+    from repro.configs import smoke_config
+    cfg = smoke_config("qwen3-0.6b")
+    if smoke:
+        return cfg
+    return dataclasses.replace(
+        cfg, name="qwen3-serve", n_layers=4, d_model=256, n_heads=8,
+        n_kv_heads=4, d_ff=1024, vocab_size=4096, head_dim=64)
+
+
+def _short_trace(vocab: int):
+    """Heavy-tailed short-request traffic: the two stragglers sit at
+    submission positions 0 and 4, so round-robin co-locates them on one
+    replica in every shape (1, 2, or 4 replicas) - the narrow shapes
+    quarantine the tail instead of stalling the whole slot pool on it."""
+    from repro.serving import Request
+    reqs = []
+    for i in range(N_SHORT_REQS):
+        prompt = [(5 * i + j) % vocab for j in range(PROMPT_LEN)]
+        max_new = TAIL_NEW if i in (0, 4) else SHORT_NEW
+        reqs.append(Request(prompt, max_new, temperature=0.0, rid=i))
+    return reqs
+
+
+def _pressure_trace(vocab: int):
+    """8 concurrent worst cases of 5 blocks each = 40 blocks against the
+    32-block pool: overcommit admission must preempt to serve this."""
+    from repro.serving import Request
+    return [Request([(7 * i + j) % vocab for j in range(PROMPT_LEN)],
+                    TAIL_NEW, temperature=0.0, rid=i)
+            for i in range(N_PRESSURE_REQS)]
+
+
+def _warmup(eng, vocab: int, slots: int):
+    from repro.serving import Request
+    eng.generate([Request([j % vocab for j in range(PROMPT_LEN)], 2,
+                          rid=-1) for _ in range(slots)])
+
+
+def _stats_line(s):
+    return (f"tok/s={s.tokens_per_s:.1f};occ={s.occupancy:.2f};"
+            f"steps={s.decode_steps};preempted={s.preempted};"
+            f"requeued={s.requeued};router={s.router_policy or '-'};"
+            f"pool_util_peak={s.block_util_peak:.2f}")
+
+
+def run(smoke: bool = False):
+    from repro.models import build_model
+    from repro.serving import ClusterEngine, ServeEngine
+
+    cfg = _serve_config(smoke)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    vocab = cfg.vocab_size
+    pool_kw = dict(cache_len=CACHE_LEN, block_size=BLOCK,
+                   n_blocks=POOL_POSITIONS // BLOCK + 1)
+
+    # ---- short-request sweep: 1x8 vs 2x4 vs 4x2 ----------------------
+    reqs = _short_trace(vocab)
+    rids = [r.rid for r in reqs]
+
+    single = ServeEngine(model, params, max_batch=TOTAL_SLOTS,
+                         kv_layout="paged", **pool_kw)
+    _warmup(single, vocab, TOTAL_SLOTS)
+    ref = [r.tokens for r in single.generate(reqs)]
+    s = single.last_stats
+    emit("cluster_single_1x8", s.wall_s * 1e6, _stats_line(s))
+
+    toks_per_s = {}
+    for replicas in (1, 2, 4):
+        shape = f"{replicas}x{TOTAL_SLOTS // replicas}"
+        cl = ClusterEngine(model, params, replicas=replicas,
+                           total_slots=TOTAL_SLOTS, router="round_robin",
+                           **pool_kw)
+        _warmup(cl, vocab, TOTAL_SLOTS)
+        got = [r.tokens for r in cl.generate(reqs)]
+        check_tokens("bench_cluster/short", "single", ref, shape, got,
+                     rids)
+        s = cl.last_stats
+        toks_per_s[shape] = s.tokens_per_s
+        emit(f"cluster_{shape}", s.wall_s * 1e6, _stats_line(s))
+
+    base = toks_per_s["1x8"]
+    best = max((v, k) for k, v in toks_per_s.items() if k != "1x8")
+    emit("cluster_speedup", "",
+         f"best_small={best[1]} {best[0] / max(base, 1e-9):.2f}x over 1x8 "
+         f"(trace: {N_SHORT_REQS} reqs, tail {TAIL_NEW} @ {{0,4}}, "
+         f"{TOTAL_SLOTS} total slots, {POOL_POSITIONS}-pos shared pool)")
+    if not smoke:
+        assert best[0] > base, (
+            f"many-small shapes did not beat 1x8: {toks_per_s}")
+
+    # ---- pressure trace: preemption vs worst-case reservation --------
+    preqs = _pressure_trace(vocab)
+    prids = [r.rid for r in preqs]
+
+    # pow2 bucketing on both pressure engines: every preemption re-prefills
+    # at a new prompt+prefix length, and bucketing collapses those to a
+    # handful of compiled shapes (outputs are unchanged - asserted below)
+    # reserve admission on the same pool: admissions serialize so lazy
+    # growth can never fail (the pre-PR behavior; never preempts)
+    reserve = ServeEngine(model, params, max_batch=TOTAL_SLOTS,
+                          kv_layout="paged", admission="reserve",
+                          bucket="pow2", **pool_kw)
+    _warmup(reserve, vocab, TOTAL_SLOTS)
+    pref = [r.tokens for r in reserve.generate(preqs)]
+    s = reserve.last_stats
+    emit("cluster_pressure_reserve", s.wall_s * 1e6, _stats_line(s))
+
+    cl = ClusterEngine(model, params, replicas=2, total_slots=TOTAL_SLOTS,
+                       router="round_robin", admission="overcommit",
+                       bucket="pow2", **pool_kw)
+    _warmup(cl, vocab, TOTAL_SLOTS)
+    pgot = [r.tokens for r in cl.generate(preqs)]
+    s = cl.last_stats
+    emit("cluster_pressure_preempt", s.wall_s * 1e6, _stats_line(s))
+    check_tokens("bench_cluster/pressure", "reserve", pref, "preempt",
+                 pgot, prids)
+    assert s.preempted >= 1, (
+        "pressure trace exercised no preemption (pool too large or "
+        "admission not overcommitted?)")
+    served = all(len(t) == r.max_new_tokens for t, r in zip(pgot, preqs))
+    assert served, "cluster failed to serve the full pressure trace"
+    assert cl.pool.n_live == 0 and cl.pool.n_reserved == 0, (
+        "shared pool leaked blocks after drain")
+    emit("cluster_pressure_admission", "",
+         f"worst_case={N_PRESSURE_REQS * 5}blocks;"
+         f"pool={POOL_POSITIONS // BLOCK}blocks;"
+         f"preempted={s.preempted};requeued={s.requeued};served=all"
+         f"({N_PRESSURE_REQS})")
+    return toks_per_s
+
+
+if __name__ == "__main__":
+    import os
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    print("name,us_per_call,derived")
+    run(smoke="--smoke" in sys.argv)

@@ -15,8 +15,9 @@ block pool holds exactly the dense layout's KV footprint
 (``max_batch * cache_len`` positions), yet it admits a trace whose
 *summed* KV footprint exceeds that capacity, because finished requests
 return their blocks immediately instead of holding a worst-case
-``cache_len`` reservation.  The bench asserts paged greedy tokens match
-the dense run token-for-token, so CI catches layout divergence.
+``cache_len`` reservation.  The bench checks paged greedy tokens match
+the dense run token-for-token and exits non-zero with a per-request
+diff summary on divergence, so CI catches layout drift diagnosably.
 
 Emits ``name,us_per_call,derived`` CSV rows like the other benches:
   serving_lockstep,<wall_us>,tok/s=...;occ=...
@@ -29,7 +30,7 @@ Emits ``name,us_per_call,derived`` CSV rows like the other benches:
 """
 import jax
 
-from benchmarks.common import emit
+from benchmarks.common import check_tokens, emit
 
 MAX_BATCH = 4
 CACHE_LEN = 128
@@ -89,10 +90,13 @@ def run(smoke: bool = False):
                      f";compiles={s.prefill_compiles}")
         emit(f"serving_{name}", s.wall_s * 1e6,
              f"tok/s={s.tokens_per_s:.1f};occ={s.occupancy:.2f};"
-             f"steps={s.decode_steps};ttft_ms={s.ttft_ms_mean:.1f}" + extra)
+             f"steps={s.decode_steps};ttft_ms={s.ttft_ms_mean:.1f};"
+             f"preempted={s.preempted};requeued={s.requeued}" + extra)
 
-    assert tokens["paged"] == tokens["continuous"], \
-        "paged KV layout diverged from dense greedy tokens"
+    # exit non-zero with a per-request diff summary on divergence (a bare
+    # assert left CI logs undiagnosable)
+    check_tokens("bench_serving", "continuous", tokens["continuous"],
+                 "paged", tokens["paged"], [r.rid for r in reqs])
 
     speedup = (stats["continuous"].tokens_per_s
                / max(stats["lockstep"].tokens_per_s, 1e-9))

@@ -15,6 +15,43 @@ def timeit(fn, *args, warmup=2, iters=5):
     return (time.perf_counter() - t0) / iters * 1e6  # us
 
 
+def token_diff_summary(name_a: str, toks_a, name_b: str, toks_b, rids):
+    """Human-readable per-request divergence lines for two token-list
+    sets (empty when identical).  Benches print these and exit non-zero
+    instead of tripping a bare assert, so CI failures are diagnosable
+    from the log."""
+    lines = []
+    if not (len(toks_a) == len(toks_b) == len(rids)):
+        lines.append(
+            f"  result-count mismatch: {name_a} has {len(toks_a)}, "
+            f"{name_b} has {len(toks_b)}, trace has {len(rids)} requests")
+    for ta, tb, rid in zip(toks_a, toks_b, rids):
+        if ta == tb:
+            continue
+        k = 0
+        while k < min(len(ta), len(tb)) and ta[k] == tb[k]:
+            k += 1
+        lines.append(
+            f"  rid={rid}: first divergence at token {k} "
+            f"({name_a}[{k}:{k + 4}]={ta[k:k + 4]} vs "
+            f"{name_b}[{k}:{k + 4}]={tb[k:k + 4]}; "
+            f"lengths {len(ta)} vs {len(tb)})")
+    return lines
+
+
+def check_tokens(label: str, name_a: str, toks_a, name_b: str, toks_b,
+                 rids):
+    """Exit non-zero with a diff summary when two token sets mismatch."""
+    lines = token_diff_summary(name_a, toks_a, name_b, toks_b, rids)
+    if lines:
+        print(f"[{label}] TOKEN MISMATCH: {name_a} vs {name_b} "
+              f"({len(lines)} of {len(rids)} requests diverge)",
+              file=sys.stderr)
+        for ln in lines:
+            print(ln, file=sys.stderr)
+        sys.exit(1)
+
+
 def emit(name: str, us_per_call, derived):
     us = f"{us_per_call:.1f}" if isinstance(us_per_call, float) else us_per_call
     print(f"{name},{us},{derived}")

@@ -2,6 +2,10 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
       --prompts "1 2 3" "4 5" --max-new 16
+
+``--replicas N`` (N > 1) serves through a multi-replica cluster instead:
+N narrow engines behind a ``--router`` policy sharing one KV block pool,
+with preemption under pool pressure (see repro.serving.cluster).
 """
 from __future__ import annotations
 
@@ -11,7 +15,7 @@ import jax
 
 from ..configs import get_config, list_archs, smoke_config
 from ..models import build_model
-from ..serving import Request, ServeEngine
+from ..serving import ROUTER_POLICIES, ClusterEngine, Request, ServeEngine
 
 
 def main():
@@ -36,6 +40,13 @@ def main():
     ap.add_argument("--bucket", default=None,
                     help="prefill length bucketing: 'pow2' or an integer "
                          "pad-to-multiple (default: exact lengths)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve through a cluster of this many engine "
+                         "replicas sharing one KV pool (--max-batch is the "
+                         "cluster's total slot budget)")
+    ap.add_argument("--router", default="round_robin",
+                    choices=list(ROUTER_POLICIES),
+                    help="cluster request-routing policy (--replicas > 1)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -44,10 +55,21 @@ def main():
     params = model.init(jax.random.key(args.seed))
     bucket = (int(args.bucket) if args.bucket and args.bucket != "pow2"
               else args.bucket)
-    eng = ServeEngine(model, params, max_batch=args.max_batch,
-                      cache_len=args.cache_len, mode=args.mode,
-                      kv_layout=args.kv_layout, block_size=args.block_size,
-                      n_blocks=args.n_blocks, bucket=bucket)
+    if args.replicas > 1:
+        if args.mode != "auto" or args.kv_layout != "dense":
+            ap.error("--replicas > 1 always serves paged+continuous; "
+                     "drop --mode/--kv-layout")
+        eng = ClusterEngine(model, params, replicas=args.replicas,
+                            total_slots=args.max_batch,
+                            cache_len=args.cache_len, router=args.router,
+                            block_size=args.block_size,
+                            n_blocks=args.n_blocks, bucket=bucket)
+    else:
+        eng = ServeEngine(model, params, max_batch=args.max_batch,
+                          cache_len=args.cache_len, mode=args.mode,
+                          kv_layout=args.kv_layout,
+                          block_size=args.block_size,
+                          n_blocks=args.n_blocks, bucket=bucket)
     reqs = [Request([int(t) % cfg.vocab_size for t in p.split()],
                     args.max_new, args.temperature, rid=i)
             for i, p in enumerate(args.prompts)]
@@ -56,12 +78,14 @@ def main():
               f"decode={r.decode_ms_per_tok:.1f}ms/tok tokens={r.tokens}")
     s = eng.last_stats
     paged = (f" block_util_peak={s.block_util_peak:.2f}"
+             f" preempted={s.preempted} requeued={s.requeued}"
              if s.kv_layout == "paged" else "")
+    cluster = f" router={s.router_policy}" if s.router_policy else ""
     print(f"[serve] mode={s.mode} kv={s.kv_layout} "
           f"tokens/s={s.tokens_per_s:.1f} "
           f"generated={s.generated_tokens} steps={s.decode_steps} "
           f"occupancy={s.occupancy:.2f} ttft_mean={s.ttft_ms_mean:.1f}ms "
-          f"prefill_compiles={s.prefill_compiles}{paged}")
+          f"prefill_compiles={s.prefill_compiles}{paged}{cluster}")
 
 
 if __name__ == "__main__":

@@ -1,2 +1,4 @@
+from .cluster import ROUTER_POLICIES, ClusterEngine
 from .engine import EngineStats, Request, Result, ServeEngine
-from .kvcache import BlockAllocator, BlockPoolStats, blocks_needed
+from .kvcache import (BlockAllocator, BlockPoolStats, PoolPressure,
+                      blocks_needed)

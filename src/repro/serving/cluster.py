@@ -1,0 +1,271 @@
+"""Multi-replica serving cluster: router + shared KV pool + preemption.
+
+Ara2's headline multi-core result (§7) is that eight 2-lane cores with 16
+FPUs beat one 16-lane core with the same 16 FPUs by >3x on matmul: many
+small issue streams overcome the single scalar-core issue-rate bound, and
+the cluster scales physically because each core only talks to its slice
+of the memory system.  The serving analog built here:
+
+* ``ClusterEngine`` owns N ``ServeEngine`` replicas, each with
+  ``max_batch = total_slots / N`` decode slots - the "cores".  A wide
+  single engine pays its full fixed-shape decode width on every step even
+  when most slots idle (the drain tail of short-request traffic); narrow
+  replicas strand at most their own width, and a fully drained replica
+  skips its step entirely.
+
+* a **router** admits from one global FIFO queue into whichever replica
+  has a free slot.  Three policies pick among candidates:
+
+  - ``round_robin``   - cyclic over replicas (the paper's static
+                        interleaving of elements over cores),
+  - ``least_loaded``  - fewest busy slots,
+  - ``shortest_queue`` - smallest outstanding decode-token backlog.
+
+  Greedy outputs are policy-independent (asserted in tests): placement
+  only changes *when* a request runs, and sampling streams are keyed by
+  request id, not slot or replica (see ``engine._sample_rows``).
+
+* replicas draw KV blocks from one **shared**
+  :class:`repro.serving.kvcache.BlockAllocator` (per-owner accounting:
+  owner = replica index) under ``admission="overcommit"``: a request is
+  admitted as soon as its *prefill* fits, instead of reserving its worst
+  case.  When a replica's lazy block growth then finds the pool empty
+  (:class:`repro.serving.kvcache.PoolPressure`), the cluster **preempts**
+  the lowest-priority / youngest-admitted request anywhere in the
+  cluster: its blocks are freed, and it is re-queued carrying its
+  generated prefix (``Request.done``) for re-prefill on a later
+  admission.  Request-id-keyed sampling makes the resumed stream
+  identical to the uninterrupted one, so preemption is invisible in the
+  output (asserted in tests/benches).  ``admission="reserve"`` is also
+  accepted for a no-preemption cluster.
+
+Device-memory caveat: each replica's device-side block pool is sized to
+the full shared pool so that the shared allocator's block ids index it
+directly; block *accounting* (capacity, admission, preemption, the
+benchmark's fixed 512-position budget) is pool-global, but the device
+arrays themselves are per-replica.  Folding them into one donated buffer
+threaded through the replicas' jitted decode steps is an open item.
+"""
+from __future__ import annotations
+
+import collections
+import time
+
+import jax
+import numpy as np
+
+from ..models.model import Model
+from .engine import EngineStats, Request, Result, ServeEngine
+from .kvcache import BlockAllocator, PoolPressure, blocks_needed
+
+ROUTER_POLICIES = ("round_robin", "least_loaded", "shortest_queue")
+
+
+class ClusterEngine:
+    """N narrow ServeEngine replicas behind a router, sharing one KV block
+    pool.
+
+    replicas / total_slots: replica count and the summed slot budget
+    (``total_slots % replicas == 0``); each replica runs the continuous
+    scheduler with the paged KV layout.  block_size / n_blocks size the
+    shared pool - n_blocks defaults to the dense footprint of the whole
+    cluster (total_slots * cache_len positions) plus the null block.
+    router: one of ``ROUTER_POLICIES``.  admission: "overcommit"
+    (default; preemption resolves pool pressure) or "reserve".
+
+    ``generate`` mirrors ``ServeEngine.generate``; ``last_stats`` is the
+    cluster-level aggregate (mode="cluster", ``router_policy`` set) and
+    ``replica_stats`` keeps the per-replica EngineStats.
+    """
+
+    def __init__(self, model: Model, params, *, replicas: int = 2,
+                 total_slots: int = 8, cache_len: int = 1024,
+                 router: str = "round_robin", block_size: int = 16,
+                 n_blocks: int | None = None,
+                 bucket: str | int | None = None,
+                 extra_inputs: dict | None = None,
+                 admission: str = "overcommit"):
+        if router not in ROUTER_POLICIES:
+            raise ValueError(f"router={router!r}: pick one of "
+                             f"{ROUTER_POLICIES}")
+        if replicas < 1 or total_slots % replicas:
+            raise ValueError(
+                f"total_slots={total_slots} must be a positive multiple of "
+                f"replicas={replicas}")
+        if model.decode_paged is None:
+            raise ValueError(
+                f"ClusterEngine needs the paged KV layout but family "
+                f"{model.cfg.family!r} has no paged cache hooks")
+        self.router = router
+        self.total_slots = total_slots
+        if n_blocks is None:
+            n_blocks = total_slots * blocks_needed(cache_len, block_size) + 1
+        self.pool = BlockAllocator(n_blocks, block_size)
+        self.engines = [
+            ServeEngine(model, params, max_batch=total_slots // replicas,
+                        cache_len=cache_len, extra_inputs=extra_inputs,
+                        mode="continuous", kv_layout="paged",
+                        bucket=bucket, allocator=self.pool,
+                        admission=admission, owner=i)
+            for i in range(replicas)]
+        self.last_stats: EngineStats | None = None
+        self.replica_stats: list[EngineStats] = []
+        self._rr = 0
+
+    # ------------------------------------------------------------------
+    # Routing.
+    # ------------------------------------------------------------------
+
+    def _route(self, r: Request) -> ServeEngine | None:
+        """Pick the replica to admit ``r`` into, or None when no replica
+        has both a free slot and pool headroom (head-of-line blocking:
+        admission is strictly FIFO over the global queue)."""
+        cands = [e for e in self.engines
+                 if e.session_free_slot() is not None
+                 and e.session_can_admit(r)]
+        if not cands:
+            return None
+        if self.router == "round_robin":
+            n = len(self.engines)
+            for off in range(n):
+                e = self.engines[(self._rr + off) % n]
+                if e in cands:
+                    self._rr = (self._rr + off + 1) % n
+                    return e
+        if self.router == "least_loaded":
+            return min(cands, key=lambda e: (e.session_active,
+                                             self.engines.index(e)))
+        return min(cands, key=lambda e: (e.session_backlog(),
+                                         self.engines.index(e)))
+
+    # ------------------------------------------------------------------
+    # Preemption.
+    # ------------------------------------------------------------------
+
+    def _pick_victim(self, excl_engine, excl_slot):
+        """Lowest-priority, then youngest-admitted live request anywhere in
+        the cluster, excluding the slot whose growth raised the pressure
+        (preempting the requester would just redo its own work)."""
+        cands = []
+        for e in self.engines:
+            if e.session_active == 0:
+                continue
+            for i, s in e.session_slots():
+                if e is excl_engine and i == excl_slot:
+                    continue
+                cands.append((s.req.priority, -s.admit_seq, e, i))
+        if not cands:
+            return None
+        _, _, e, i = min(cands, key=lambda c: (c[0], c[1]))
+        return e, i
+
+    def _requeue(self, queue, item) -> None:
+        """Insert a preempted request back into the global queue keeping it
+        sorted by submission order (a preempted request was admitted before
+        anything still queued, so FIFO fairness puts it first - but two
+        preemptions can land out of order)."""
+        queue.append(item)
+        ordered = sorted(queue)
+        queue.clear()
+        queue.extend(ordered)
+
+    # ------------------------------------------------------------------
+    # Public API.
+    # ------------------------------------------------------------------
+
+    def generate(self, requests: list[Request], key=None) -> list[Result]:
+        key = key if key is not None else jax.random.key(0)
+        requests = list(requests)
+        todo = [(i, r) for i, r in enumerate(requests)
+                if r.max_new_tokens - len(r.done) > 0]
+        results = [Result(r.rid, list(r.done)) for r in requests]
+        if not todo:
+            self.replica_stats = []
+            self.last_stats = self._aggregate([], 0.0, 0, 0, 0)
+            return results
+        for _, r in todo:
+            self.engines[0].check_request(r)
+        self.pool.reset_peak()
+        # every replica gets the same base key: sampling streams are keyed
+        # by request id, so placement cannot change sampled outputs
+        for e in self.engines:
+            e.begin_session(key)
+        queue = collections.deque(
+            (seq, order, r) for seq, (order, r) in enumerate(todo))
+        out: list[Result | None] = [None] * len(todo)
+        admit_seq = 0
+        preempts = 0
+        t_start = time.perf_counter()
+        try:
+            while queue or any(e.session_active for e in self.engines):
+                # route: FIFO head into a replica with slot + pool headroom
+                while queue:
+                    e = self._route(queue[0][2])
+                    if e is None:
+                        break
+                    seq, order, r = queue.popleft()
+                    res = e.session_admit(r, tag=seq, extra_row=order,
+                                          admit_seq=admit_seq)
+                    admit_seq += 1
+                    if res is not None:
+                        out[seq] = res
+                stepped = False
+                for e in self.engines:
+                    if e.session_active == 0:
+                        continue      # a drained replica skips its step
+                    while True:
+                        try:
+                            finished = e.session_step()
+                            break
+                        except PoolPressure as p:
+                            victim = self._pick_victim(e, p.slot)
+                            if victim is None:
+                                raise   # nothing to evict: genuine OOM
+                            ve, vi = victim
+                            tag, r2 = ve.session_preempt(vi)
+                            preempts += 1
+                            self._requeue(queue, (tag, todo[tag][0], r2))
+                    for tag, res in finished:
+                        out[tag] = res
+                    stepped = True
+                if not stepped and queue:
+                    # no replica active and the head cannot be admitted:
+                    # impossible once check_request passed (an idle cluster
+                    # has every block free), so fail loudly over spinning
+                    raise RuntimeError(
+                        "cluster stalled with a non-empty queue")
+        except BaseException:
+            for e in self.engines:
+                e.session_abort()
+            raise
+        wall = time.perf_counter() - t_start
+        ttfts = [t for e in self.engines for t in e.session_ttfts()]
+        slot_steps = [e.session_slot_steps() for e in self.engines]
+        busy = sum(b for b, _ in slot_steps)
+        offered = sum(o for _, o in slot_steps)
+        self.replica_stats = [e.end_session() for e in self.engines]
+        self.last_stats = self._aggregate(ttfts, wall, preempts, busy,
+                                          offered)
+        for (i, _), res in zip(todo, out):
+            results[i] = res
+        return results
+
+    def _aggregate(self, ttfts, wall: float, preempts: int, busy: int,
+                   offered: int) -> EngineStats:
+        """Cluster-level EngineStats over the per-replica stats.  busy /
+        offered: busy and launched slot-steps summed over replicas
+        (capacity-weighted occupancy counts only steps each replica
+        actually launched - a drained replica stops offering lanes)."""
+        reps = self.replica_stats
+        gen = sum(s.generated_tokens for s in reps)
+        steps = sum(s.decode_steps for s in reps)
+        return EngineStats(
+            "cluster", wall, gen, gen / max(wall, 1e-9), steps,
+            busy / max(offered, 1),
+            float(np.mean(ttfts)) if ttfts else 0.0,
+            kv_layout="paged",
+            prefill_compiles=sum(s.prefill_compiles for s in reps),
+            block_util_peak=self.pool.stats().peak_utilization,
+            preempted=preempts,
+            requeued=sum(s.requeued for s in reps),
+            router_policy=self.router)

@@ -38,7 +38,29 @@ Continuous mode supports two KV layouts (``kv_layout``):
   so a trace whose summed KV footprint exceeds ``max_batch * cache_len``
   still serves as long as the *concurrently live* footprint fits the pool.
   ``cache_len`` remains only the per-request context bound (the block
-  table's width).
+  table's width).  The allocator may be *external and shared* between
+  engines (``allocator=``): a multi-replica cluster
+  (``repro.serving.cluster.ClusterEngine``) passes one pool to every
+  replica, tagging allocations with ``owner=``.
+
+Paged admission policies (``admission=``):
+
+* ``reserve`` (default) - admit only when the pool covers the request's
+  worst case beyond standing reservations; lazy growth can never fail.
+* ``overcommit`` - admit when the *prefill* fits; lazy growth may then
+  find the pool empty, which raises
+  :class:`repro.serving.kvcache.PoolPressure` out of ``session_step`` so
+  a cluster scheduler can preempt a victim (``session_preempt``: blocks
+  freed, request re-queued carrying its generated prefix in
+  ``Request.done`` for re-prefill) and retry.  Overcommit is a cluster
+  driver mode - plain ``generate`` on an overcommitted engine propagates
+  the pressure error instead of preempting.
+
+The continuous scheduler is exposed as a *stepwise session API*
+(``begin_session`` / ``session_admit`` / ``session_step`` /
+``session_preempt`` / ``end_session``) so an outer scheduler can
+interleave several engines over one pool; ``generate`` drives the same
+API for the single-engine case.
 
 Prompt-length bucketing (``bucket=``): prompts are prefilled at their
 exact length by default - one compile per distinct length.  With
@@ -47,9 +69,16 @@ right-padded up to the bucket boundary and the true length rides in
 ``batch["prefill_len"]``; causal masking hides the pads, so outputs are
 identical while compiles drop to one per bucket
 (``EngineStats.prefill_compiles`` counts distinct compiled prefill
-shapes).  Per-request sampling is vectorized: temperature<=0 rows take
-argmax (deterministic regardless of the shared PRNG key), temperature>0
-rows sample at their own temperature - never at the batch max.
+shapes).
+
+Per-request sampling is vectorized and **request-keyed**: row ``i``'s
+``t``-th token is sampled with ``fold_in(fold_in(key, rid_i), t)``, so a
+request's sampled stream depends only on its ``rid`` and the base key -
+never on which slot, step, replica, or scheduler served it (and a
+preempted request resumes its stream exactly where it stopped).
+Temperature<=0 rows take argmax (deterministic regardless of the key);
+temperature>0 rows sample at their own temperature - never at the batch
+max.
 """
 from __future__ import annotations
 
@@ -64,15 +93,23 @@ import numpy as np
 
 from ..models.model import Model
 from . import kvcache
-from .kvcache import BlockAllocator, blocks_needed
+from .kvcache import BlockAllocator, PoolPressure, blocks_needed
 
 
 @dataclasses.dataclass
 class Request:
     prompt: list[int]
-    max_new_tokens: int = 32
+    max_new_tokens: int = 32       # total budget, including ``done``
     temperature: float = 0.0
     rid: int = 0
+    priority: int = 0              # preemption picks the lowest first
+    # tokens already generated before this (re)admission: set by
+    # session_preempt when a request is re-queued; prefill covers
+    # prompt + done and sampling resumes at stream index len(done)
+    done: tuple = ()
+    # time-to-first-token of the *first* admission, carried across
+    # preemptions so Result.prefill_ms stays the request's real TTFT
+    first_ttft_ms: float | None = None
 
 
 @dataclasses.dataclass
@@ -96,14 +133,18 @@ class EngineStats:
     kv_layout: str = "dense"
     prefill_compiles: int = 0      # distinct prefill shapes compiled so far
     block_util_peak: float = 0.0   # paged: peak live blocks / pool capacity
+    preempted: int = 0             # requests evicted under pool pressure
+    requeued: int = 0              # re-admissions of preempted requests
+    router_policy: str = ""        # cluster-level: routing policy used
 
 
 @dataclasses.dataclass
 class _Slot:
     req: Request
-    order: int                     # submission index (stable result order)
-    tokens: list[int]
+    tag: int                       # caller's result index (``tag`` arg)
+    tokens: list[int]              # tokens generated *this* admission
     ttft_ms: float
+    admit_seq: int = 0             # global admission order (victim pick)
     decode_s: float = 0.0
     steps: int = 0
     # paged layout bookkeeping
@@ -112,15 +153,41 @@ class _Slot:
     reserve_left: int = 0          # worst-case blocks not yet allocated
 
 
-def _sample_rows(logits, temps, key):
+@dataclasses.dataclass
+class _Session:
+    """Mutable state of one stepwise continuous-batching run."""
+    key: Any                       # base PRNG key (rid/step-keyed streams)
+    slots: list
+    toks: np.ndarray               # (B, 1) next-token feed
+    temps: np.ndarray              # (B,) per-slot temperature
+    rids: np.ndarray               # (B,) per-slot request id
+    tok_idx: np.ndarray            # (B,) next sample's stream index
+    ttfts: list
+    t_start: float
+    cache: Any = None
+    decode_steps: int = 0
+    busy_steps: int = 0
+    gen_tokens: int = 0
+    preempted: int = 0
+    requeued: int = 0
+    admit_counter: int = 0
+
+
+def _sample_rows(logits, temps, key, rids, tok_idx):
     """Per-row temperature sampling over (B, V) logits.
 
-    temps: (B,).  Rows with temperature <= 0 take argmax (greedy,
-    independent of the key); rows with temperature > 0 sample a categorical
-    at their own temperature."""
+    Row ``i`` uses the key ``fold_in(fold_in(key, rids[i]), tok_idx[i])``,
+    so a request's sampled stream is a pure function of (base key, rid,
+    token index) - independent of slot, step order, and batch composition.
+    Rows with temperature <= 0 take argmax (greedy, key-independent);
+    rows with temperature > 0 sample a categorical at their own
+    temperature."""
+    keys = jax.vmap(
+        lambda r, t: jax.random.fold_in(jax.random.fold_in(key, r), t)
+    )(rids, tok_idx)
     greedy = jnp.argmax(logits, axis=-1)
     safe = jnp.maximum(temps, 1e-6)[:, None]
-    sampled = jax.random.categorical(key, logits / safe, axis=-1)
+    sampled = jax.vmap(jax.random.categorical)(keys, logits / safe)
     return jnp.where(temps > 0.0, sampled, greedy)
 
 
@@ -139,23 +206,31 @@ class ServeEngine:
     kv_layout: "dense" or "paged" (continuous mode only; see module doc).
     block_size / n_blocks size the paged pool - n_blocks defaults to the
     dense layout's footprint (max_batch * cache_len positions) plus the
-    null block.  bucket: None (exact-length prefills), "pow2", or an
-    integer pad-to-multiple.
+    null block.  ``allocator=`` injects an external (shared) pool instead;
+    ``owner=`` tags this engine's allocations in it; ``admission=``
+    selects "reserve" (default) or "overcommit" (cluster preemption mode).
+    bucket: None (exact-length prefills), "pow2", or an integer
+    pad-to-multiple.
     """
 
     def __init__(self, model: Model, params, *, max_batch: int = 8,
                  cache_len: int = 1024, extra_inputs: dict | None = None,
                  mode: str = "auto", kv_layout: str = "dense",
-                 block_size: int = 16, n_blocks: int | None = None,
-                 bucket: str | int | None = None):
+                 block_size: int | None = None,
+                 n_blocks: int | None = None,
+                 bucket: str | int | None = None,
+                 allocator: BlockAllocator | None = None,
+                 admission: str = "reserve", owner: Any = 0):
         assert mode in ("auto", "continuous", "lockstep"), mode
         assert kv_layout in ("dense", "paged"), kv_layout
+        assert admission in ("reserve", "overcommit"), admission
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.cache_len = cache_len
         self.extra = extra_inputs or {}
         self.bucket = bucket
+        self.owner = owner
         slot_capable = model.cache_slot_write is not None
         if mode == "auto":
             mode = "continuous" if slot_capable else "lockstep"
@@ -169,21 +244,46 @@ class ServeEngine:
             if mode != "continuous":
                 raise ValueError(
                     "kv_layout='paged' requires the continuous scheduler")
+        elif allocator is not None:
+            raise ValueError("allocator= requires kv_layout='paged'")
+        elif admission != "reserve":
+            raise ValueError("admission='overcommit' requires "
+                             "kv_layout='paged'")
         self.mode = mode
         self.kv_layout = kv_layout
+        self._admission = admission
         self.last_stats: EngineStats | None = None
         self._prefill_shapes: set[int] = set()   # compiled prefill lengths
-        # the cache is dead after every call that consumes it - donate so
-        # XLA updates the multi-GB KV buffers in place instead of copying
+        self._sess: _Session | None = None
         self._sample = jax.jit(_sample_rows)
         self._slot_capable = slot_capable
+        # the cache is dead after every call that consumes it - donate so
+        # XLA updates the multi-GB KV buffers in place instead of copying
         if kv_layout == "paged":
+            if allocator is not None:
+                if n_blocks is not None:
+                    raise ValueError(
+                        "n_blocks conflicts with an external allocator "
+                        "(the pool is already sized)")
+                if block_size is not None \
+                        and block_size != allocator.block_size:
+                    raise ValueError(
+                        f"block_size={block_size} conflicts with the "
+                        f"external allocator's {allocator.block_size}")
+                self._owns_pool = False
+                block_size = allocator.block_size
+            else:
+                self._owns_pool = True
+                if block_size is None:
+                    block_size = 16
             self.block_size = block_size
             self.max_blocks = blocks_needed(cache_len, block_size)
-            if n_blocks is None:
-                n_blocks = max_batch * self.max_blocks + 1
-            self.allocator = BlockAllocator(n_blocks, block_size)
-            self._reserved = 0     # worst-case blocks promised, not yet live
+            if allocator is None:
+                if n_blocks is None:
+                    n_blocks = max_batch * self.max_blocks + 1
+                allocator = BlockAllocator(n_blocks, block_size)
+            allocator.claim_policy(admission)
+            self.allocator = allocator
             # prefill at the (bucketed) prompt length - the paged write
             # scatters it into blocks, no cache_len padding needed
             self._prefill = jax.jit(
@@ -211,41 +311,48 @@ class ServeEngine:
     def generate(self, requests: list[Request], key=None) -> list[Result]:
         key = key if key is not None else jax.random.key(0)
         requests = list(requests)
-        if not requests or all(r.max_new_tokens <= 0 for r in requests):
+        todo = [(i, r) for i, r in enumerate(requests)
+                if r.max_new_tokens - len(r.done) > 0]
+        if not todo:
             self.last_stats = EngineStats(
                 self.mode, 0.0, 0, 0.0, 0, 0.0, 0.0,
                 kv_layout=self.kv_layout,
                 prefill_compiles=len(self._prefill_shapes))
-            return [Result(r.rid, []) for r in requests]
-        # max_new_tokens <= 0 requests produce no tokens and never occupy
-        # a slot; everything else goes to the scheduler
-        todo = [(i, r) for i, r in enumerate(requests)
-                if r.max_new_tokens > 0]
+            return [Result(r.rid, list(r.done)) for r in requests]
         if self.kv_layout == "paged":
             # reject impossible requests before any work is scheduled: a
             # raise mid-schedule would abort the batch with blocks still
-            # allocated (and _can_admit would otherwise stall forever on a
+            # allocated (and admission would otherwise stall forever on a
             # request that can never fit)
             for _, r in todo:
-                self._check_budget(self._n_prefix() + len(r.prompt),
-                                   r.max_new_tokens, r.rid)
-                worst = self._worst_blocks(r)
-                if worst > self.allocator.capacity:
-                    raise ValueError(
-                        f"request rid={r.rid} needs {worst} KV blocks "
-                        f"(block_size={self.block_size}) but the pool only "
-                        f"has {self.allocator.capacity}")
+                self.check_request(r)
         if self.mode == "continuous":
             done = self._generate_continuous(todo, key)
         else:
             done = self._generate_lockstep(todo, key)
-        results = [Result(r.rid, []) for r in requests]
+        # requests with an exhausted budget produce their prefix verbatim
+        # and never occupy a slot; everything else went to the scheduler
+        results = [Result(r.rid, list(r.done)) for r in requests]
         for (i, _), res in zip(todo, done):
             results[i] = res
         return results
 
+    def check_request(self, r: Request) -> None:
+        """Reject a request that can never be served: context overflow, or
+        (paged) a worst case larger than the whole pool."""
+        self._check_budget(
+            self._n_prefix() + len(r.prompt) + len(r.done),
+            r.max_new_tokens - len(r.done), r.rid)
+        if self.kv_layout == "paged":
+            worst = self._worst_blocks(r)
+            if worst > self.allocator.capacity:
+                raise ValueError(
+                    f"request rid={r.rid} needs {worst} KV blocks "
+                    f"(block_size={self.block_size}) but the pool only "
+                    f"has {self.allocator.capacity}")
+
     # ------------------------------------------------------------------
-    # Continuous batching (slot pool + admission scheduler).
+    # Admission accounting helpers.
     # ------------------------------------------------------------------
 
     def _gather_extra(self, rows: list[int]) -> dict:
@@ -293,29 +400,115 @@ class ServeEngine:
             b = -(-n // int(self.bucket)) * int(self.bucket)
         return max(min(b, self.cache_len - self._n_prefix()), n)
 
+    def _prefill_need(self, r: Request) -> int:
+        """Blocks the admission prefill itself will allocate."""
+        return blocks_needed(
+            self._n_prefix() + len(r.prompt) + len(r.done), self.block_size)
+
     def _worst_blocks(self, r: Request) -> int:
         """Worst-case block count for a request (all cache positions it can
         ever write), computable before prefill runs."""
-        writes = self._n_prefix() + len(r.prompt) + max(r.max_new_tokens - 1,
-                                                        0)
+        writes = (self._n_prefix() + len(r.prompt) + len(r.done)
+                  + max(r.max_new_tokens - len(r.done) - 1, 0))
         return blocks_needed(writes, self.block_size)
 
-    def _can_admit(self, r: Request) -> bool:
-        """Paged admission: the pool must cover the request's worst case on
-        top of what is already reserved for in-flight requests (so lazy
-        growth can never fail mid-decode).  ``generate`` has already
-        rejected requests that exceed the whole pool, so a False here
-        always clears once live requests finish and recycle blocks."""
-        return (self.allocator.n_free - self._reserved
-                >= self._worst_blocks(r))
+    # ------------------------------------------------------------------
+    # Stepwise session API (one continuous-batching run; ``generate``
+    # drives it for the single-engine case, ClusterEngine interleaves
+    # several engines' sessions over one shared pool).
+    # ------------------------------------------------------------------
 
-    def _admit(self, r: Request, order: int, seq: int, slot: int, cache,
-               key):
-        """Prefill ``r`` into ``slot`` and sample its first token.
+    def begin_session(self, key=None) -> None:
+        if self.mode != "continuous":
+            raise ValueError("stepwise sessions require the continuous "
+                             "scheduler")
+        if self._sess is not None:
+            raise RuntimeError("a session is already open on this engine")
+        bsz = self.max_batch
+        if self.kv_layout == "paged" and self._owns_pool:
+            self.allocator.reset_peak()
+        self._sess = _Session(
+            key=key if key is not None else jax.random.key(0),
+            slots=[None] * bsz,
+            toks=np.zeros((bsz, 1), np.int32),
+            temps=np.zeros((bsz,), np.float32),
+            rids=np.zeros((bsz,), np.int32),
+            tok_idx=np.zeros((bsz,), np.int32),
+            ttfts=[], t_start=time.perf_counter())
 
-        ``order`` is the original submission index (extra-input row);
-        ``seq`` indexes the scheduler's result list."""
-        prompt = np.asarray(r.prompt, np.int32)
+    def _require_session(self) -> _Session:
+        if self._sess is None:
+            raise RuntimeError("no session is open on this engine "
+                               "(call begin_session first)")
+        return self._sess
+
+    @property
+    def session_active(self) -> int:
+        """Busy slot count of the open session (0 when none is open)."""
+        if self._sess is None:
+            return 0
+        return sum(s is not None for s in self._sess.slots)
+
+    def session_free_slot(self) -> int | None:
+        for i, s in enumerate(self._sess.slots):
+            if s is None:
+                return i
+        return None
+
+    def session_slots(self):
+        """Live (slot index, slot) pairs - victim scanning."""
+        return [(i, s) for i, s in enumerate(self._sess.slots)
+                if s is not None]
+
+    def session_backlog(self) -> int:
+        """Outstanding decode tokens across live slots (shortest-queue
+        routing metric)."""
+        return sum(s.req.max_new_tokens - len(s.req.done) - len(s.tokens)
+                   for _, s in self.session_slots())
+
+    def session_ttfts(self) -> list[float]:
+        """First-admission TTFTs recorded so far (cluster aggregation)."""
+        return list(self._require_session().ttfts)
+
+    def session_slot_steps(self) -> tuple[int, int]:
+        """(busy, offered) slot-steps of the open session - offered counts
+        max_batch lanes per launched decode step (cluster occupancy)."""
+        sess = self._require_session()
+        return sess.busy_steps, self.max_batch * sess.decode_steps
+
+    def session_can_admit(self, r: Request) -> bool:
+        """Pool-side admission test (always true for the dense layout,
+        where ``check_request`` already enforced the per-slot budget).
+
+        reserve: the pool must cover the request's worst case on top of
+        standing reservations, so lazy growth can never fail mid-decode.
+        overcommit: only the admission prefill must fit; later growth may
+        raise PoolPressure, resolved by cluster preemption.  A False here
+        always clears once live requests finish and recycle blocks
+        (``check_request`` rejected requests that exceed the whole pool)."""
+        if self.kv_layout != "paged":
+            return True
+        if self._admission == "overcommit":
+            return self.allocator.n_avail >= self._prefill_need(r)
+        return self.allocator.n_avail >= self._worst_blocks(r)
+
+    def session_admit(self, r: Request, tag: int, extra_row: int = 0,
+                      admit_seq: int | None = None) -> Result | None:
+        """Prefill ``r`` into the first free slot and sample its first
+        token.  Returns the finished Result when the token budget is
+        satisfied by the admission itself, else None (the request now
+        occupies a slot).  ``tag`` is echoed back with the Result from
+        ``session_step``; ``extra_row`` indexes ``extra_inputs``;
+        ``admit_seq`` orders admissions globally for victim selection
+        (defaults to a per-engine counter)."""
+        sess = self._require_session()
+        slot = self.session_free_slot()
+        if slot is None:
+            raise RuntimeError("session_admit with no free slot")
+        if admit_seq is None:
+            admit_seq = sess.admit_counter
+        sess.admit_counter = max(sess.admit_counter, admit_seq) + 1
+        prompt = np.asarray(list(r.prompt) + list(r.done), np.int32)
         t0 = time.perf_counter()
         plen = len(prompt)
         sb = self._bucket_len(plen)
@@ -327,161 +520,244 @@ class ServeEngine:
             toks[0, :plen] = prompt
             batch = {"tokens": jnp.asarray(toks),
                      "prefill_len": jnp.asarray([plen], np.int32),
-                     **self._gather_extra([order])}
+                     **self._gather_extra([extra_row])}
         else:
             batch = {"tokens": jnp.asarray(prompt[None]),
-                     **self._gather_extra([order])}
+                     **self._gather_extra([extra_row])}
         self._prefill_shapes.add(batch["tokens"].shape[1])
         logits, sub = self._prefill(self.params, batch)
         # sub["pos"] covers any model-side prefix (e.g. vlm patches)
         prefill_pos = int(np.asarray(sub["pos"]).reshape(()))
-        self._check_budget(prefill_pos, r.max_new_tokens, r.rid)
+        self._check_budget(prefill_pos, r.max_new_tokens - len(r.done),
+                           r.rid)
         blocks: list[int] = []
         reserve_left = 0
         if self.kv_layout == "paged":
             n_pref = blocks_needed(prefill_pos, self.block_size)
-            blocks = self.allocator.alloc_n(n_pref)
-            reserve_left = self._worst_blocks(r) - n_pref
-            self._reserved += reserve_left
-            if cache is None:
-                cache = self.model.paged_cache_init(
+            blocks = self.allocator.alloc_n(n_pref, self.owner)
+            if self._admission == "reserve":
+                reserve_left = self._worst_blocks(r) - n_pref
+                try:
+                    self.allocator.reserve(reserve_left)
+                except MemoryError:
+                    # caller skipped session_can_admit and a co-tenant
+                    # holds the headroom: hand the prefill blocks back
+                    # (they are not in any slot yet, so session_abort
+                    # would never see them)
+                    self.allocator.free(blocks)
+                    raise
+            if sess.cache is None:
+                sess.cache = self.model.paged_cache_init(
                     batch=self.max_batch, n_blocks=self.allocator.n_blocks,
                     block_size=self.block_size, max_blocks=self.max_blocks,
                     dtype=sub["k"].dtype)
             row = np.zeros((self.max_blocks,), np.int32)
             row[:n_pref] = blocks
-            cache = self._paged_write(cache, sub, slot, jnp.asarray(row))
+            sess.cache = self._paged_write(sess.cache, sub, slot,
+                                           jnp.asarray(row))
         else:
-            if cache is None:
-                cache = self._cache_expand(sub, self.max_batch)
-            cache = self._slot_write(cache, sub, slot)
-        tok = self._sample(logits, jnp.full((1,), r.temperature), key)
+            if sess.cache is None:
+                sess.cache = self._cache_expand(sub, self.max_batch)
+            sess.cache = self._slot_write(sess.cache, sub, slot)
+        # the request's t-th token always uses stream index t, so a
+        # re-admitted (preempted) request resumes its stream at len(done)
+        tok = self._sample(logits, jnp.full((1,), r.temperature),
+                           sess.key, jnp.asarray([r.rid], np.int32),
+                           jnp.asarray([len(r.done)], np.int32))
         tok = int(np.asarray(jax.block_until_ready(tok))[0])
         ttft_ms = (time.perf_counter() - t0) * 1e3
-        return cache, _Slot(req=r, order=seq, tokens=[tok], ttft_ms=ttft_ms,
-                            prefill_pos=prefill_pos, blocks=blocks,
-                            reserve_left=reserve_left)
+        if r.done:
+            sess.requeued += 1
+        else:
+            sess.ttfts.append(ttft_ms)
+        if r.first_ttft_ms is not None:
+            ttft_ms = r.first_ttft_ms   # re-admission: keep the real TTFT
+        s = _Slot(req=r, tag=tag, tokens=[tok], ttft_ms=ttft_ms,
+                  admit_seq=admit_seq, prefill_pos=prefill_pos,
+                  blocks=blocks, reserve_left=reserve_left)
+        if len(r.done) + 1 >= r.max_new_tokens:
+            res = self._finish(s)       # satisfied by prefill alone
+            self._release(s, slot)
+            return res
+        sess.slots[slot] = s
+        sess.toks[slot, 0] = tok
+        sess.temps[slot] = r.temperature
+        sess.rids[slot] = r.rid
+        sess.tok_idx[slot] = len(r.done) + 1
+        return None
 
-    def _generate_continuous(self, items, key) -> list[Result]:
-        """items: [(submission order, Request)]; results align with items."""
+    def session_step(self) -> list[tuple[int, Result]]:
+        """One decode step over the slot pool.  Returns the (tag, Result)
+        pairs that finished this step; empty when no slot is live.  Under
+        overcommit admission, raises PoolPressure when lazy block growth
+        finds the pool empty - the step has not run, already-grown slots
+        keep their blocks, and the call can be retried after the caller
+        frees blocks (``session_preempt``)."""
+        sess = self._require_session()
         bsz = self.max_batch
-        paged = self.kv_layout == "paged"
-        if paged:
-            self.allocator.reset_peak()
-        queue = collections.deque(
-            (seq, order, r) for seq, (order, r) in enumerate(items))
-        slots: list[_Slot | None] = [None] * bsz
-        results: list[Result | None] = [None] * len(items)
-        cache = None
-        toks = np.zeros((bsz, 1), np.int32)
-        temps = np.zeros((bsz,), np.float32)
-        decode_steps = busy_steps = 0
-        ttfts: list[float] = []
-        t_start = time.perf_counter()
+        active = [i for i in range(bsz) if sess.slots[i] is not None]
+        if not active:
+            return []
+        if self.kv_layout == "paged":
+            # lazy growth: each slot's next write position must have a
+            # block before the step; under reserve admission these
+            # allocations can never fail mid-flight
+            for i in active:
+                s = sess.slots[i]
+                pos = s.prefill_pos + s.steps
+                while len(s.blocks) * self.block_size <= pos:
+                    try:
+                        blk = self.allocator.alloc(self.owner)
+                    except MemoryError as e:
+                        if self._admission == "overcommit":
+                            raise PoolPressure(self.owner, i) from e
+                        raise
+                    sess.cache = self._bt_set(sess.cache, i, len(s.blocks),
+                                              blk)
+                    s.blocks.append(blk)
+                    if s.reserve_left:
+                        s.reserve_left -= 1
+                        self.allocator.unreserve(1)
+        # one decode step over the whole slot pool (fixed shapes; idle
+        # slots compute too - their rows are masked by per-slot pos and
+        # fully rewritten on the next admission; paged idle rows write
+        # into the null block)
+        t0 = time.perf_counter()
+        logits, sess.cache = self._decode(self.params, sess.cache,
+                                          jnp.asarray(sess.toks))
+        nxt = np.asarray(self._sample(
+            logits, jnp.asarray(sess.temps), sess.key,
+            jnp.asarray(sess.rids), jnp.asarray(sess.tok_idx)))
+        dt = time.perf_counter() - t0
+        sess.decode_steps += 1
+        sess.busy_steps += len(active)
+        finished = []
+        for i in active:
+            s = sess.slots[i]
+            s.tokens.append(int(nxt[i]))
+            s.steps += 1
+            s.decode_s += dt
+            sess.toks[i, 0] = nxt[i]
+            sess.tok_idx[i] += 1
+            if len(s.req.done) + len(s.tokens) >= s.req.max_new_tokens:
+                finished.append((s.tag, self._finish(s)))
+                self._release(s, i)
+                sess.slots[i] = None   # freed: refilled on the next admit
+        return finished
 
-        def _finish(s: _Slot):
-            per_tok = s.decode_s * 1e3 / max(s.steps, 1)
-            results[s.order] = Result(s.req.rid, s.tokens, s.ttft_ms,
-                                      per_tok)
+    def session_preempt(self, slot: int) -> tuple[int, Request]:
+        """Evict the request in ``slot``: free its blocks back to the pool
+        and return ``(tag, requeued request)`` - the requeued request
+        carries the tokens generated so far in ``done``, so a later
+        re-admission prefills prompt + done and resumes the sampled stream
+        at index len(done), reproducing the uninterrupted output exactly."""
+        sess = self._require_session()
+        s = sess.slots[slot]
+        if s is None:
+            raise ValueError(f"slot {slot} is not live")
+        requeued = dataclasses.replace(
+            s.req, done=tuple(s.req.done) + tuple(s.tokens),
+            first_ttft_ms=s.ttft_ms)
+        self._release(s, slot)
+        sess.slots[slot] = None
+        sess.preempted += 1
+        return s.tag, requeued
 
-        def _release(s: _Slot, i: int):
-            """Paged: return the slot's blocks to the pool immediately and
-            park its block-table row on the null block so its idle decode
-            writes cannot touch recycled blocks."""
-            nonlocal cache
-            if not paged:
-                return
-            self.allocator.free(s.blocks)
-            self._reserved -= s.reserve_left
-            s.blocks, s.reserve_left = [], 0
-            cache = self._slot_release(cache, i)
-
-        try:
-            while queue or any(s is not None for s in slots):
-                # admission: refill every free slot before the next decode
-                # step
-                for i in range(bsz):
-                    if slots[i] is None and queue:
-                        # paged: admit only when the pool covers the
-                        # request's worst case beyond standing reservations
-                        # (FIFO - no skip-ahead, so a big request cannot
-                        # starve)
-                        if paged and not self._can_admit(queue[0][2]):
-                            break
-                        seq, order, r = queue.popleft()
-                        key, sk = jax.random.split(key)
-                        cache, s = self._admit(r, order, seq, i, cache, sk)
-                        ttfts.append(s.ttft_ms)
-                        if len(s.tokens) >= r.max_new_tokens:
-                            _finish(s)      # satisfied by prefill alone
-                            _release(s, i)
-                        else:
-                            slots[i] = s
-                            toks[i, 0] = s.tokens[-1]
-                            temps[i] = r.temperature
-                active = [i for i in range(bsz) if slots[i] is not None]
-                if not active:
-                    continue
-                if paged:
-                    # lazy growth: each slot's next write position must
-                    # have a block before the step; admission reserved the
-                    # worst case, so these allocations can never fail
-                    # mid-flight
-                    for i in active:
-                        s = slots[i]
-                        pos = s.prefill_pos + s.steps
-                        while len(s.blocks) * self.block_size <= pos:
-                            blk = self.allocator.alloc()
-                            cache = self._bt_set(cache, i, len(s.blocks),
-                                                 blk)
-                            s.blocks.append(blk)
-                            s.reserve_left -= 1
-                            self._reserved -= 1
-                # one decode step over the whole slot pool (fixed shapes;
-                # idle slots compute too - their rows are masked by
-                # per-slot pos and fully rewritten on the next admission;
-                # paged idle rows write into the null block)
-                t0 = time.perf_counter()
-                key, sk = jax.random.split(key)
-                logits, cache = self._decode(self.params, cache,
-                                             jnp.asarray(toks))
-                nxt = np.asarray(self._sample(logits, jnp.asarray(temps),
-                                              sk))
-                dt = time.perf_counter() - t0
-                decode_steps += 1
-                busy_steps += len(active)
-                for i in active:
-                    s = slots[i]
-                    s.tokens.append(int(nxt[i]))
-                    s.steps += 1
-                    s.decode_s += dt
-                    toks[i, 0] = nxt[i]
-                    if len(s.tokens) >= s.req.max_new_tokens:
-                        _finish(s)
-                        _release(s, i)
-                        slots[i] = None  # freed: refilled on the next pass
-        except BaseException:
-            # keep the allocator consistent if anything aborts the batch
-            # mid-schedule (the device cache is rebuilt from scratch per
-            # generate call, so host-side block ownership is the only
-            # state that must survive for the engine to stay usable)
-            if paged:
-                for s in slots:
-                    if s is not None and s.blocks:
+    def session_abort(self) -> None:
+        """Tear down an open session after a failure, returning any blocks
+        and reservations to the pool so the engine (and a shared pool's
+        co-tenants) stay usable.  The device cache is rebuilt per session,
+        so host-side block ownership is the only state that must survive."""
+        sess = self._sess
+        if sess is None:
+            return
+        if self.kv_layout == "paged":
+            for s in sess.slots:
+                if s is not None:
+                    if s.blocks:
                         self.allocator.free(s.blocks)
-                        self._reserved -= s.reserve_left
-            raise
+                    self.allocator.unreserve(s.reserve_left)
+        self._sess = None
 
-        wall = time.perf_counter() - t_start
-        gen = sum(len(r.tokens) for r in results)
-        self.last_stats = EngineStats(
-            "continuous", wall, gen, gen / max(wall, 1e-9), decode_steps,
-            busy_steps / max(bsz * decode_steps, 1),
-            float(np.mean(ttfts)) if ttfts else 0.0,
+    def end_session(self) -> EngineStats:
+        """Close the session and return its aggregate stats."""
+        sess = self._require_session()
+        if self.session_active:
+            raise RuntimeError("end_session with live slots (drain or "
+                               "preempt them first)")
+        wall = time.perf_counter() - sess.t_start
+        gen = sess.gen_tokens
+        stats = EngineStats(
+            "continuous", wall, gen, gen / max(wall, 1e-9),
+            sess.decode_steps,
+            sess.busy_steps / max(self.max_batch * sess.decode_steps, 1),
+            float(np.mean(sess.ttfts)) if sess.ttfts else 0.0,
             kv_layout=self.kv_layout,
             prefill_compiles=len(self._prefill_shapes),
             block_util_peak=(self.allocator.stats().peak_utilization
-                             if paged else 0.0))
+                             if self.kv_layout == "paged" else 0.0),
+            preempted=sess.preempted, requeued=sess.requeued)
+        self._sess = None
+        return stats
+
+    def _finish(self, s: _Slot) -> Result:
+        per_tok = s.decode_s * 1e3 / max(s.steps, 1)
+        tokens = list(s.req.done) + s.tokens
+        self._sess.gen_tokens += len(tokens)
+        return Result(s.req.rid, tokens, s.ttft_ms, per_tok)
+
+    def _release(self, s: _Slot, i: int) -> None:
+        """Paged: return the slot's blocks to the pool immediately and
+        park its block-table row on the null block so its idle decode
+        writes cannot touch recycled blocks."""
+        if self.kv_layout != "paged":
+            return
+        self.allocator.free(s.blocks)
+        self.allocator.unreserve(s.reserve_left)
+        s.blocks, s.reserve_left = [], 0
+        self._sess.cache = self._slot_release(self._sess.cache, i)
+
+    # ------------------------------------------------------------------
+    # Continuous batching (slot pool + admission scheduler).
+    # ------------------------------------------------------------------
+
+    def _generate_continuous(self, items, key) -> list[Result]:
+        """items: [(submission order, Request)]; results align with items."""
+        self.begin_session(key)
+        queue = collections.deque(
+            (seq, order, r) for seq, (order, r) in enumerate(items))
+        results: list[Result | None] = [None] * len(items)
+        try:
+            while queue or self.session_active:
+                # admission: refill every free slot before the next decode
+                # step (FIFO - no skip-ahead, so a big request cannot
+                # starve under paged admission)
+                while queue and self.session_free_slot() is not None:
+                    if not self.session_can_admit(queue[0][2]):
+                        break
+                    seq, order, r = queue.popleft()
+                    res = self.session_admit(r, tag=seq, extra_row=order)
+                    if res is not None:
+                        results[seq] = res
+                if queue and not self.session_active:
+                    # nothing live here yet the head cannot be admitted:
+                    # only reachable when a shared pool's co-tenant holds
+                    # the blocks - fail loudly instead of spinning (a
+                    # cluster driver interleaves engines; generate cannot)
+                    raise MemoryError(
+                        f"engine owner={self.owner!r} is idle but the "
+                        f"shared pool cannot admit rid="
+                        f"{queue[0][2].rid} (co-tenants hold "
+                        f"{self.allocator.n_live} blocks, "
+                        f"{self.allocator.n_reserved} reserved)")
+                for tag, res in self.session_step():
+                    results[tag] = res
+        except BaseException:
+            # keep the allocator consistent if anything aborts the batch
+            # mid-schedule
+            self.session_abort()
+            raise
+        self.last_stats = self.end_session()
         return results
 
     # ------------------------------------------------------------------
@@ -506,7 +782,6 @@ class ServeEngine:
         while queue:
             group = queue[: self.max_batch]
             queue = queue[self.max_batch:]
-            key = jax.random.fold_in(key, len(queue))
             stats = self._generate_group(group, key, results)
             decode_steps += stats[0]
             busy_steps += stats[1]
@@ -522,7 +797,8 @@ class ServeEngine:
 
     def _generate_group(self, group, key, results):
         reqs = [r for _, _, r in group]
-        prompts = self._pad_prompts([r.prompt for r in reqs])
+        prompts = self._pad_prompts([list(r.prompt) + list(r.done)
+                                     for r in reqs])
         self._prefill_shapes.add(prompts.shape[1])
         batch = {"tokens": jnp.asarray(prompts),
                  **self._gather_extra([order for _, order, _ in group])}
@@ -530,7 +806,8 @@ class ServeEngine:
         logits, cache = self._prefill(self.params, batch)
         jax.block_until_ready(logits)
         prefill_ms = (time.perf_counter() - t0) * 1e3
-        max_new = max(r.max_new_tokens for r in reqs)
+        remaining = [r.max_new_tokens - len(r.done) for r in reqs]
+        max_new = max(remaining)
         if self._slot_capable:
             # uniform-position KV layout: the whole group decodes in step,
             # so the group's slowest member sets the write budget (scan/ring
@@ -538,27 +815,31 @@ class ServeEngine:
             self._check_budget(int(np.asarray(cache["pos"])), max_new,
                                [r.rid for r in reqs])
         temps = jnp.asarray([r.temperature for r in reqs], jnp.float32)
-        key, sk = jax.random.split(key)
-        toks = np.asarray(self._sample(logits, temps, sk))[:, None]
+        rids = jnp.asarray([r.rid for r in reqs], np.int32)
+        base_idx = np.asarray([len(r.done) for r in reqs], np.int32)
+        toks = np.asarray(self._sample(logits, temps, key, rids,
+                                       jnp.asarray(base_idx)))[:, None]
         outs = [[int(toks[i, 0])] for i in range(len(reqs))]
         t1 = time.perf_counter()
         n_steps = 0
         for _ in range(max_new - 1):
             logits, cache = self._decode(self.params, cache,
                                          jnp.asarray(toks, jnp.int32))
-            key, sk = jax.random.split(key)
-            toks = np.asarray(self._sample(logits, temps, sk))[:, None]
             n_steps += 1
+            toks = np.asarray(self._sample(
+                logits, temps, key, rids,
+                jnp.asarray(base_idx + n_steps)))[:, None]
             for i, r in enumerate(reqs):
-                if len(outs[i]) < r.max_new_tokens:
+                if len(outs[i]) < remaining[i]:
                     outs[i].append(int(toks[i, 0]))
         jax.block_until_ready(logits)
         decode_ms = ((time.perf_counter() - t1) * 1e3 / max(n_steps, 1))
         busy_total = 0
         # recompute busy slot-steps: request i is busy for its first
-        # (max_new_tokens - 1) decode steps of this group
-        for r in reqs:
-            busy_total += min(max(r.max_new_tokens - 1, 0), max(n_steps, 0))
+        # (remaining - 1) decode steps of this group
+        for rem in remaining:
+            busy_total += min(max(rem - 1, 0), max(n_steps, 0))
         for i, (seq, _, r) in enumerate(group):
-            results[seq] = Result(r.rid, outs[i], prefill_ms, decode_ms)
+            results[seq] = Result(r.rid, list(r.done) + outs[i], prefill_ms,
+                                  decode_ms)
         return n_steps, busy_total, [prefill_ms] * len(reqs)

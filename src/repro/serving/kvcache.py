@@ -11,6 +11,23 @@ blocks drawn from one global pool:
   Block 0 is reserved as the *null block*: freed/idle decode slots point
   every block-table entry at it, so their stale one-token writes land in a
   scratch block instead of corrupting a live request's KV.
+
+  The allocator is a first-class object that can be *shared*: a
+  multi-replica cluster (``repro.serving.cluster``) constructs one pool and
+  passes it to every ``ServeEngine`` replica, the serving analog of Ara2's
+  multi-core clusters sharing one L2 - each core (replica) issues its own
+  stream but draws from common memory.  Two features support sharing:
+
+  - **per-owner accounting**: every live block is tagged with the owner id
+    passed to ``alloc``/``alloc_n`` (a replica index), so the cluster can
+    see which replica holds what (``live_by_owner``).
+  - **pool-level reservations**: engines running ``admission="reserve"``
+    promise worst-case blocks at admit time via ``reserve``/``unreserve``;
+    the reservation count lives here (not per engine) so co-tenant engines
+    see each other's promises and lazy growth can never fail.  Engines
+    running ``admission="overcommit"`` skip reservations; their lazy
+    growth *can* find the pool empty, which surfaces as ``PoolPressure``
+    and is resolved by the cluster preempting a victim request.
 * per-request **block tables** - ordered rows of block ids mapping logical
   KV positions ``[i * block_size, (i+1) * block_size)`` to pool blocks.
   Rows live in the device cache (``pcache["bt"]``) so the decode kernel can
@@ -24,10 +41,24 @@ updates shared by every paged family.
 from __future__ import annotations
 
 import dataclasses
+from typing import Any
 
 import jax.numpy as jnp
 
 NULL_BLOCK = 0
+
+
+class PoolPressure(MemoryError):
+    """Lazy block growth found the (shared) pool empty under overcommit
+    admission.  Carries the requesting owner and decode slot so a cluster
+    scheduler can pick a preemption victim and retry the step."""
+
+    def __init__(self, owner, slot: int):
+        super().__init__(
+            f"KV block pool exhausted under overcommit (owner={owner}, "
+            f"slot={slot}): preempt a request or grow the pool")
+        self.owner = owner
+        self.slot = slot
 
 
 def blocks_needed(n_positions: int, block_size: int) -> int:
@@ -45,6 +76,7 @@ class BlockPoolStats:
     peak_live: int
     utilization: float             # n_live / capacity
     peak_utilization: float        # peak_live / capacity
+    n_reserved: int = 0            # worst-case blocks promised, not yet live
 
 
 class BlockAllocator:
@@ -63,7 +95,21 @@ class BlockAllocator:
             raise ValueError(f"block_size={block_size} must be >= 1")
         self.n_blocks = n_blocks
         self.block_size = block_size
+        self._policy: str | None = None
         self.reset()
+
+    def claim_policy(self, policy: str) -> None:
+        """Engines sharing this pool must agree on one admission policy:
+        overcommit growth spends free blocks without consulting
+        reservations, so mixing it with a reserve-admission co-tenant
+        would break the latter's growth-never-fails guarantee."""
+        if self._policy is None:
+            self._policy = policy
+        elif self._policy != policy:
+            raise ValueError(
+                f"pool already serves admission={self._policy!r} engines; "
+                f"a co-tenant requested admission={policy!r} (mixed "
+                "policies would let overcommit growth eat reserved blocks)")
 
     # -- lifecycle -----------------------------------------------------
 
@@ -71,7 +117,8 @@ class BlockAllocator:
         """Return every block to the free list and clear stats."""
         # stacked so that pop() hands out 1, 2, 3, ... on a fresh pool
         self._free = list(range(self.n_blocks - 1, 0, -1))
-        self._live: set[int] = set()
+        self._live: dict[int, Any] = {}      # block id -> owner
+        self._reserved = 0
         self._peak = 0
 
     def reset_peak(self) -> None:
@@ -91,23 +138,32 @@ class BlockAllocator:
     def n_live(self) -> int:
         return len(self._live)
 
-    def alloc(self) -> int:
+    @property
+    def n_reserved(self) -> int:
+        return self._reserved
+
+    @property
+    def n_avail(self) -> int:
+        """Free blocks not spoken for by a standing reservation."""
+        return len(self._free) - self._reserved
+
+    def alloc(self, owner=0) -> int:
         if not self._free:
             raise MemoryError(
                 f"KV block pool exhausted ({self.capacity} blocks of "
                 f"{self.block_size} positions, all live)")
         blk = self._free.pop()
-        self._live.add(blk)
+        self._live[blk] = owner
         self._peak = max(self._peak, len(self._live))
         return blk
 
-    def alloc_n(self, n: int) -> list[int]:
+    def alloc_n(self, n: int, owner=0) -> list[int]:
         """Allocate ``n`` blocks atomically (all or nothing)."""
         if n > self.n_free:
             raise MemoryError(
                 f"KV block pool exhausted: need {n} blocks, "
                 f"{self.n_free}/{self.capacity} free")
-        return [self.alloc() for _ in range(n)]
+        return [self.alloc(owner) for _ in range(n)]
 
     def free(self, blocks) -> None:
         for blk in blocks:
@@ -115,14 +171,48 @@ class BlockAllocator:
                 raise ValueError(
                     f"free of block {blk} which is not live "
                     "(double free or foreign id)")
-            self._live.discard(blk)
+            del self._live[blk]
             self._free.append(blk)
+
+    # -- reservations (worst-case admission promises) ------------------
+
+    def reserve(self, n: int) -> None:
+        """Promise ``n`` free blocks to an admitted request's future lazy
+        growth.  Pool-level so co-tenant engines see each other's promises;
+        ``n_avail`` is what admission may still spend."""
+        if n > self.n_avail:
+            raise MemoryError(
+                f"cannot reserve {n} blocks: only {self.n_avail} of "
+                f"{self.capacity} unreserved-free")
+        self._reserved += n
+
+    def unreserve(self, n: int) -> None:
+        """Release reservations (a promised block became live, or its
+        request finished / was preempted)."""
+        if n > self._reserved:
+            raise ValueError(
+                f"unreserve({n}) exceeds standing reservations "
+                f"({self._reserved})")
+        self._reserved -= n
+
+    # -- accounting ----------------------------------------------------
+
+    def live_by_owner(self) -> dict:
+        """Live block counts per owner (a cluster's per-replica view)."""
+        counts: dict = {}
+        for owner in self._live.values():
+            counts[owner] = counts.get(owner, 0) + 1
+        return counts
+
+    def owner_of(self, blk: int):
+        return self._live[blk]
 
     def stats(self) -> BlockPoolStats:
         cap = self.capacity
         return BlockPoolStats(
             self.n_blocks, self.block_size, cap, self.n_live, self.n_free,
-            self._peak, self.n_live / cap, self._peak / cap)
+            self._peak, self.n_live / cap, self._peak / cap,
+            n_reserved=self._reserved)
 
 
 # ---------------------------------------------------------------------------

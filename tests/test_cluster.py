@@ -1,0 +1,212 @@
+"""Multi-replica serving cluster: router-policy equivalence, preemption
+correctness, shared-pool accounting, and rid-keyed sampling invariance."""
+import jax
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import build_model
+from repro.serving import (BlockAllocator, ClusterEngine, PoolPressure,
+                           Request, ServeEngine)
+
+CACHE_LEN = 64
+BLOCK = 8
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = smoke_config("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _cluster(model_and_params, **kw):
+    _, model, params = model_and_params
+    kw.setdefault("cache_len", CACHE_LEN)
+    kw.setdefault("block_size", BLOCK)
+    return ClusterEngine(model, params, **kw)
+
+
+def _single(model_and_params, **kw):
+    _, model, params = model_and_params
+    kw.setdefault("cache_len", CACHE_LEN)
+    return ServeEngine(model, params, **kw)
+
+
+def _trace(n=10):
+    return [Request([1 + i, 2 + i, 3 + i], 5 + (i % 4), rid=i)
+            for i in range(n)]
+
+
+@pytest.mark.parametrize("router",
+                         ["round_robin", "least_loaded", "shortest_queue"])
+def test_cluster_matches_single_engine(model_and_params, router):
+    """(a) greedy outputs are replica-placement- and router-independent:
+    a 2x2 cluster produces the same tokens as one 4-slot engine."""
+    reqs = _trace()
+    ref = _single(model_and_params, max_batch=4,
+                  kv_layout="paged").generate(reqs)
+    cl = _cluster(model_and_params, replicas=2, total_slots=4,
+                  router=router)
+    got = cl.generate(reqs)
+    for a, b in zip(ref, got):
+        assert a.tokens == b.tokens, (router, a.rid)
+    s = cl.last_stats
+    assert s.mode == "cluster" and s.router_policy == router
+    assert len(cl.replica_stats) == 2
+    assert s.generated_tokens == sum(r.max_new_tokens for r in reqs)
+
+
+def test_cluster_sampled_matches_single_engine(model_and_params):
+    """(b) rid-keyed sampling: temperature>0 outputs are also identical
+    between the cluster and a single engine (placement cannot perturb a
+    request's sampled stream)."""
+    reqs = [Request([2 + i, 3 + i], 6, temperature=0.8, rid=i)
+            for i in range(6)]
+    key = jax.random.key(7)
+    ref = _single(model_and_params, max_batch=4,
+                  kv_layout="paged").generate(reqs, key=key)
+    got = _cluster(model_and_params, replicas=2,
+                   total_slots=4).generate(reqs, key=key)
+    for a, b in zip(ref, got):
+        assert a.tokens == b.tokens, a.rid
+    # and the streams do depend on the base key (not accidentally frozen)
+    other = _cluster(model_and_params, replicas=2, total_slots=4).generate(
+        reqs, key=jax.random.key(8))
+    assert any(a.tokens != b.tokens for a, b in zip(ref, other))
+
+
+def test_preempted_request_completes_correctly(model_and_params):
+    """(c) pool pressure fires preemption, and the preempted request's
+    final tokens are identical to an uncontended run (re-prefill with the
+    generated prefix + rid-keyed streams make eviction invisible)."""
+    reqs = [Request([3 * i + 1, 3 * i + 2], 24, rid=i) for i in range(6)]
+    ref = _single(model_and_params, max_batch=4,
+                  kv_layout="paged").generate(reqs)
+    # 4 slots x worst case 4 blocks (2 + 23 pos) = 16 blocks wanted
+    # concurrently, against a 10-block pool: growth must preempt
+    cl = _cluster(model_and_params, replicas=2, total_slots=4, n_blocks=11)
+    got = cl.generate(reqs)
+    assert cl.last_stats.preempted >= 1
+    assert cl.last_stats.requeued == cl.last_stats.preempted
+    for a, b in zip(ref, got):
+        assert a.tokens == b.tokens, a.rid
+        assert len(b.tokens) == 24
+
+
+def test_preemption_invisible_in_sampled_stream(model_and_params):
+    """(c'') preemption is invisible to *sampled* output too: re-prefill
+    resumes the rid-keyed stream at index len(done), so a temperature>0
+    request evicted mid-decode still matches its uncontended run."""
+    reqs = [Request([3 * i + 1, 3 * i + 2], 24, temperature=0.9, rid=i)
+            for i in range(6)]
+    key = jax.random.key(11)
+    ref = _single(model_and_params, max_batch=4,
+                  kv_layout="paged").generate(reqs, key=key)
+    cl = _cluster(model_and_params, replicas=2, total_slots=4, n_blocks=11)
+    got = cl.generate(reqs, key=key)
+    assert cl.last_stats.preempted >= 1
+    for a, b in zip(ref, got):
+        assert a.tokens == b.tokens, a.rid
+
+
+def test_shared_pool_drains_clean(model_and_params):
+    """(d) leak check: after every drain (with and without preemption) the
+    shared pool is fully free and unreserved."""
+    cl = _cluster(model_and_params, replicas=2, total_slots=4, n_blocks=11)
+    for _ in range(2):
+        cl.generate(_trace(8))
+        assert cl.pool.n_live == 0
+        assert cl.pool.n_reserved == 0
+        assert cl.pool.n_free == cl.pool.capacity
+        assert cl.pool.live_by_owner() == {}
+
+
+def test_priority_guides_victim_selection(model_and_params):
+    """(e) preemption evicts the lowest-priority request first: the
+    high-priority requests' slots survive (all still complete, and at
+    least one preemption hit a low-priority rid)."""
+    # priorities: rids 0/1 low, 2..5 high; same shapes as (c) so pressure
+    # fires.  Low-priority requests still finish (requeue, not drop).
+    reqs = [Request([3 * i + 1, 3 * i + 2], 24, rid=i,
+                    priority=(0 if i < 2 else 1)) for i in range(6)]
+    ref = _single(model_and_params, max_batch=4,
+                  kv_layout="paged").generate(reqs)
+    cl = _cluster(model_and_params, replicas=2, total_slots=4, n_blocks=11)
+    got = cl.generate(reqs)
+    assert cl.last_stats.preempted >= 1
+    for a, b in zip(ref, got):
+        assert a.tokens == b.tokens, a.rid
+
+
+def test_cluster_rejects_impossible_request(model_and_params):
+    """(f) a request whose worst case exceeds the whole shared pool errors
+    up front; the cluster stays usable afterwards."""
+    cl = _cluster(model_and_params, replicas=2, total_slots=4, n_blocks=5)
+    with pytest.raises(ValueError, match="KV blocks"):
+        cl.generate([Request(list(range(8)), 40, rid=0)])
+    assert cl.pool.n_live == 0
+    res = cl.generate([Request([1, 2], 4, rid=1)])
+    assert len(res[0].tokens) == 4
+
+
+def test_cluster_validates_shape_and_family(model_and_params):
+    _, model, params = model_and_params
+    with pytest.raises(ValueError, match="router"):
+        ClusterEngine(model, params, router="random")
+    with pytest.raises(ValueError, match="multiple"):
+        ClusterEngine(model, params, replicas=3, total_slots=4)
+    cfg = smoke_config("xlstm-350m")
+    scan_model = build_model(cfg)
+    with pytest.raises(ValueError, match="paged"):
+        ClusterEngine(scan_model, scan_model.init(jax.random.key(0)))
+
+
+def test_cotenant_held_pool_fails_loudly(model_and_params):
+    """(h) generate() on an engine whose shared pool is held by a
+    co-tenant raises instead of busy-spinning (only a cluster driver can
+    interleave engines to resolve the wait)."""
+    _, model, params = model_and_params
+    pool = BlockAllocator(9, BLOCK)         # 8 allocatable blocks
+    kw = dict(max_batch=1, cache_len=CACHE_LEN, kv_layout="paged",
+              allocator=pool)
+    a = ServeEngine(model, params, owner="a", **kw)
+    b = ServeEngine(model, params, owner="b", **kw)
+    a.begin_session()
+    # worst case 8 blocks (3 + 59 positions): a's reservation covers the
+    # whole pool
+    assert a.session_admit(Request([1, 2, 3], 60, rid=0), tag=0) is None
+    with pytest.raises(MemoryError, match="co-tenants"):
+        b.generate([Request([4, 5, 6], 60, rid=1)])
+    a.session_preempt(0)
+    a.end_session()
+    assert pool.n_live == 0 and pool.n_reserved == 0
+
+
+def test_shared_pool_rejects_conflicting_tenants(model_and_params):
+    """(i) a shared pool refuses mixed admission policies (overcommit
+    growth would eat a reserve tenant's promised blocks) and conflicting
+    block sizes."""
+    _, model, params = model_and_params
+    pool = BlockAllocator(9, BLOCK)
+    kw = dict(max_batch=1, cache_len=CACHE_LEN, kv_layout="paged",
+              allocator=pool)
+    ServeEngine(model, params, admission="reserve", **kw)
+    with pytest.raises(ValueError, match="admission"):
+        ServeEngine(model, params, admission="overcommit", **kw)
+    with pytest.raises(ValueError, match="block_size"):
+        ServeEngine(model, params, block_size=BLOCK * 2, **kw)
+
+
+def test_overcommit_without_cluster_surfaces_pool_pressure(
+        model_and_params):
+    """(g) an overcommitted single engine propagates PoolPressure from
+    generate (preemption is the cluster driver's job), and its abort path
+    leaks nothing."""
+    eng = _single(model_and_params, max_batch=4, kv_layout="paged",
+                  block_size=BLOCK, n_blocks=9, admission="overcommit")
+    reqs = [Request([3 * i + 1, 3 * i + 2], 24, rid=i) for i in range(4)]
+    with pytest.raises(PoolPressure):
+        eng.generate(reqs)
+    assert eng.allocator.n_live == 0
+    assert eng.allocator.n_reserved == 0

@@ -89,6 +89,37 @@ def test_allocator_stats_track_peak():
     assert a.stats().peak_live == 1
 
 
+def test_allocator_owner_accounting():
+    """Shared-pool bookkeeping: live blocks are tagged with the owner that
+    drew them (a cluster's replica index)."""
+    a = BlockAllocator(8, BLOCK)
+    xs = a.alloc_n(2, owner="r0")
+    y = a.alloc(owner="r1")
+    assert a.live_by_owner() == {"r0": 2, "r1": 1}
+    assert a.owner_of(y) == "r1"
+    a.free(xs)
+    assert a.live_by_owner() == {"r1": 1}
+    a.free([y])
+    assert a.live_by_owner() == {}
+
+
+def test_allocator_reservations():
+    """Pool-level worst-case promises: n_avail shrinks, over-reserving and
+    over-unreserving are rejected."""
+    a = BlockAllocator(6, BLOCK)            # capacity 5
+    a.reserve(3)
+    assert (a.n_reserved, a.n_avail, a.n_free) == (3, 2, 5)
+    with pytest.raises(MemoryError):
+        a.reserve(3)                        # only 2 unreserved-free
+    a.unreserve(1)
+    assert a.n_avail == 3
+    with pytest.raises(ValueError):
+        a.unreserve(5)
+    assert a.stats().n_reserved == 2
+    a.reset()
+    assert a.n_reserved == 0
+
+
 def test_blocks_needed():
     assert blocks_needed(0, 16) == 0
     assert blocks_needed(1, 16) == 1
@@ -164,7 +195,7 @@ def test_paged_request_never_fits_rejected(model_and_params):
         # the admissible request rides in the same batch as the impossible
         # one: up-front validation must reject before either is scheduled
         eng.generate([fits, Request(list(range(10)), 40, rid=1)])
-    assert eng.allocator.n_live == 0 and eng._reserved == 0
+    assert eng.allocator.n_live == 0 and eng.allocator.n_reserved == 0
     res = eng.generate([fits])          # engine not wedged by the reject
     assert len(res[0].tokens) == fits.max_new_tokens
 

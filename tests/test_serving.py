@@ -77,6 +77,25 @@ def test_per_request_temperature(model_and_params, mode):
     assert run1[0].tokens == solo.tokens
 
 
+def test_sampled_stream_is_placement_independent(model_and_params):
+    """(c') sampling keys derive from (rid, token index), not slot/step
+    order: a temperature>0 request produces the same tokens decoded alone,
+    batched with neighbors, or under the lock-step scheduler (equal-length
+    prompts, so lockstep's padded group prefill matches the solo one)."""
+    hot = [Request([1 + i, 2 + i, 3 + i], 6, temperature=1.0, rid=i)
+           for i in range(3)]
+    key = jax.random.key(3)
+    batched = _engine(model_and_params, max_batch=3,
+                      mode="continuous").generate(hot, key=key)
+    solo = _engine(model_and_params, max_batch=1, mode="continuous")
+    for r, got in zip(hot, batched):
+        assert solo.generate([r], key=key)[0].tokens == got.tokens, r.rid
+    lock = _engine(model_and_params, max_batch=3,
+                   mode="lockstep").generate(hot, key=key)
+    for a, b in zip(batched, lock):
+        assert a.tokens == b.tokens, a.rid
+
+
 def test_metrics_sanity(model_and_params):
     """(d) prefill/decode timings positive, occupancy in (0, 1]."""
     reqs = [Request([1, 2, 3], 6, rid=0), Request([4, 5], 3, rid=1),
