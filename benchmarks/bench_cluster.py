@@ -107,9 +107,12 @@ def _stats_line(s):
             f"pool_util_peak={s.block_util_peak:.2f}")
 
 
-def run(smoke: bool = False):
+def run(smoke: bool = False, json_path: str | None = None):
+    from benchmarks.common import reset_rows
     from repro.models import build_model
     from repro.serving import ClusterEngine, ServeEngine
+
+    reset_rows()
 
     cfg = _serve_config(smoke)
     model = build_model(cfg)
@@ -191,6 +194,9 @@ def run(smoke: bool = False):
          f"pool={POOL_POSITIONS // BLOCK}blocks;"
          f"preempted={s.preempted};requeued={s.requeued};served=all"
          f"({N_PRESSURE_REQS})")
+    if json_path:
+        from benchmarks.common import write_json
+        write_json(json_path, bench="bench_cluster", smoke=smoke)
     return toks_per_s
 
 
@@ -198,5 +204,6 @@ if __name__ == "__main__":
     import os
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from benchmarks.common import json_path_arg
     print("name,us_per_call,derived")
-    run(smoke="--smoke" in sys.argv)
+    run(smoke="--smoke" in sys.argv, json_path=json_path_arg(sys.argv))

@@ -19,18 +19,28 @@ return their blocks immediately instead of holding a worst-case
 the dense run token-for-token and exits non-zero with a per-request
 diff summary on divergence, so CI catches layout drift diagnosably.
 
+The prefill-memory report makes the chunked-prefill claim a measured
+number: the dense path hands a batch-1 ``(L, Hkv, prompt_len, hd)`` K/V
+intermediate from prefill to the block scatter, the paged path's chunk
+step only ever holds one ``block_size`` chunk — both sizes come from the
+abstract shapes, and the compiled temp footprints from XLA's
+``memory_analysis`` when the backend reports them.
+
 Emits ``name,us_per_call,derived`` CSV rows like the other benches:
   serving_lockstep,<wall_us>,tok/s=...;occ=...
   serving_continuous,<wall_us>,tok/s=...;occ=...
   serving_paged,<wall_us>,tok/s=...;occ=...;block_util=...;compiles=...
   serving_speedup,,continuous/lockstep=...
   serving_paged_admission,,footprint=...;capacity=...;admitted=...
+  serving_prefill_mem,,dense_kv_intermediate=...;paged_chunk_kv=...;...
 
-``--smoke`` shrinks the trace/model work for the CI CPU regression gate.
+``--smoke`` shrinks the trace/model work for the CI CPU regression gate;
+``--json PATH`` additionally dumps every row for the CI artifact.
 """
 import jax
+import jax.numpy as jnp
 
-from benchmarks.common import check_tokens, emit
+from benchmarks.common import check_tokens, emit, write_json
 
 MAX_BATCH = 4
 CACHE_LEN = 128
@@ -50,10 +60,81 @@ def _trace(vocab, n_reqs, short_new, long_new):
     return reqs
 
 
-def run(smoke: bool = False):
+def _compiled_temp_bytes(fn, *args):
+    """Temp-buffer bytes of the compiled fn, or None when the backend's
+    memory analysis is unavailable (args may be ShapeDtypeStructs)."""
+    try:
+        ma = jax.jit(fn).lower(*args).compile().memory_analysis()
+        return None if ma is None else int(ma.temp_size_in_bytes)
+    except Exception:
+        return None
+
+
+def _prefill_mem_report(model, params, cache_len, block_size, smoke):
+    """Measure the prefill path's peak transient KV bytes, dense-then-
+    scatter vs chunked paged, for a worst-case ``cache_len`` prompt.
+
+    The dense-layout admission runs ``model.prefill`` and materializes a
+    batch-1 (L, Hkv, prompt_len, hd) K/V cache; the paged chunk step
+    (``model.prefill_paged``) writes block-sized pieces straight into the
+    pool, so its largest KV-side value is one (Hkv, block_size, hd) chunk
+    per layer scan step.  Both are read off the abstract output/jaxpr
+    shapes; compiled temp totals are reported alongside when XLA's
+    memory_analysis is available on this backend."""
+    from repro.serving import blocks_needed
+    batch = {"tokens": jnp.zeros((1, cache_len), jnp.int32)}
+    cache = jax.eval_shape(
+        lambda p, b: model.prefill(p, b, cache_len=None)[1], params, batch)
+    itemsize = cache["k"].dtype.itemsize
+    dense_kv = 2 * cache["k"].size * itemsize        # k + v
+    l, _, hkv, s, hd = cache["k"].shape
+    assert s == cache_len
+    paged_chunk_kv = 2 * hkv * block_size * hd * itemsize
+
+    max_blocks = blocks_needed(cache_len, block_size)
+    n_blocks = MAX_BATCH * max_blocks + 1
+    pcache = jax.eval_shape(lambda: model.paged_cache_init(
+        batch=MAX_BATCH, n_blocks=n_blocks, block_size=block_size,
+        max_blocks=max_blocks, dtype=cache["k"].dtype))
+    i32 = jax.ShapeDtypeStruct((), jnp.int32)
+    chunk_batch = {"tokens": jax.ShapeDtypeStruct((1, block_size),
+                                                  jnp.int32)}
+    dense_tmp = _compiled_temp_bytes(
+        lambda p, b: model.prefill(p, b, cache_len=None), params, batch)
+    paged_tmp = _compiled_temp_bytes(
+        model.prefill_paged, params, pcache, chunk_batch, i32, i32, i32)
+
+    # the removed materialization, as numbers: the dense path's handed-off
+    # KV intermediate stacks all L layers of the full prompt, the chunk
+    # transient is one block of one layer (the scan carry updates the
+    # pool slice in place)
+    assert dense_kv == paged_chunk_kv * l * (cache_len // block_size)
+    measured = ""
+    if dense_tmp is not None and paged_tmp is not None:
+        measured = f";dense_tmp={dense_tmp}B;paged_chunk_tmp={paged_tmp}B"
+        if not smoke:
+            # compiled-temp check: one chunk step's whole scratch
+            # footprint must undercut the intermediate the old path
+            # materialized.  Gated off the smoke shapes, where the KV
+            # intermediate (8KB) is dwarfed by fixed per-call temps and
+            # the margin would be one XLA padding change wide.
+            assert paged_tmp < dense_tmp + dense_kv, (paged_tmp, dense_tmp,
+                                                      dense_kv)
+    emit("serving_prefill_mem", "",
+         f"dense_kv_intermediate={dense_kv}B;paged_chunk_kv="
+         f"{paged_chunk_kv}B;ratio={dense_kv / paged_chunk_kv:.1f}x"
+         f"({l} layers x prompt {cache_len} / block {block_size})"
+         f"{measured}")
+    return dense_kv, paged_chunk_kv
+
+
+def run(smoke: bool = False, json_path: str | None = None):
+    from benchmarks.common import reset_rows
     from repro.configs import smoke_config
     from repro.models import build_model
     from repro.serving import Request, ServeEngine
+
+    reset_rows()
 
     cache_len = 32 if smoke else CACHE_LEN
     n_reqs = 8 if smoke else N_REQS
@@ -117,6 +198,12 @@ def run(smoke: bool = False):
          f"footprint={footprint}pos;capacity={pool_positions}pos;"
          f"admitted=all({n_reqs});block_util_peak="
          f"{stats['paged'].block_util_peak:.2f}")
+
+    # prefill transient memory: the dense (L, Hkv, prompt, hd) KV
+    # intermediate vs the chunked path's single-block transient
+    _prefill_mem_report(model, params, cache_len, BLOCK, smoke)
+    if json_path:
+        write_json(json_path, bench="bench_serving", smoke=smoke)
     return speedup
 
 
@@ -125,6 +212,6 @@ if __name__ == "__main__":
     import sys
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-    smoke = "--smoke" in sys.argv
+    from benchmarks.common import json_path_arg
     print("name,us_per_call,derived")
-    run(smoke=smoke)
+    run(smoke="--smoke" in sys.argv, json_path=json_path_arg(sys.argv))

@@ -1,8 +1,14 @@
-"""Benchmark utilities: timing + CSV emission (name,us_per_call,derived)."""
+"""Benchmark utilities: timing + CSV emission (name,us_per_call,derived)
+with an optional JSON sink (CI uploads the --smoke rows as an artifact)."""
+import json
 import sys
 import time
 
 import jax
+
+# every emit() is also recorded here so benches can dump a machine-
+# readable copy of their run (write_json)
+_ROWS: list = []
 
 
 def timeit(fn, *args, warmup=2, iters=5):
@@ -54,5 +60,37 @@ def check_tokens(label: str, name_a: str, toks_a, name_b: str, toks_b,
 
 def emit(name: str, us_per_call, derived):
     us = f"{us_per_call:.1f}" if isinstance(us_per_call, float) else us_per_call
+    _ROWS.append({"name": name, "us_per_call": us, "derived": derived})
     print(f"{name},{us},{derived}")
     sys.stdout.flush()
+
+
+def reset_rows() -> None:
+    """Start a fresh row log (benches call this at the top of run(), so a
+    prior in-process bench that never wrote JSON cannot leak rows into
+    this one's artifact)."""
+    _ROWS.clear()
+
+
+def json_path_arg(argv) -> str | None:
+    """Pull the ``--json PATH`` value out of a bench's argv (None when the
+    flag is absent; a missing value is a clear error, not an IndexError)."""
+    if "--json" not in argv:
+        return None
+    i = argv.index("--json")
+    if i + 1 >= len(argv) or argv[i + 1].startswith("--"):
+        sys.exit("--json needs a file path argument")
+    return argv[i + 1]
+
+
+def write_json(path: str, **extra) -> None:
+    """Dump every row emitted since the last write (plus bench-specific
+    ``extra`` key/values) as JSON — the CI workflow uploads these as
+    artifacts so a regression's numbers are diffable without scraping
+    logs.  Clears the accumulator (paired with ``reset_rows`` at run()
+    entry, two benches in one process each dump only their own rows)."""
+    rows = list(_ROWS)
+    _ROWS.clear()
+    with open(path, "w") as f:
+        json.dump({"rows": rows, **extra}, f, indent=2, sort_keys=True)
+    print(f"[bench] wrote {path} ({len(rows)} rows)", file=sys.stderr)

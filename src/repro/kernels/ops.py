@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import contextlib
 import functools
+import os
 
 import jax
 
@@ -29,7 +30,9 @@ from .fft import fft_pallas, fft_xla
 from .jacobi2d import jacobi2d_pallas, jacobi2d_xla
 from .matmul import matmul_pallas, matmul_xla
 from .paged_attention import (paged_decode_attention_pallas,
-                              paged_decode_attention_xla)
+                              paged_decode_attention_xla,
+                              paged_prefill_attention_pallas,
+                              paged_prefill_attention_xla)
 from .pathfinder import pathfinder_pallas, pathfinder_xla
 from .roi_align import roi_align_xla
 from .softmax import softmax_pallas, softmax_xla
@@ -41,7 +44,18 @@ _IMPL: str | None = None  # resolved lazily
 def default_impl() -> str:
     global _IMPL
     if _IMPL is None:
-        _IMPL = "pallas" if jax.default_backend() == "tpu" else "xla"
+        # REPRO_KERNEL_IMPL overrides the backend default (CI runs the
+        # serving/kernel suites a second time with =interpret so the
+        # Pallas paged prefill/decode bodies execute on the CPU runner)
+        env = os.environ.get("REPRO_KERNEL_IMPL")
+        if env:
+            if env not in ("pallas", "interpret", "xla"):
+                raise ValueError(
+                    f"REPRO_KERNEL_IMPL={env!r}: expected pallas, "
+                    "interpret, or xla")
+            _IMPL = env
+        else:
+            _IMPL = "pallas" if jax.default_backend() == "tpu" else "xla"
     return _IMPL
 
 
@@ -109,6 +123,22 @@ def paged_decode_attention(q, k_pool, v_pool, block_table, kv_len, *,
     return paged_decode_attention_pallas(q, k_pool, v_pool, block_table,
                                          kv_len, scale=scale,
                                          interpret=impl == "interpret")
+
+
+def paged_prefill_attention(q, k_pool, v_pool, block_table, q_start, *,
+                            impl=None, scale=None, window=None):
+    """One prompt chunk's causal attention against a paged KV pool (the
+    chunk's K/V must already sit in its block).  Sliding windows ride the
+    per-block gather path, same as decode (traced per-layer windows would
+    defeat the Pallas block-skip predicate)."""
+    impl = impl or default_impl()
+    if impl == "xla" or window is not None:
+        return paged_prefill_attention_xla(q, k_pool, v_pool, block_table,
+                                           q_start, scale=scale,
+                                           window=window)
+    return paged_prefill_attention_pallas(q, k_pool, v_pool, block_table,
+                                          q_start, scale=scale,
+                                          interpret=impl == "interpret")
 
 
 def ssd_scan(x, dt, a_log, b_mat, c_mat, *, impl=None, d_skip=None, h0=None,

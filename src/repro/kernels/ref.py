@@ -166,6 +166,43 @@ def attention_ref(q, k, v, *, causal=True, window=None, scale=None,
     return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
 
 
+def paged_prefill_attention_ref(q, k_pool, v_pool, block_table, q_start, *,
+                                scale=None, window=None):
+    """Causal chunk attention against a paged KV pool, fully materialized.
+
+    q: (B, Hq, Sq, D) — one prompt chunk per batch row, whose first query
+    sits at absolute position ``q_start[b]``; k_pool/v_pool:
+    (n_blocks, Hkv, bs, D); block_table: (B, M) pool block ids mapping
+    logical positions ``[j*bs, (j+1)*bs)``.  Query ``q_start + i`` attends
+    every pool position ``<= q_start + i`` (the blocks written by earlier
+    chunks plus this chunk's own block).  Gathers the whole table into a
+    dense (B, Hkv, M*bs, D) cache — the deliberately naive oracle the
+    production paths are tested against."""
+    b, hq, sq, d = q.shape
+    _, hkv, bs, _ = k_pool.shape
+    m = block_table.shape[1]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    k = jnp.take(k_pool, block_table, axis=0)      # (B, M, Hkv, bs, D)
+    v = jnp.take(v_pool, block_table, axis=0)
+    k = k.transpose(0, 2, 1, 3, 4).reshape(b, hkv, m * bs, d)
+    v = v.transpose(0, 2, 1, 3, 4).reshape(b, hkv, m * bs, d)
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = q_start[:, None] + jnp.arange(sq)[None, :]        # (B, Sq)
+    kpos = jnp.arange(m * bs)[None, None, :]                 # (1, 1, M*bs)
+    mask = kpos <= qpos[:, :, None]
+    if window is not None:
+        mask &= kpos > qpos[:, :, None] - window
+    logits = jnp.where(mask[:, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
 def ssd_ref(x, dt, a_log, b_mat, c_mat, *, d_skip=None, h0=None):
     """Mamba2 SSD, exact sequential recurrence (the oracle).
 

@@ -47,6 +47,10 @@ def main():
     ap.add_argument("--router", default="round_robin",
                     choices=list(ROUTER_POLICIES),
                     help="cluster request-routing policy (--replicas > 1)")
+    ap.add_argument("--hysteresis", type=int, default=4,
+                    help="cluster anti-thrash guard: a preempted request "
+                         "is not re-admitted for this many scheduler "
+                         "rounds (--replicas > 1)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -63,7 +67,8 @@ def main():
                             total_slots=args.max_batch,
                             cache_len=args.cache_len, router=args.router,
                             block_size=args.block_size,
-                            n_blocks=args.n_blocks, bucket=bucket)
+                            n_blocks=args.n_blocks, bucket=bucket,
+                            preempt_hysteresis=args.hysteresis)
     else:
         eng = ServeEngine(model, params, max_batch=args.max_batch,
                           cache_len=args.cache_len, mode=args.mode,

@@ -209,6 +209,40 @@ def attn_decode_paged(p, x, k_pool, v_pool, block_table, kv_len, cfg, *,
     return jnp.einsum("bsh,hd->bsd", out, p["wo"]), k_pool, v_pool
 
 
+def attn_prefill_paged(p, x, cfg, k_pool, v_pool, bt_row, chunk, *,
+                       window=None):
+    """One ``block_size`` chunk of a paged prefill.  x: (1, bs, d_model) —
+    the chunk's hidden states, covering absolute positions
+    ``[chunk * bs, (chunk + 1) * bs)``; k_pool/v_pool:
+    (n_blocks, Hkv, bs, hd) for this layer; bt_row: (max_blocks,) int32
+    block table of the request being prefilled; ``chunk`` may be traced
+    (one compile serves every chunk of every prompt).
+
+    The chunk's K/V are projected from just these bs rows and written
+    straight into pool block ``bt_row[chunk]`` — no ``(Hkv, prompt_len, D)``
+    cache is ever materialized — then the chunk's queries attend causally
+    over blocks ``0..chunk`` through the block table
+    (``ops.paged_prefill_attention``).  Returns (out, k_pool, v_pool)."""
+    b, s, _ = x.shape
+    bs = k_pool.shape[2]
+    assert b == 1 and s == bs, (
+        f"paged prefill runs one request in block_size chunks: got batch "
+        f"{b}, chunk {s} vs block_size {bs}")
+    q, k, v = _project_qkv(p, x, cfg)
+    q_start = jnp.asarray(chunk, jnp.int32) * bs
+    if cfg.rope_theta:
+        pos = q_start + jnp.arange(s)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    blk = jnp.asarray(bt_row, jnp.int32)[jnp.asarray(chunk, jnp.int32)]
+    k_pool = jax.lax.dynamic_update_index_in_dim(k_pool, k[0], blk, 0)
+    v_pool = jax.lax.dynamic_update_index_in_dim(v_pool, v[0], blk, 0)
+    out = ops.paged_prefill_attention(q, k_pool, v_pool, bt_row[None],
+                                      q_start[None], window=window)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), k_pool, v_pool
+
+
 def attn_cross_decode(p, x, k_cross, v_cross, cfg):
     """Decode-time cross-attention against fixed encoder KV."""
     b = x.shape[0]

@@ -21,8 +21,13 @@ pool + per-slot block tables; see ``repro.serving.kvcache``):
 
   model.paged_cache_init(batch=, n_blocks=, block_size=, max_blocks=,
                          dtype=)              - empty block-pool cache
-  model.cache_paged_write(pc, sub, i, ids)    - scatter a batch-1 prefill
-                                                cache into pool blocks
+  model.cache_dtype(params)                   - KV dtype a prefill would
+                                                produce (pool allocation)
+  model.prefill_paged(params, pc, batch, slot, chunk, prefill_len)
+      - one block_size chunk of a prompt prefilled straight into pool
+        blocks via slot ``slot``'s block table (chunked prefill: no dense
+        batch-1 cache is materialized; the engine allocates each chunk's
+        block just before the call)
   model.decode_paged(params, pc, tokens)      - decode via block tables
 
 All are None for scan-layout caches (ssm/hybrid/encdec); the serving
@@ -56,7 +61,8 @@ class Model:
     cache_slot_write: Callable | None = None
     # paged-KV serving hooks (None when the family has no paged layout)
     paged_cache_init: Callable | None = None
-    cache_paged_write: Callable | None = None
+    cache_dtype: Callable | None = None
+    prefill_paged: Callable | None = None
     decode_paged: Callable | None = None
 
     def init(self, key):
@@ -83,7 +89,9 @@ def build_model(cfg: ModelConfig) -> Model:
             cache_slot_write=transformer.decoder_cache_slot_write,
             paged_cache_init=functools.partial(
                 transformer.decoder_paged_cache_init, cfg),
-            cache_paged_write=transformer.decoder_cache_paged_write,
+            cache_dtype=transformer.decoder_cache_dtype,
+            prefill_paged=functools.partial(
+                transformer.decoder_prefill_paged, cfg=cfg),
             decode_paged=functools.partial(
                 transformer.decoder_decode_step_paged, cfg=cfg),
         )

@@ -15,7 +15,7 @@ import numpy as np
 
 from ..distributed.act_sharding import constrain
 from .attention import (attn_decode, attn_decode_paged, attn_forward,
-                        attn_prefill, attn_templates)
+                        attn_prefill, attn_prefill_paged, attn_templates)
 from .layers import (PT, embed_lookup, embed_templates, init_params,
                      param_pspecs, rmsnorm, softmax_xent_chunked,
                      stack_layers, swiglu_apply, swiglu_templates)
@@ -326,39 +326,94 @@ def decoder_paged_cache_init(cfg, *, batch: int, n_blocks: int,
             "pos": jnp.zeros((batch,), jnp.int32)}
 
 
-def decoder_cache_paged_write(pcache, sub, slot, block_ids):
-    """Prefill-on-admit for the paged layout: scatter a batch-1 dense
-    prefill cache into pool blocks and install slot ``slot``'s block table.
+def decoder_cache_dtype(params):
+    """KV dtype a prefill would produce (the embedding activations'
+    dtype) — lets the engine build the paged pool before any prefill
+    has run."""
+    return params["embed"]["embedding"].dtype
 
-    sub["k"]/["v"]: (L, 1, Hkv, S, hd); sub["pos"]: true length (<= S when
-    the prompt was bucketed).  ``block_ids``: the slot's full (max_blocks,)
-    int32 table row — allocated ids for the first ceil(true_len/bs)
-    entries, null (0) beyond, so pad-only tail chunks land in the scratch
-    block.  ``slot`` and ``block_ids`` may be traced (one compile covers
-    all slots and block assignments)."""
-    kp, vp = pcache["kp"], pcache["vp"]
-    bs = kp.shape[3]
-    l, _, hkv, s, hd = sub["k"].shape
-    n_chunks = -(-s // bs)
-    assert n_chunks <= block_ids.shape[0], (
-        f"prefill of {s} positions needs {n_chunks} blocks but the block "
-        f"table holds {block_ids.shape[0]}")
-    pad = n_chunks * bs - s
 
-    def chunks(x):
-        x = x[:, 0]                              # (L, Hkv, S, hd)
-        if pad:
-            x = jnp.concatenate(
-                [x, jnp.zeros((l, hkv, pad, hd), x.dtype)], axis=2)
-        return x.reshape(l, hkv, n_chunks, bs, hd).transpose(0, 2, 1, 3, 4)
+def _embed_chunk(params, batch, q_start, bs, cfg):
+    """Embed combined positions ``[q_start, q_start + bs)`` of a prompt.
 
-    ids = block_ids[:n_chunks]
-    kp = kp.at[:, ids].set(chunks(sub["k"]))
-    vp = vp.at[:, ids].set(chunks(sub["v"]))
-    bt = pcache["bt"].at[slot].set(jnp.asarray(block_ids, jnp.int32))
+    ``batch["tokens"]``: (1, bs) token ids aligned to those positions (the
+    engine feeds 0 where a position is a model-side prefix row or pad).
+    For vlm, positions below ``n_patches`` take the projected patch
+    embedding instead of the token row."""
+    tok = embed_lookup(params["embed"], batch["tokens"])       # (1, bs, D)
+    if cfg.family != "vlm":
+        return tok
+    patches = jnp.einsum("bpe,ed->bpd", batch["patches"],
+                         params["patch_proj"]).astype(tok.dtype)
+    pos = q_start + jnp.arange(bs)                             # (bs,)
+    pat = jnp.take(patches[0], jnp.clip(pos, 0, cfg.n_patches - 1), axis=0)
+    return jnp.where((pos < cfg.n_patches)[None, :, None], pat[None], tok)
+
+
+def decoder_prefill_paged(params, pcache, batch, slot, chunk, prefill_len,
+                          cfg):
+    """One ``block_size`` chunk of a paged prefill for a single request.
+
+    Chunked prefill: the chunk's hidden states run through the whole layer
+    stack; each layer projects the chunk's K/V, writes them straight into
+    the pool block ``pcache["bt"][slot, chunk]`` (installed by the engine
+    before the call), and attends causally over blocks ``0..chunk`` via
+    the block table — the dense batch-1 ``(L, Hkv, prompt_len, hd)``
+    prefill cache of the scatter-on-admit path never exists.  ``slot``,
+    ``chunk`` and ``prefill_len`` may all be traced, so one compile serves
+    every chunk of every prompt at every slot (no length bucketing
+    needed).
+
+    MoE chunks route with exact (dropless) dispatch like decode: capacity
+    dropping depends on the batch a token shares, which would make a
+    chunk's output depend on where the chunk boundaries fall.
+
+    Returns (last-true-token logits (1, V), new pcache) — the logits row
+    is the request's next-token distribution only on the final chunk
+    (``prefill_len <= (chunk + 1) * bs``); earlier chunks return a
+    mid-prompt row the engine discards.  ``pcache["pos"][slot]`` advances
+    to ``min((chunk + 1) * bs, prefill_len)``."""
+    bs = pcache["kp"].shape[3]
+    chunk = jnp.asarray(chunk, jnp.int32)
+    prefill_len = jnp.asarray(prefill_len, jnp.int32)
+    q_start = chunk * bs
+    x = _embed_chunk(params, batch, q_start, bs, cfg)
+    x = constrain(x, "hidden")
+    bt_row = jax.lax.dynamic_index_in_dim(pcache["bt"], slot, 0,
+                                          keepdims=False)      # (M,)
+    windows = windows_array(cfg)
+
+    def scan_fn(carry, inp):
+        x, kp_all, vp_all = carry
+        if windows is None:
+            (lp, idx), w = inp, None
+        else:
+            lp, idx, w = inp
+        kp = jax.lax.dynamic_index_in_dim(kp_all, idx, 0, keepdims=False)
+        vp = jax.lax.dynamic_index_in_dim(vp_all, idx, 0, keepdims=False)
+        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        a, kp, vp = attn_prefill_paged(lp["attn"], h, cfg, kp, vp, bt_row,
+                                       chunk, window=w)
+        x = x + a
+        h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = constrain(x + _ffn(lp, h, cfg, exact=True), "hidden")
+        kp_all = jax.lax.dynamic_update_index_in_dim(kp_all, kp, idx, 0)
+        vp_all = jax.lax.dynamic_update_index_in_dim(vp_all, vp, idx, 0)
+        return (x, kp_all, vp_all), None
+
+    idxs = jnp.arange(cfg.n_layers)
+    xs = ((params["layers"], idxs) if windows is None
+          else (params["layers"], idxs, windows))
+    (x, kp, vp), _ = jax.lax.scan(
+        scan_fn, (x, pcache["kp"], pcache["vp"]), xs)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    # last *true* row of this chunk (meaningful on the final chunk only)
+    last = jnp.clip(prefill_len - 1 - q_start, 0, bs - 1)
+    x_last = jax.lax.dynamic_index_in_dim(x[0], last, 0, keepdims=True)
     pos = pcache["pos"].at[slot].set(
-        jnp.reshape(jnp.asarray(sub["pos"], jnp.int32), ()))
-    return {"kp": kp, "vp": vp, "bt": bt, "pos": pos}
+        jnp.minimum(q_start + bs, prefill_len))
+    return _lm_logits(params, x_last, cfg), {
+        "kp": kp, "vp": vp, "bt": pcache["bt"], "pos": pos}
 
 
 def decoder_decode_step_paged(params, pcache, tokens, cfg):

@@ -36,8 +36,17 @@ of the memory system.  The serving analog built here:
   generated prefix (``Request.done``) for re-prefill on a later
   admission.  Request-id-keyed sampling makes the resumed stream
   identical to the uninterrupted one, so preemption is invisible in the
-  output (asserted in tests/benches).  ``admission="reserve"`` is also
-  accepted for a no-preemption cluster.
+  output (asserted in tests/benches).  Chunked paged prefill makes a
+  *mid-prefill* request preemptable too (its ``done`` is simply
+  unchanged), and pressure raised by a long prompt's own prefill growth
+  resolves the same way.  ``admission="reserve"`` is also accepted for a
+  no-preemption cluster.
+
+* requeued victims re-enter behind a **preemption hysteresis**
+  (``preempt_hysteresis`` scheduler rounds, waived when the cluster is
+  idle): the raw FIFO requeue could re-admit a victim straight back into
+  the pressure that evicted it, thrashing admit → preempt → admit with a
+  wasted re-prefill per bounce.
 
 Device-memory caveat: each replica's device-side block pool is sized to
 the full shared pool so that the shared allocator's block ids index it
@@ -73,6 +82,17 @@ class ClusterEngine:
     router: one of ``ROUTER_POLICIES``.  admission: "overcommit"
     (default; preemption resolves pool pressure) or "reserve".
 
+    preempt_hysteresis: anti-thrash guard — a preempted request is not
+    re-admissible before ``k`` scheduler rounds have passed since its
+    eviction.  The raw FIFO requeue (k=0) can bounce a victim straight
+    back into the same pressure (admit → grow → preempt → re-admit …),
+    paying a re-prefill per bounce while the pool stays saturated;
+    holding it out a few rounds lets the survivors that caused the
+    pressure retire some tokens (or finish) first.  Head-of-line blocking
+    is preserved — nothing skips past a cooling-down victim — and the
+    hysteresis is waived while the whole cluster is idle (an empty
+    cluster cannot be under pressure, so waiting would only stall).
+
     ``generate`` mirrors ``ServeEngine.generate``; ``last_stats`` is the
     cluster-level aggregate (mode="cluster", ``router_policy`` set) and
     ``replica_stats`` keeps the per-replica EngineStats.
@@ -84,7 +104,8 @@ class ClusterEngine:
                  n_blocks: int | None = None,
                  bucket: str | int | None = None,
                  extra_inputs: dict | None = None,
-                 admission: str = "overcommit"):
+                 admission: str = "overcommit",
+                 preempt_hysteresis: int = 4):
         if router not in ROUTER_POLICIES:
             raise ValueError(f"router={router!r}: pick one of "
                              f"{ROUTER_POLICIES}")
@@ -96,8 +117,12 @@ class ClusterEngine:
             raise ValueError(
                 f"ClusterEngine needs the paged KV layout but family "
                 f"{model.cfg.family!r} has no paged cache hooks")
+        if preempt_hysteresis < 0:
+            raise ValueError(
+                f"preempt_hysteresis={preempt_hysteresis} must be >= 0")
         self.router = router
         self.total_slots = total_slots
+        self.preempt_hysteresis = preempt_hysteresis
         if n_blocks is None:
             n_blocks = total_slots * blocks_needed(cache_len, block_size) + 1
         self.pool = BlockAllocator(n_blocks, block_size)
@@ -163,9 +188,11 @@ class ClusterEngine:
         """Insert a preempted request back into the global queue keeping it
         sorted by submission order (a preempted request was admitted before
         anything still queued, so FIFO fairness puts it first - but two
-        preemptions can land out of order)."""
+        preemptions can land out of order).  Queue items are
+        (seq, order, request, ready_round); seq is unique, so the sort
+        never compares requests."""
         queue.append(item)
-        ordered = sorted(queue)
+        ordered = sorted(queue, key=lambda it: it[0])
         queue.clear()
         queue.extend(ordered)
 
@@ -191,24 +218,33 @@ class ClusterEngine:
         for e in self.engines:
             e.begin_session(key)
         queue = collections.deque(
-            (seq, order, r) for seq, (order, r) in enumerate(todo))
+            (seq, order, r, 0) for seq, (order, r) in enumerate(todo))
         out: list[Result | None] = [None] * len(todo)
         admit_seq = 0
         preempts = 0
+        rounds = 0
         t_start = time.perf_counter()
         try:
             while queue or any(e.session_active for e in self.engines):
                 # route: FIFO head into a replica with slot + pool headroom
                 while queue:
-                    e = self._route(queue[0][2])
+                    seq, order, r, ready = queue[0]
+                    if ready > rounds and any(e.session_active
+                                              for e in self.engines):
+                        # anti-thrash hysteresis: a fresh victim waits out
+                        # its cool-down (head-of-line: nothing skips it);
+                        # waived when the cluster is idle — no live request
+                        # can be causing pressure then
+                        break
+                    e = self._route(r)
                     if e is None:
                         break
-                    seq, order, r = queue.popleft()
-                    res = e.session_admit(r, tag=seq, extra_row=order,
-                                          admit_seq=admit_seq)
+                    queue.popleft()
+                    # paged admission always defers to session_step, so
+                    # there is no admission-time Result to collect
+                    e.session_admit(r, tag=seq, extra_row=order,
+                                    admit_seq=admit_seq)
                     admit_seq += 1
-                    if res is not None:
-                        out[seq] = res
                 stepped = False
                 for e in self.engines:
                     if e.session_active == 0:
@@ -224,14 +260,19 @@ class ClusterEngine:
                             ve, vi = victim
                             tag, r2 = ve.session_preempt(vi)
                             preempts += 1
-                            self._requeue(queue, (tag, todo[tag][0], r2))
+                            self._requeue(
+                                queue,
+                                (tag, todo[tag][0], r2,
+                                 rounds + self.preempt_hysteresis))
                     for tag, res in finished:
                         out[tag] = res
                     stepped = True
+                rounds += 1
                 if not stepped and queue:
                     # no replica active and the head cannot be admitted:
                     # impossible once check_request passed (an idle cluster
-                    # has every block free), so fail loudly over spinning
+                    # has every block free and waives the hysteresis), so
+                    # fail loudly over spinning
                     raise RuntimeError(
                         "cluster stalled with a non-empty queue")
         except BaseException:

@@ -30,29 +30,38 @@ Continuous mode supports two KV layouts (``kv_layout``):
 
 * ``paged`` - KV lives in one global pool of fixed-size blocks
   (``repro.serving.kvcache.BlockAllocator``) addressed through per-slot
-  block tables; decode runs the paged-attention kernel
-  (``repro.kernels.paged_attention``).  Admission is bounded by *free
-  blocks*, not a per-slot length: a request is admitted when the pool can
-  cover its worst-case block count, blocks are allocated lazily as its
-  position grows, and a finished request returns its blocks immediately -
-  so a trace whose summed KV footprint exceeds ``max_batch * cache_len``
-  still serves as long as the *concurrently live* footprint fits the pool.
-  ``cache_len`` remains only the per-request context bound (the block
-  table's width).  The allocator may be *external and shared* between
-  engines (``allocator=``): a multi-replica cluster
-  (``repro.serving.cluster.ClusterEngine``) passes one pool to every
-  replica, tagging allocations with ``owner=``.
+  block tables; *both* phases run the paged-attention kernels
+  (``repro.kernels.paged_attention``): decode single-token gather, and a
+  **chunked prefill** that admits a prompt in ``block_size`` chunks, each
+  chunk's K/V written straight into a just-allocated pool block and its
+  queries attending over the blocks written so far — the dense batch-1
+  ``(L, Hkv, prompt_len, hd)`` prefill cache of the old
+  prefill-then-scatter path never exists, and one compiled chunk shape
+  serves every prompt length.  Admission is bounded by *free blocks*, not
+  a per-slot length: blocks are allocated lazily as a request's position
+  grows (prefill chunks and decode writes alike), and a finished request
+  returns its blocks immediately - so a trace whose summed KV footprint
+  exceeds ``max_batch * cache_len`` still serves as long as the
+  *concurrently live* footprint fits the pool.  ``cache_len`` remains
+  only the per-request context bound (the block table's width).  The
+  allocator may be *external and shared* between engines (``allocator=``):
+  a multi-replica cluster (``repro.serving.cluster.ClusterEngine``)
+  passes one pool to every replica, tagging allocations with ``owner=``.
 
 Paged admission policies (``admission=``):
 
 * ``reserve`` (default) - admit only when the pool covers the request's
   worst case beyond standing reservations; lazy growth can never fail.
-* ``overcommit`` - admit when the *prefill* fits; lazy growth may then
-  find the pool empty, which raises
+* ``overcommit`` - admit when the *first prefill chunk's* block is free;
+  lazy growth (a later prefill chunk or a decode write) may then find
+  the pool empty, which raises
   :class:`repro.serving.kvcache.PoolPressure` out of ``session_step`` so
   a cluster scheduler can preempt a victim (``session_preempt``: blocks
   freed, request re-queued carrying its generated prefix in
-  ``Request.done`` for re-prefill) and retry.  Overcommit is a cluster
+  ``Request.done`` for re-prefill) and retry — a long prompt can be
+  preempted *mid-prefill* (its chunks already computed are simply redone
+  on re-admission) and a retried step resumes a surviving
+  half-prefilled slot at its next chunk.  Overcommit is a cluster
   driver mode - plain ``generate`` on an overcommitted engine propagates
   the pressure error instead of preempting.
 
@@ -62,14 +71,15 @@ The continuous scheduler is exposed as a *stepwise session API*
 interleave several engines over one pool; ``generate`` drives the same
 API for the single-engine case.
 
-Prompt-length bucketing (``bucket=``): prompts are prefilled at their
-exact length by default - one compile per distinct length.  With
+Prompt-length bucketing (``bucket=``): dense-layout prompts are prefilled
+at their exact length by default - one compile per distinct length.  With
 ``bucket="pow2"`` (or an integer multiple), continuous-mode prefills are
 right-padded up to the bucket boundary and the true length rides in
 ``batch["prefill_len"]``; causal masking hides the pads, so outputs are
 identical while compiles drop to one per bucket
 (``EngineStats.prefill_compiles`` counts distinct compiled prefill
-shapes).
+shapes).  The paged layout ignores ``bucket``: its chunked prefill
+compiles exactly one ``(1, block_size)`` chunk shape for all prompts.
 
 Per-request sampling is vectorized and **request-keyed**: row ``i``'s
 ``t``-th token is sampled with ``fold_in(fold_in(key, rid_i), t)``, so a
@@ -110,6 +120,14 @@ class Request:
     # time-to-first-token of the *first* admission, carried across
     # preemptions so Result.prefill_ms stays the request's real TTFT
     first_ttft_ms: float | None = None
+    # perf_counter of the *first* admission, carried across preemptions
+    # that fired before any token was sampled (mid-prefill eviction):
+    # the eventual first token's TTFT must span the aborted attempt and
+    # the hysteresis wait, not restart at re-admission
+    first_admit_t: float | None = None
+    # times this request has been preempted (a victim evicted mid-prefill
+    # carries no ``done`` prefix, so ``done`` alone cannot mark a requeue)
+    requeues: int = 0
 
 
 @dataclasses.dataclass
@@ -148,9 +166,15 @@ class _Slot:
     decode_s: float = 0.0
     steps: int = 0
     # paged layout bookkeeping
-    prefill_pos: int = 0           # cache positions written by prefill
+    prefill_pos: int = 0           # cache positions the prefill will write
     blocks: list[int] = dataclasses.field(default_factory=list)
     reserve_left: int = 0          # worst-case blocks not yet allocated
+    # chunked-prefill progress: chunks completed so far, or None once the
+    # prefill has finished and the first token is sampled (dense slots are
+    # always None — their prefill runs at admit)
+    chunks_done: int | None = None
+    extra_row: int = 0             # extra_inputs row (vlm patches)
+    admit_t: float = 0.0           # perf_counter at admission (TTFT base)
 
 
 @dataclasses.dataclass
@@ -171,6 +195,11 @@ class _Session:
     preempted: int = 0
     requeued: int = 0
     admit_counter: int = 0
+    # Results finished during session_step's prefill phase, parked here so
+    # they survive a PoolPressure raised later in the same step (the slot
+    # is already released — a lost local would drop the Result for good);
+    # the next successful session_step returns them
+    finished_pending: list = dataclasses.field(default_factory=list)
 
 
 def _sample_rows(logits, temps, key, rids, tok_idx):
@@ -284,13 +313,12 @@ class ServeEngine:
                 allocator = BlockAllocator(n_blocks, block_size)
             allocator.claim_policy(admission)
             self.allocator = allocator
-            # prefill at the (bucketed) prompt length - the paged write
-            # scatters it into blocks, no cache_len padding needed
-            self._prefill = jax.jit(
-                lambda p, b: model.prefill(p, b, cache_len=None))
+            # chunked prefill: one block_size chunk per call, slot/chunk/
+            # length all traced — a single compile serves every prompt
+            # length (``bucket=`` is ignored; there is nothing to bucket)
+            self._prefill_chunk = jax.jit(model.prefill_paged,
+                                          donate_argnums=(1,))
             self._decode = jax.jit(model.decode_paged, donate_argnums=(1,))
-            self._paged_write = jax.jit(model.cache_paged_write,
-                                        donate_argnums=(0,))
             self._bt_set = jax.jit(kvcache.bt_set_entry, donate_argnums=(0,))
             self._slot_release = jax.jit(kvcache.slot_release,
                                          donate_argnums=(0,))
@@ -400,11 +428,6 @@ class ServeEngine:
             b = -(-n // int(self.bucket)) * int(self.bucket)
         return max(min(b, self.cache_len - self._n_prefix()), n)
 
-    def _prefill_need(self, r: Request) -> int:
-        """Blocks the admission prefill itself will allocate."""
-        return blocks_needed(
-            self._n_prefix() + len(r.prompt) + len(r.done), self.block_size)
-
     def _worst_blocks(self, r: Request) -> int:
         """Worst-case block count for a request (all cache positions it can
         ever write), computable before prefill runs."""
@@ -481,26 +504,42 @@ class ServeEngine:
         where ``check_request`` already enforced the per-slot budget).
 
         reserve: the pool must cover the request's worst case on top of
-        standing reservations, so lazy growth can never fail mid-decode.
-        overcommit: only the admission prefill must fit; later growth may
-        raise PoolPressure, resolved by cluster preemption.  A False here
-        always clears once live requests finish and recycle blocks
-        (``check_request`` rejected requests that exceed the whole pool)."""
+        standing reservations, so lazy growth can never fail mid-prefill
+        or mid-decode.
+        overcommit: only the *first prefill chunk's* block must be free —
+        prefill itself now grows lazily chunk by chunk, so admission is
+        bounded by free blocks for prefill exactly as it is for decode,
+        and later growth (either phase) may raise PoolPressure, resolved
+        by cluster preemption.  A False here always clears once live
+        requests finish and recycle blocks (``check_request`` rejected
+        requests that exceed the whole pool)."""
         if self.kv_layout != "paged":
             return True
         if self._admission == "overcommit":
-            return self.allocator.n_avail >= self._prefill_need(r)
+            return self.allocator.n_avail >= 1
         return self.allocator.n_avail >= self._worst_blocks(r)
 
     def session_admit(self, r: Request, tag: int, extra_row: int = 0,
                       admit_seq: int | None = None) -> Result | None:
-        """Prefill ``r`` into the first free slot and sample its first
-        token.  Returns the finished Result when the token budget is
-        satisfied by the admission itself, else None (the request now
-        occupies a slot).  ``tag`` is echoed back with the Result from
-        ``session_step``; ``extra_row`` indexes ``extra_inputs``;
-        ``admit_seq`` orders admissions globally for victim selection
-        (defaults to a per-engine counter)."""
+        """Admit ``r`` into the first free slot.
+
+        dense: prefill runs here (prefill-on-admit) and the first token is
+        sampled; returns the finished Result when the token budget is
+        satisfied by the admission itself, else None.
+
+        paged: admission only installs the request and (under reserve)
+        promises its worst case — the prefill itself runs *chunk by chunk*
+        inside ``session_step``, allocating each chunk's block lazily, so
+        no block is held before it is written and pool pressure during a
+        long prompt's prefill surfaces exactly like decode-time growth
+        (PoolPressure → cluster preemption, including of the half-prefilled
+        request itself).  Always returns None; budget-satisfied-by-prefill
+        results arrive from ``session_step``.
+
+        ``tag`` is echoed back with the Result from ``session_step``;
+        ``extra_row`` indexes ``extra_inputs``; ``admit_seq`` orders
+        admissions globally for victim selection (defaults to a per-engine
+        counter)."""
         sess = self._require_session()
         slot = self.session_free_slot()
         if slot is None:
@@ -508,8 +547,35 @@ class ServeEngine:
         if admit_seq is None:
             admit_seq = sess.admit_counter
         sess.admit_counter = max(sess.admit_counter, admit_seq) + 1
-        prompt = np.asarray(list(r.prompt) + list(r.done), np.int32)
         t0 = time.perf_counter()
+        if self.kv_layout == "paged":
+            prefill_pos = (self._n_prefix() + len(r.prompt) + len(r.done))
+            self._check_budget(prefill_pos,
+                               r.max_new_tokens - len(r.done), r.rid)
+            reserve_left = 0
+            if self._admission == "reserve":
+                # promise the whole worst case up front; every lazy block
+                # allocation (prefill chunks included) converts one
+                # promise into a live block, so growth can never fail
+                reserve_left = self._worst_blocks(r)
+                self.allocator.reserve(reserve_left)
+            if sess.cache is None:
+                sess.cache = self.model.paged_cache_init(
+                    batch=self.max_batch, n_blocks=self.allocator.n_blocks,
+                    block_size=self.block_size, max_blocks=self.max_blocks,
+                    dtype=self.model.cache_dtype(self.params))
+            if r.done or r.requeues:
+                sess.requeued += 1
+            sess.slots[slot] = _Slot(
+                req=r, tag=tag, tokens=[], ttft_ms=0.0, admit_seq=admit_seq,
+                prefill_pos=prefill_pos, reserve_left=reserve_left,
+                chunks_done=0, extra_row=extra_row,
+                admit_t=(r.first_admit_t if r.first_admit_t is not None
+                         else t0))
+            sess.temps[slot] = r.temperature
+            sess.rids[slot] = r.rid
+            return None
+        prompt = np.asarray(list(r.prompt) + list(r.done), np.int32)
         plen = len(prompt)
         sb = self._bucket_len(plen)
         if self.bucket:
@@ -530,35 +596,9 @@ class ServeEngine:
         prefill_pos = int(np.asarray(sub["pos"]).reshape(()))
         self._check_budget(prefill_pos, r.max_new_tokens - len(r.done),
                            r.rid)
-        blocks: list[int] = []
-        reserve_left = 0
-        if self.kv_layout == "paged":
-            n_pref = blocks_needed(prefill_pos, self.block_size)
-            blocks = self.allocator.alloc_n(n_pref, self.owner)
-            if self._admission == "reserve":
-                reserve_left = self._worst_blocks(r) - n_pref
-                try:
-                    self.allocator.reserve(reserve_left)
-                except MemoryError:
-                    # caller skipped session_can_admit and a co-tenant
-                    # holds the headroom: hand the prefill blocks back
-                    # (they are not in any slot yet, so session_abort
-                    # would never see them)
-                    self.allocator.free(blocks)
-                    raise
-            if sess.cache is None:
-                sess.cache = self.model.paged_cache_init(
-                    batch=self.max_batch, n_blocks=self.allocator.n_blocks,
-                    block_size=self.block_size, max_blocks=self.max_blocks,
-                    dtype=sub["k"].dtype)
-            row = np.zeros((self.max_blocks,), np.int32)
-            row[:n_pref] = blocks
-            sess.cache = self._paged_write(sess.cache, sub, slot,
-                                           jnp.asarray(row))
-        else:
-            if sess.cache is None:
-                sess.cache = self._cache_expand(sub, self.max_batch)
-            sess.cache = self._slot_write(sess.cache, sub, slot)
+        if sess.cache is None:
+            sess.cache = self._cache_expand(sub, self.max_batch)
+        sess.cache = self._slot_write(sess.cache, sub, slot)
         # the request's t-th token always uses stream index t, so a
         # re-admitted (preempted) request resumes its stream at len(done)
         tok = self._sample(logits, jnp.full((1,), r.temperature),
@@ -566,15 +606,14 @@ class ServeEngine:
                            jnp.asarray([len(r.done)], np.int32))
         tok = int(np.asarray(jax.block_until_ready(tok))[0])
         ttft_ms = (time.perf_counter() - t0) * 1e3
-        if r.done:
+        if r.done or r.requeues:
             sess.requeued += 1
-        else:
+        if not r.done:
             sess.ttfts.append(ttft_ms)
         if r.first_ttft_ms is not None:
             ttft_ms = r.first_ttft_ms   # re-admission: keep the real TTFT
         s = _Slot(req=r, tag=tag, tokens=[tok], ttft_ms=ttft_ms,
-                  admit_seq=admit_seq, prefill_pos=prefill_pos,
-                  blocks=blocks, reserve_left=reserve_left)
+                  admit_seq=admit_seq, prefill_pos=prefill_pos, admit_t=t0)
         if len(r.done) + 1 >= r.max_new_tokens:
             res = self._finish(s)       # satisfied by prefill alone
             self._release(s, slot)
@@ -587,17 +626,30 @@ class ServeEngine:
         return None
 
     def session_step(self) -> list[tuple[int, Result]]:
-        """One decode step over the slot pool.  Returns the (tag, Result)
-        pairs that finished this step; empty when no slot is live.  Under
-        overcommit admission, raises PoolPressure when lazy block growth
-        finds the pool empty - the step has not run, already-grown slots
-        keep their blocks, and the call can be retried after the caller
-        frees blocks (``session_preempt``)."""
+        """One scheduler step over the slot pool: finish any pending
+        chunked prefills (paged layout), then one decode launch.  Returns
+        the (tag, Result) pairs that finished this step; empty when no
+        slot is live.  Under overcommit admission, raises PoolPressure
+        when lazy block growth (a prefill chunk's block or a decode
+        slot's next write position) finds the pool empty - the decode has
+        not run, prefill chunks already computed and blocks already grown
+        stay put, and the call can be retried after the caller frees
+        blocks (``session_preempt``) - a retried step resumes a
+        half-prefilled slot at its next chunk."""
         sess = self._require_session()
         bsz = self.max_batch
+        if self.kv_layout == "paged":
+            for i in range(bsz):
+                s = sess.slots[i]
+                if s is not None and s.chunks_done is not None:
+                    res = self._advance_prefill(sess, i, s)
+                    if res is not None:     # satisfied by prefill alone
+                        # park it: a PoolPressure later in this same step
+                        # must not lose an already-released slot's Result
+                        sess.finished_pending.append((s.tag, res))
+                        self._release(s, i)
+                        sess.slots[i] = None
         active = [i for i in range(bsz) if sess.slots[i] is not None]
-        if not active:
-            return []
         if self.kv_layout == "paged":
             # lazy growth: each slot's next write position must have a
             # block before the step; under reserve admission these
@@ -606,18 +658,12 @@ class ServeEngine:
                 s = sess.slots[i]
                 pos = s.prefill_pos + s.steps
                 while len(s.blocks) * self.block_size <= pos:
-                    try:
-                        blk = self.allocator.alloc(self.owner)
-                    except MemoryError as e:
-                        if self._admission == "overcommit":
-                            raise PoolPressure(self.owner, i) from e
-                        raise
-                    sess.cache = self._bt_set(sess.cache, i, len(s.blocks),
-                                              blk)
-                    s.blocks.append(blk)
-                    if s.reserve_left:
-                        s.reserve_left -= 1
-                        self.allocator.unreserve(1)
+                    self._grow_slot(sess, i, s)
+        # past the last allocation: nothing below can raise PoolPressure,
+        # so parked prefill-phase Results can leave the session now
+        finished, sess.finished_pending = sess.finished_pending, []
+        if not active:
+            return finished
         # one decode step over the whole slot pool (fixed shapes; idle
         # slots compute too - their rows are masked by per-slot pos and
         # fully rewritten on the next admission; paged idle rows write
@@ -631,7 +677,6 @@ class ServeEngine:
         dt = time.perf_counter() - t0
         sess.decode_steps += 1
         sess.busy_steps += len(active)
-        finished = []
         for i in active:
             s = sess.slots[i]
             s.tokens.append(int(nxt[i]))
@@ -645,19 +690,101 @@ class ServeEngine:
                 sess.slots[i] = None   # freed: refilled on the next admit
         return finished
 
+    def _grow_slot(self, sess: _Session, i: int, s: _Slot) -> None:
+        """Allocate slot ``i``'s next block and install it in the block
+        table (lazy growth, shared by prefill chunks and decode writes).
+        Under reserve admission one standing promise becomes live; under
+        overcommit an empty pool surfaces as PoolPressure."""
+        try:
+            blk = self.allocator.alloc(self.owner)
+        except MemoryError as e:
+            if self._admission == "overcommit":
+                raise PoolPressure(self.owner, i) from e
+            raise
+        sess.cache = self._bt_set(sess.cache, i, len(s.blocks), blk)
+        s.blocks.append(blk)
+        if s.reserve_left:
+            s.reserve_left -= 1
+            self.allocator.unreserve(1)
+
+    def _chunk_tokens(self, r: Request, chunk: int) -> jnp.ndarray:
+        """(1, block_size) token feed for combined positions
+        ``[chunk*bs, (chunk+1)*bs)``: prompt + done ids where the position
+        maps to a token, 0 where it is a model-side prefix row (vlm
+        patches, re-embedded from ``extra_inputs`` by the model) or
+        right-pad past the prompt (masked out causally and overwritten as
+        decode proceeds)."""
+        bs = self.block_size
+        npre = self._n_prefix()
+        seq = list(r.prompt) + list(r.done)
+        toks = np.zeros((1, bs), np.int32)
+        lo = max(chunk * bs, npre)
+        hi = min((chunk + 1) * bs, npre + len(seq))
+        if hi > lo:
+            toks[0, lo - chunk * bs:hi - chunk * bs] = seq[lo - npre:
+                                                           hi - npre]
+        return jnp.asarray(toks)
+
+    def _advance_prefill(self, sess: _Session, i: int,
+                         s: _Slot) -> Result | None:
+        """Run slot ``i``'s remaining prefill chunks, allocating each
+        chunk's block just before computing it (resumable: PoolPressure
+        from an allocation leaves ``chunks_done`` and the blocks already
+        written intact, and a retried step continues from the next chunk).
+        On completion samples the request's first token; returns the
+        finished Result when the token budget is satisfied by the prefill
+        itself, else None."""
+        r = s.req
+        n_chunks = blocks_needed(s.prefill_pos, self.block_size)
+        extra = self._gather_extra([s.extra_row])   # same rows every chunk
+        logits = None
+        while s.chunks_done < n_chunks:
+            c = s.chunks_done
+            if len(s.blocks) <= c:
+                self._grow_slot(sess, i, s)     # may raise PoolPressure
+            batch = {"tokens": self._chunk_tokens(r, c), **extra}
+            self._prefill_shapes.add(("chunk", self.block_size))
+            logits, sess.cache = self._prefill_chunk(
+                self.params, sess.cache, batch, np.int32(i), np.int32(c),
+                np.int32(s.prefill_pos))
+            s.chunks_done += 1
+        tok = self._sample(logits, jnp.full((1,), r.temperature),
+                           sess.key, jnp.asarray([r.rid], np.int32),
+                           jnp.asarray([len(r.done)], np.int32))
+        tok = int(np.asarray(jax.block_until_ready(tok))[0])
+        ttft_ms = (time.perf_counter() - s.admit_t) * 1e3
+        if not r.done:
+            sess.ttfts.append(ttft_ms)
+        s.ttft_ms = (r.first_ttft_ms if r.first_ttft_ms is not None
+                     else ttft_ms)
+        s.tokens.append(tok)
+        s.chunks_done = None            # prefill complete: decode from here
+        if len(r.done) + 1 >= r.max_new_tokens:
+            return self._finish(s)
+        sess.toks[i, 0] = tok
+        sess.tok_idx[i] = len(r.done) + 1
+        return None
+
     def session_preempt(self, slot: int) -> tuple[int, Request]:
         """Evict the request in ``slot``: free its blocks back to the pool
         and return ``(tag, requeued request)`` - the requeued request
         carries the tokens generated so far in ``done``, so a later
         re-admission prefills prompt + done and resumes the sampled stream
-        at index len(done), reproducing the uninterrupted output exactly."""
+        at index len(done), reproducing the uninterrupted output exactly.
+        A slot still mid-prefill (chunked paged prefill) is a valid
+        victim: its ``done`` is unchanged and the whole prompt re-prefills
+        later."""
         sess = self._require_session()
         s = sess.slots[slot]
         if s is None:
             raise ValueError(f"slot {slot} is not live")
         requeued = dataclasses.replace(
             s.req, done=tuple(s.req.done) + tuple(s.tokens),
-            first_ttft_ms=s.ttft_ms)
+            first_ttft_ms=(s.ttft_ms if s.tokens else s.req.first_ttft_ms),
+            # s.admit_t already spans back to the first admission (set
+            # from first_admit_t on re-admissions), so a chain of
+            # mid-prefill evictions keeps the original TTFT base
+            first_admit_t=s.admit_t, requeues=s.req.requeues + 1)
         self._release(s, slot)
         sess.slots[slot] = None
         sess.preempted += 1
@@ -685,6 +812,11 @@ class ServeEngine:
         if self.session_active:
             raise RuntimeError("end_session with live slots (drain or "
                                "preempt them first)")
+        if sess.finished_pending:
+            raise RuntimeError(
+                "end_session with undelivered finished Results (a "
+                "PoolPressure interrupted their step; call session_step "
+                "once more to collect them)")
         wall = time.perf_counter() - sess.t_start
         gen = sess.gen_tokens
         stats = EngineStats(

@@ -1,10 +1,14 @@
 """Shared test utilities, including an optional-``hypothesis`` shim.
 
-Property tests import ``given``/``settings``/``st`` from here instead of
-from ``hypothesis`` directly.  When hypothesis is installed the real
-objects are re-exported; when it is missing the shim turns every
-``@given``-decorated test into a single skipped test with a clear reason,
-so tier-1 collection never errors on the missing dependency.
+Property tests import ``given``/``settings``/``st`` (and the stateful
+API: ``RuleBasedStateMachine``/``rule``/``invariant``/``precondition``/
+``run_state_machine_as_test``) from here instead of from ``hypothesis``
+directly.  When hypothesis is installed the real objects are
+re-exported; when it is missing the shim turns every ``@given``-decorated
+test (and every ``run_state_machine_as_test`` call) into a skipped test
+with a clear reason, so tier-1 collection never errors on the missing
+dependency.  Suites that want coverage either way pair each hypothesis
+test with a seeded-PRNG fallback gated on ``HAS_HYPOTHESIS``.
 """
 import os
 import subprocess
@@ -17,6 +21,9 @@ SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
 try:
     from hypothesis import given, settings, strategies as st  # noqa: F401
+    from hypothesis.stateful import (RuleBasedStateMachine,  # noqa: F401
+                                     invariant, precondition, rule,
+                                     run_state_machine_as_test)
     HAS_HYPOTHESIS = True
 except ImportError:
     HAS_HYPOTHESIS = False
@@ -69,6 +76,25 @@ except ImportError:
             pass
 
     settings = _Settings
+
+    class RuleBasedStateMachine:
+        """Stand-in base so state-machine classes still define cleanly."""
+
+        def __init__(self):
+            pass
+
+    def _passthrough_decorator(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    rule = _passthrough_decorator
+    invariant = _passthrough_decorator
+    precondition = _passthrough_decorator
+
+    def run_state_machine_as_test(machine_cls, *, settings=None):
+        pytest.skip("hypothesis not installed (see requirements-dev.txt); "
+                    "stateful property test skipped")
 
 
 def run_with_devices(script: str, n_devices: int = 8, timeout=600):

@@ -1,6 +1,7 @@
-"""Paged KV-cache subsystem: BlockAllocator semantics, paged-vs-dense
-engine equivalence, bucketed prefill, and paged-kernel-vs-reference
-numerics."""
+"""Paged KV-cache subsystem: BlockAllocator semantics (including a
+stateful property test), paged-vs-dense engine equivalence, bucketed
+prefill, and paged-kernel-vs-reference numerics for both the decode and
+the chunked-prefill kernels."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,9 +10,16 @@ import pytest
 from repro.configs import smoke_config
 from repro.kernels import ops
 from repro.kernels.paged_attention import (paged_decode_attention_pallas,
-                                           paged_decode_attention_xla)
+                                           paged_decode_attention_xla,
+                                           paged_prefill_attention_pallas,
+                                           paged_prefill_attention_xla)
+from repro.kernels.ref import paged_prefill_attention_ref
 from repro.models import build_model
 from repro.serving import BlockAllocator, Request, ServeEngine, blocks_needed
+
+from helpers import (HAS_HYPOTHESIS, RuleBasedStateMachine, invariant,
+                     precondition, rule, run_state_machine_as_test,
+                     settings, st)
 
 CACHE_LEN = 64
 BLOCK = 16
@@ -128,6 +136,127 @@ def test_blocks_needed():
 
 
 # ---------------------------------------------------------------------------
+# Stateful allocator property: random alloc/grow/free/reserve sequences
+# must conserve blocks, never double-hand-out or double-free, keep owner
+# accounting exact, and leave the pool fully free at teardown.  The
+# hypothesis RuleBasedStateMachine explores+shrinks sequences in CI; the
+# seeded random walk keeps the same coverage when hypothesis is absent.
+# ---------------------------------------------------------------------------
+
+_MACHINE_BLOCKS = 9          # 8 allocatable + null
+
+
+class AllocatorMachine(RuleBasedStateMachine):
+    def __init__(self):
+        super().__init__()
+        self.a = BlockAllocator(_MACHINE_BLOCKS, BLOCK)
+        self.held: dict = {"r0": [], "r1": []}    # model: owner -> ids
+        self.reserved = 0
+
+    @rule(owner=st.sampled_from(["r0", "r1"]))
+    def alloc_one(self, owner):
+        if self.a.n_free:
+            blk = self.a.alloc(owner)
+            assert blk != 0, "null block handed out"
+            assert all(blk not in ids for ids in self.held.values()), \
+                f"block {blk} handed out twice"
+            self.held[owner].append(blk)
+        else:
+            with pytest.raises(MemoryError):
+                self.a.alloc(owner)
+
+    @rule(n=st.integers(0, 4), owner=st.sampled_from(["r0", "r1"]))
+    def alloc_many(self, n, owner):
+        free_before = self.a.n_free
+        if n <= free_before:
+            ids = self.a.alloc_n(n, owner)
+            assert len(set(ids)) == n and 0 not in ids
+            self.held[owner].extend(ids)
+        else:
+            with pytest.raises(MemoryError):
+                self.a.alloc_n(n, owner)
+            assert self.a.n_free == free_before    # all-or-nothing
+
+    @rule(k=st.integers(0, 3), owner=st.sampled_from(["r0", "r1"]))
+    def free_some(self, k, owner):
+        ids, keep = self.held[owner][:k], self.held[owner][k:]
+        self.a.free(ids)
+        self.held[owner] = keep
+
+    @rule()
+    def double_free_rejected(self):
+        ids = self.held["r0"]
+        if ids:
+            blk = ids.pop()
+            self.a.free([blk])
+            with pytest.raises(ValueError):
+                self.a.free([blk])
+
+    @rule(n=st.integers(0, 4))
+    def reserve_some(self, n):
+        if n <= self.a.n_avail:
+            self.a.reserve(n)
+            self.reserved += n
+        else:
+            with pytest.raises(MemoryError):
+                self.a.reserve(n)
+
+    @rule(n=st.integers(0, 4))
+    def unreserve_some(self, n):
+        if n <= self.reserved:
+            self.a.unreserve(n)
+            self.reserved -= n
+        else:
+            with pytest.raises(ValueError):
+                self.a.unreserve(n)
+
+    @invariant()
+    def conservation(self):
+        held = sum(len(ids) for ids in self.held.values())
+        assert self.a.n_live == held
+        assert self.a.n_free + self.a.n_live == self.a.capacity
+        assert self.a.n_reserved == self.reserved
+        assert self.a.n_avail == self.a.n_free - self.reserved
+        by_owner = {o: len(ids) for o, ids in self.held.items() if ids}
+        assert self.a.live_by_owner() == by_owner
+        stats = self.a.stats()
+        assert stats.peak_live >= self.a.n_live
+
+    def teardown(self):
+        for ids in self.held.values():
+            self.a.free(ids)
+        self.a.unreserve(self.reserved)
+        assert self.a.n_live == 0 and self.a.n_reserved == 0
+        assert self.a.n_free == self.a.capacity
+
+
+def test_allocator_state_machine():
+    run_state_machine_as_test(AllocatorMachine)
+
+
+@pytest.mark.skipif(HAS_HYPOTHESIS,
+                    reason="hypothesis runs the state machine instead")
+@pytest.mark.parametrize("seed", range(8))
+def test_allocator_random_walk(seed):
+    """Seeded fallback for the stateful property when hypothesis is
+    missing: drive the same rule set from a numpy PRNG."""
+    rng = np.random.default_rng(seed)
+    m = AllocatorMachine()
+    rules = [lambda: m.alloc_one(["r0", "r1"][rng.integers(2)]),
+             lambda: m.alloc_many(int(rng.integers(0, 5)),
+                                  ["r0", "r1"][rng.integers(2)]),
+             lambda: m.free_some(int(rng.integers(0, 4)),
+                                 ["r0", "r1"][rng.integers(2)]),
+             lambda: m.double_free_rejected(),
+             lambda: m.reserve_some(int(rng.integers(0, 5))),
+             lambda: m.unreserve_some(int(rng.integers(0, 5)))]
+    for _ in range(300):
+        rules[rng.integers(len(rules))]()
+        m.conservation()
+    m.teardown()
+
+
+# ---------------------------------------------------------------------------
 # Paged engine vs dense engine.
 # ---------------------------------------------------------------------------
 
@@ -149,19 +278,21 @@ def test_paged_matches_dense_greedy(model_and_params):
 
 
 def test_paged_bucketed_matches_exact(model_and_params):
-    """pow2 bucketing changes compile counts, not outputs, for both
-    layouts."""
+    """pow2 bucketing changes compile counts, not outputs (dense); the
+    paged layout's chunked prefill is shape-invariant outright — one
+    compiled (1, block_size) chunk covers every prompt, bucket or not."""
     reqs = [Request(list(range(1, 1 + n)), 5, rid=i)
             for i, n in enumerate([3, 5, 6, 7, 9, 11])]
     exact = _engine(model_and_params, max_batch=2).generate(reqs)
-    for layout in ("dense", "paged"):
+    for layout, compiles in (("dense", 3), ("paged", 1)):
         eng = _engine(model_and_params, max_batch=2, bucket="pow2",
                       kv_layout=layout, block_size=BLOCK)
         got = eng.generate(reqs)
         for e, g in zip(exact, got):
             assert e.tokens == g.tokens, (layout, e.rid)
-        # lengths 3..11 bucket to {4, 8, 16}: 3 compiles instead of 6
-        assert eng.last_stats.prefill_compiles == 3, layout
+        # dense: lengths 3..11 bucket to {4, 8, 16} = 3 compiles (not 6);
+        # paged: a single chunk shape regardless of prompt lengths
+        assert eng.last_stats.prefill_compiles == compiles, layout
 
 
 def test_paged_admits_beyond_dense_reservation(model_and_params):
@@ -182,6 +313,35 @@ def test_paged_admits_beyond_dense_reservation(model_and_params):
                     cache_len=32).generate(reqs)
     for d, p in zip(dense, res):
         assert d.tokens == p.tokens, d.rid
+
+
+def test_paged_matches_dense_vlm_patch_prefix():
+    """vlm paged prefill embeds the model-side patch prefix chunk by chunk
+    (``_embed_chunk`` + the engine's zeroed prefix token feed) instead of
+    reusing the dense prefill — outputs must still match the dense layout
+    exactly, covering a chunk that straddles the patch/token seam
+    (block 16 > n_patches 8), a prefix-only first chunk (block 8), and a
+    partial trailing chunk."""
+    cfg = smoke_config("phi-3-vision-4.2b")
+    assert cfg.n_patches == 8
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    patches = jax.random.normal(
+        jax.random.key(1), (3, cfg.n_patches, cfg.patch_embed_dim),
+        jnp.float32)
+    reqs = [Request([1, 2, 3], 6, rid=0),
+            Request(list(range(9)), 5, rid=1),
+            Request([7] * 17, 4, rid=2)]
+    dense = ServeEngine(model, params, max_batch=2, cache_len=CACHE_LEN,
+                        extra_inputs={"patches": patches}).generate(reqs)
+    for bs in (16, 8):
+        paged = ServeEngine(model, params, max_batch=2,
+                            cache_len=CACHE_LEN, kv_layout="paged",
+                            block_size=bs,
+                            extra_inputs={"patches": patches}
+                            ).generate(reqs)
+        for d, p in zip(dense, paged):
+            assert d.tokens == p.tokens, (bs, d.rid)
 
 
 def test_paged_request_never_fits_rejected(model_and_params):
@@ -283,3 +443,78 @@ def test_paged_kernel_via_ops_dispatch():
     winref = paged_decode_attention_xla(q, kp, vp, bt, kv_len, window=8)
     np.testing.assert_allclose(np.asarray(win), np.asarray(winref),
                                rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Paged chunked-prefill kernel vs reference paths.
+# ---------------------------------------------------------------------------
+
+def _rand_prefill_case(key, *, n_blocks=9, hkv=2, bs=8, d=16, b=3, m=4,
+                       g=2):
+    k1, k2, k3 = jax.random.split(key, 3)
+    kp = jax.random.normal(k1, (n_blocks, hkv, bs, d), jnp.float32)
+    vp = jax.random.normal(k2, (n_blocks, hkv, bs, d), jnp.float32)
+    q = jax.random.normal(k3, (b, hkv * g, bs, d), jnp.float32)
+    bt = jnp.asarray(
+        np.array([[1, 2, 3, 4], [5, 6, 0, 0], [7, 8, 0, 0]]), jnp.int32)
+    # rows sit at chunks 3, 1, 0: causal frontiers mid-table, early, first
+    q_start = jnp.asarray([24, 8, 0], jnp.int32)
+    return q, kp, vp, bt, q_start
+
+
+def test_paged_prefill_kernel_matches_reference():
+    q, kp, vp, bt, qs = _rand_prefill_case(jax.random.key(5))
+    ref = paged_prefill_attention_ref(q, kp, vp, bt, qs)
+    xla = paged_prefill_attention_xla(q, kp, vp, bt, qs)
+    pal = paged_prefill_attention_pallas(q, kp, vp, bt, qs, interpret=True)
+    np.testing.assert_allclose(np.asarray(xla), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_prefill_kernel_chunk_positions():
+    """Every chunk index, including the first (block 0 must always
+    contribute — the online softmax init relies on it) and the last
+    (frontier at the table's end)."""
+    q, kp, vp, bt, _ = _rand_prefill_case(jax.random.key(6))
+    for starts in ([0, 0, 0], [8, 16, 24], [24, 24, 24]):
+        qs = jnp.asarray(starts, jnp.int32)
+        ref = paged_prefill_attention_ref(q, kp, vp, bt, qs)
+        xla = paged_prefill_attention_xla(q, kp, vp, bt, qs)
+        pal = paged_prefill_attention_pallas(q, kp, vp, bt, qs,
+                                             interpret=True)
+        np.testing.assert_allclose(np.asarray(xla), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5, err_msg=str(starts))
+        np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5, err_msg=str(starts))
+
+
+def test_paged_prefill_kernel_ignores_blocks_past_frontier():
+    """Blocks beyond a chunk's causal frontier must not leak into the
+    output whatever their table entries point at (the engine leaves
+    trailing entries on the null block)."""
+    q, kp, vp, bt, qs = _rand_prefill_case(jax.random.key(7))
+    ref = paged_prefill_attention_ref(q, kp, vp, bt, qs)
+    kp2 = kp.at[0].set(1e6)            # null block: rows 1/2 trailing ids
+    vp2 = vp.at[0].set(-1e6)
+    for fn in (paged_prefill_attention_xla,
+               lambda *a: paged_prefill_attention_pallas(*a,
+                                                         interpret=True)):
+        got = fn(q, kp2, vp2, bt, qs)
+        np.testing.assert_allclose(np.asarray(got[1:]), np.asarray(ref[1:]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_paged_prefill_kernel_via_ops_dispatch():
+    q, kp, vp, bt, qs = _rand_prefill_case(jax.random.key(8))
+    ref = ops.paged_prefill_attention(q, kp, vp, bt, qs, impl="xla")
+    got = ops.paged_prefill_attention(q, kp, vp, bt, qs, impl="interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    # sliding windows ride the per-block gather path in every impl
+    win = ops.paged_prefill_attention(q, kp, vp, bt, qs, impl="interpret",
+                                      window=5)
+    winref = paged_prefill_attention_ref(q, kp, vp, bt, qs, window=5)
+    np.testing.assert_allclose(np.asarray(win), np.asarray(winref),
+                               rtol=1e-5, atol=1e-5)
