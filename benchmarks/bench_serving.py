@@ -26,6 +26,15 @@ step only ever holds one ``block_size`` chunk — both sizes come from the
 abstract shapes, and the compiled temp footprints from XLA's
 ``memory_analysis`` when the backend reports them.
 
+A second trace runs a **scan family** (ssm: xlstm) through the same
+lock-step-vs-continuous comparison: its recurrent state serves from the
+slot-addressable layout (``repro.models.slot_state``), so freed slots
+refill immediately instead of idling to the group barrier — the same
+issue-stream argument, demonstrated on a cache with no KV strips at all.
+Tokens must match byte-for-byte and continuous must win occupancy and
+decode-step count (both deterministic; tok/s is reported, not asserted,
+to keep CI timing-independent).
+
 Emits ``name,us_per_call,derived`` CSV rows like the other benches:
   serving_lockstep,<wall_us>,tok/s=...;occ=...
   serving_continuous,<wall_us>,tok/s=...;occ=...
@@ -33,6 +42,9 @@ Emits ``name,us_per_call,derived`` CSV rows like the other benches:
   serving_speedup,,continuous/lockstep=...
   serving_paged_admission,,footprint=...;capacity=...;admitted=...
   serving_prefill_mem,,dense_kv_intermediate=...;paged_chunk_kv=...;...
+  serving_scan_ssm_lockstep,<wall_us>,tok/s=...;occ=...
+  serving_scan_ssm_continuous,<wall_us>,tok/s=...;occ=...
+  serving_scan_speedup,,continuous/lockstep=...
 
 ``--smoke`` shrinks the trace/model work for the CI CPU regression gate;
 ``--json PATH`` additionally dumps every row for the CI artifact.
@@ -128,6 +140,55 @@ def _prefill_mem_report(model, params, cache_len, block_size, smoke):
     return dense_kv, paged_chunk_kv
 
 
+def _scan_family_report(smoke: bool):
+    """Continuous-vs-lockstep on a scan family (ssm: xlstm), slot state
+    served from the slot-addressable recurrent layout.
+
+    Uniform prompt lengths (so lockstep's left-padded group prefill is
+    position-exact and tokens must match byte-for-byte) with mixed decode
+    budgets: lockstep pins every slot to its group's slowest member,
+    continuous refills freed slots.  Asserts the deterministic wins
+    (occupancy and decode-step count) and token identity; tok/s is
+    reported for the JSON artifact but not asserted (CI timing noise)."""
+    from repro.configs import smoke_config
+    from repro.models import build_model
+    from repro.serving import Request, ServeEngine
+
+    cfg = smoke_config("xlstm-350m")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    n_reqs = 8 if smoke else N_REQS
+    long_new = 16 if smoke else LONG_NEW
+    reqs = _trace(cfg.vocab_size, n_reqs, SHORT_NEW, long_new)
+
+    stats, tokens = {}, {}
+    for name in ("lockstep", "continuous"):
+        eng = ServeEngine(model, params, max_batch=MAX_BATCH,
+                          cache_len=32 if smoke else CACHE_LEN, mode=name)
+        eng.generate([Request(list(range(PROMPT_LEN)), 2, rid=-1)
+                      for _ in range(MAX_BATCH)])   # warmup compile
+        res = eng.generate(reqs)
+        tokens[name] = [r.tokens for r in res]
+        s = stats[name] = eng.last_stats
+        emit(f"serving_scan_ssm_{name}", s.wall_s * 1e6,
+             f"tok/s={s.tokens_per_s:.1f};occ={s.occupancy:.2f};"
+             f"steps={s.decode_steps};ttft_ms={s.ttft_ms_mean:.1f}")
+
+    check_tokens("bench_serving", "scan_ssm_lockstep", tokens["lockstep"],
+                 "scan_ssm_continuous", tokens["continuous"],
+                 [r.rid for r in reqs])
+    cont, lock = stats["continuous"], stats["lockstep"]
+    assert cont.occupancy > lock.occupancy, (cont.occupancy, lock.occupancy)
+    assert cont.decode_steps < lock.decode_steps, (cont.decode_steps,
+                                                   lock.decode_steps)
+    speedup = cont.tokens_per_s / max(lock.tokens_per_s, 1e-9)
+    emit("serving_scan_speedup", "",
+         f"continuous/lockstep={speedup:.2f}x;occ={cont.occupancy:.2f}"
+         f"vs{lock.occupancy:.2f};steps={cont.decode_steps}"
+         f"vs{lock.decode_steps} (ssm family, slot-addressable "
+         "recurrent state)")
+
+
 def run(smoke: bool = False, json_path: str | None = None):
     from benchmarks.common import reset_rows
     from repro.configs import smoke_config
@@ -202,6 +263,10 @@ def run(smoke: bool = False, json_path: str | None = None):
     # prefill transient memory: the dense (L, Hkv, prompt, hd) KV
     # intermediate vs the chunked path's single-block transient
     _prefill_mem_report(model, params, cache_len, BLOCK, smoke)
+
+    # scan family (slot-addressable recurrent state): same scheduler
+    # comparison, no KV strips involved
+    _scan_family_report(smoke)
     if json_path:
         write_json(json_path, bench="bench_serving", smoke=smoke)
     return speedup

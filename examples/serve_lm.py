@@ -1,6 +1,7 @@
 """Batched serving example: prefill-on-admit continuous batching with the
-slot-pool scheduler, over any assigned arch (scan-cache families fall back
-to lock-step group batching automatically).
+slot-pool scheduler, over any assigned arch — scan-cache families
+(ssm/hybrid/encdec) included, served from their slot-addressable
+recurrent state (pass --mode lockstep for the group-barrier baseline).
 
   PYTHONPATH=src python examples/serve_lm.py --arch zamba2-1.2b
 """

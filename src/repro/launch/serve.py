@@ -3,9 +3,16 @@
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
       --prompts "1 2 3" "4 5" --max-new 16
 
-``--replicas N`` (N > 1) serves through a multi-replica cluster instead:
-N narrow engines behind a ``--router`` policy sharing one KV block pool,
-with preemption under pool pressure (see repro.serving.cluster).
+Every cell of the scheduler matrix (see docs/serving.md) is reachable
+from here: ``--mode`` picks the scheduler (continuous/lockstep),
+``--kv-layout`` the cache layout (dense/paged; scan families — ssm,
+hybrid, encdec — serve continuous on dense), ``--admission`` the paged
+admission policy (reserve/overcommit), ``--bucket`` the prefill
+bucketing, and ``--replicas N`` (N > 1) serves through a multi-replica
+cluster instead: N narrow engines behind a ``--router`` policy — sharing
+one KV block pool with preemption under pool pressure for paged
+families, per-replica slot state for scan families (see
+repro.serving.cluster).
 """
 from __future__ import annotations
 
@@ -31,7 +38,15 @@ def main():
     ap.add_argument("--mode", default="auto",
                     choices=["auto", "continuous", "lockstep"])
     ap.add_argument("--kv-layout", default="dense",
-                    choices=["dense", "paged"])
+                    choices=["dense", "paged"],
+                    help="slot cache layout (scan families serve on "
+                         "dense; paged needs transformer block hooks)")
+    ap.add_argument("--admission", default=None,
+                    choices=["reserve", "overcommit"],
+                    help="paged admission: worst-case reservation vs "
+                         "first-chunk overcommit (default: reserve for a "
+                         "single engine, overcommit + preemption for a "
+                         "cluster)")
     ap.add_argument("--block-size", type=int, default=16,
                     help="paged layout: KV positions per pool block")
     ap.add_argument("--n-blocks", type=int, default=None,
@@ -59,22 +74,41 @@ def main():
     params = model.init(jax.random.key(args.seed))
     bucket = (int(args.bucket) if args.bucket and args.bucket != "pow2"
               else args.bucket)
+    # per-request side inputs the tokenized --prompts cannot carry: stub
+    # rows, one per prompt (vlm patch embeddings; encdec's conv/mel
+    # frontend is a stub by assignment, so frames are synthesized too)
+    extra = None
+    if cfg.family == "vlm":
+        import jax.numpy as jnp
+        extra = {"patches": jnp.zeros(
+            (len(args.prompts), cfg.n_patches, cfg.patch_embed_dim),
+            jnp.bfloat16)}
+    elif cfg.family == "encdec":
+        import jax.numpy as jnp
+        extra = {"frames": jnp.zeros((len(args.prompts), 16, cfg.d_model),
+                                     jnp.bfloat16)}
     if args.replicas > 1:
         if args.mode != "auto" or args.kv_layout != "dense":
-            ap.error("--replicas > 1 always serves paged+continuous; "
-                     "drop --mode/--kv-layout")
+            ap.error("--replicas > 1 always serves continuous and "
+                     "resolves the KV layout per family (paged for "
+                     "transformer families, dense slot state for scan "
+                     "families); drop --mode/--kv-layout")
         eng = ClusterEngine(model, params, replicas=args.replicas,
                             total_slots=args.max_batch,
                             cache_len=args.cache_len, router=args.router,
+                            extra_inputs=extra,
                             block_size=args.block_size,
                             n_blocks=args.n_blocks, bucket=bucket,
+                            admission=args.admission or "overcommit",
                             preempt_hysteresis=args.hysteresis)
     else:
         eng = ServeEngine(model, params, max_batch=args.max_batch,
                           cache_len=args.cache_len, mode=args.mode,
+                          extra_inputs=extra,
                           kv_layout=args.kv_layout,
                           block_size=args.block_size,
-                          n_blocks=args.n_blocks, bucket=bucket)
+                          n_blocks=args.n_blocks, bucket=bucket,
+                          admission=args.admission or "reserve")
     reqs = [Request([int(t) % cfg.vocab_size for t in p.split()],
                     args.max_new, args.temperature, rid=i)
             for i, p in enumerate(args.prompts)]

@@ -16,6 +16,7 @@ from .attention import (attn_cross_decode, attn_decode, attn_forward,
 from .layers import (PT, embed_lookup, embed_templates, gelu_mlp_apply,
                      gelu_mlp_templates, layernorm, sinusoidal_positions,
                      softmax_xent_chunked, stack_layers)
+from .slot_state import make_slot_hooks
 
 CROSS_LEN = 1500  # whisper's 30 s encoder output length (serving cells)
 
@@ -97,7 +98,23 @@ def encdec_loss(params, batch, cfg, *, remat=True, xent_chunk=512):
 
 # ---------------------------------------------------------------------------
 # Serving.
+#
+# Decode state per request: a decoder self-attention KV strip
+# (k/v, written at ``pos``), plus the *cross-attention KV strip* (xk/xv)
+# projected once from the request's encoder output at prefill and read-only
+# afterwards.  All four leaves are stacked (n_layers, B, …) with batch at
+# axis 1, so a slot owns one index of each — the cross strip rides in the
+# slot exactly like self KV, which is what lets encoder-decoder requests
+# enter/leave a continuous batch one at a time instead of re-encoding a
+# whole lock-step group (slot hooks from ``repro.models.slot_state``).
 # ---------------------------------------------------------------------------
+
+# batch axis of every cache leaf (the serving slot axis)
+ENCDEC_STATE_AXES = {"k": 1, "v": 1, "xk": 1, "xv": 1}
+
+encdec_cache_expand, encdec_cache_slot_write, encdec_cache_slot_reset = \
+    make_slot_hooks(ENCDEC_STATE_AXES)
+
 
 def encdec_cache_shapes(cfg, batch_size: int, cache_len: int,
                         dtype=jnp.bfloat16):
@@ -147,17 +164,20 @@ def encdec_prefill(params, batch, cfg, *, cache_len=None):
 
 
 def encdec_decode_step(params, cache, tokens, cfg):
-    b = tokens.shape[0]
+    """One-token decoder step.  ``cache["pos"]`` is a scalar (lock-step
+    layout: every row at the same position) or a (B,) vector (slot-pool
+    layout: each slot decodes at its own position)."""
     pos = cache["pos"]
     x = embed_lookup(params["embed"], tokens)
-    # dynamic positional vector: sin/cos recomputed at pos (no giant table)
+    # dynamic positional vector: sin/cos recomputed at pos (no giant
+    # table), one row per slot when positions differ
     import numpy as np
     d = cfg.d_model
     div = jnp.asarray(np.exp(-np.log(10000.0) * np.arange(0, d, 2) / d))
-    ang = pos.astype(jnp.float32) * div
-    pvec = jnp.zeros((d,), jnp.float32).at[0::2].set(jnp.sin(ang)) \
-        .at[1::2].set(jnp.cos(ang))
-    x = x + pvec.astype(x.dtype)
+    ang = jnp.atleast_1d(pos).astype(jnp.float32)[:, None] * div  # (P, d/2)
+    pvec = jnp.zeros((ang.shape[0], d), jnp.float32)
+    pvec = pvec.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+    x = x + pvec[:, None, :].astype(x.dtype)   # broadcasts when P == 1
 
     def body(carry, inp):
         x, kc_all, vc_all = carry

@@ -17,6 +17,7 @@ from .layers import (PT, embed_lookup, embed_templates, rmsnorm,
                      softmax_xent_chunked, stack_layers, swiglu_apply,
                      swiglu_templates)
 from .mamba2 import (mamba_decode, mamba_dims, mamba_forward, mamba_templates)
+from .slot_state import make_slot_hooks
 from .transformer import lm_head_weight
 
 
@@ -112,7 +113,25 @@ def hybrid_loss(params, batch, cfg, *, remat=True, xent_chunk=512):
 
 # ---------------------------------------------------------------------------
 # Serving.
+#
+# Every cache leaf keeps its batch (serving slot) dimension at axis 1:
+# the Mamba2 conv tails / SSD states are stacked (n_layers, B, …), the
+# shared attention block's ring-buffered sliding-window KV is
+# (n_groups, B, Hkv, W, hd).  One slot therefore owns one index of each
+# leaf plus one entry of the (B,) position vector, and the slot hooks
+# below make the family continuously batchable: admission writes a
+# batch-1 prefill's state into a freed slot, eviction zeroes it (see
+# ``repro.models.slot_state``).  The ring cache needs no per-slot width
+# bookkeeping — decode writes at ``pos % W`` per row, so each slot's ring
+# phase rides entirely in its own ``pos`` entry.
 # ---------------------------------------------------------------------------
+
+# batch axis of every cache leaf (the serving slot axis)
+HYBRID_STATE_AXES = {"conv": 1, "ssm": 1, "attn_k": 1, "attn_v": 1}
+
+hybrid_cache_expand, hybrid_cache_slot_write, hybrid_cache_slot_reset = \
+    make_slot_hooks(HYBRID_STATE_AXES)
+
 
 def hybrid_cache_shapes(cfg, batch_size: int, cache_len: int,
                         dtype=jnp.bfloat16):

@@ -1,9 +1,20 @@
 """Mamba2 (SSD) block: fused in-projection, causal depthwise conv, SSD scan
 (``repro.kernels.ssd_scan``), gated RMSNorm, out-projection.
 
-Decode keeps O(1)/token state: (conv_state (B, conv_dim, K-1),
+Decode keeps O(1)/token state: (conv_state (B, K-1, conv_dim),
 ssm_state (B, H, P, N)) - this is what makes the hybrid/ssm archs eligible
 for the ``long_500k`` cell.
+
+Both state tensors lead with the batch dimension and carry **no
+cross-sequence coupling**: every op in ``mamba_decode`` is elementwise or
+contracts only non-batch axes, so row ``b`` of the state is a complete,
+independently addressable description of sequence ``b``.  That per-row
+independence is the contract the serving layer's slot-addressable cache
+hooks build on (``repro.models.slot_state``): a continuous-batching slot
+pool can admit a new request into row ``b`` (overwriting just that row
+with a batch-1 prefill's final state), evict it, or zero it, without
+touching — or re-prefilling — any neighbor.  The hybrid family stacks
+these rows as ``(n_layers, B, ...)`` cache leaves (``hybrid.py``).
 """
 from __future__ import annotations
 

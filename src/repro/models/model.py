@@ -8,16 +8,40 @@
   model.cache_shapes(batch, cache_len)      - ShapeDtypeStructs for dry-run
   input_specs(cfg, shape)    - ShapeDtypeStruct batch for an assigned cell
 
-Families with an addressable KV cache (dense/moe/vlm) additionally expose
-the slot-pool serving hooks used by continuous batching:
+Every family exposes the slot-pool serving hooks used by continuous
+batching — the transformer families (dense/moe/vlm) for their KV strips
+(``transformer.py``), the scan/recurrent families (ssm/hybrid/encdec) for
+their per-slot recurrent state (built by ``repro.models.slot_state`` from
+each family's ``{leaf: batch axis}`` map):
 
   model.cache_expand(sub, batch)        - batch-1 prefill cache -> empty
                                           B-slot pool with per-slot positions
   model.cache_slot_write(cache, sub, i) - write a batch-1 prefill cache into
                                           slot i (prefill-on-admit)
+  model.cache_slot_reset(cache, i)      - zero slot i's state on free or
+                                          preempt (scan families; None for
+                                          the KV families, whose stale
+                                          strips are masked by pos instead)
 
-and the paged-KV hooks used by the engine's ``kv_layout="paged"`` (block
-pool + per-slot block tables; see ``repro.serving.kvcache``):
+Two layout flags steer the engine's bookkeeping:
+
+  model.bounded_cache       - True when ``cache_len`` bounds a request's
+                              cache writes (KV strips: dense/moe/vlm,
+                              encdec).  False for ssm (state is O(1) in
+                              context) and hybrid (recurrent state plus a
+                              ring-buffered sliding window that wraps) —
+                              the engine skips the write-budget check.
+  model.supports_prefill_len - True when prefill consumes
+                              ``batch["prefill_len"]`` for right-padded
+                              bucketed prompts (transformer families).
+                              Scan-family prefills consume every token
+                              position into recurrent state, so padding
+                              would corrupt it; the engine rejects
+                              ``bucket=`` for them.
+
+The transformer families additionally expose the paged-KV hooks used by
+the engine's ``kv_layout="paged"`` (block pool + per-slot block tables;
+see ``repro.serving.kvcache``):
 
   model.paged_cache_init(batch=, n_blocks=, block_size=, max_blocks=,
                          dtype=)              - empty block-pool cache
@@ -30,8 +54,9 @@ pool + per-slot block tables; see ``repro.serving.kvcache``):
         block just before the call)
   model.decode_paged(params, pc, tokens)      - decode via block tables
 
-All are None for scan-layout caches (ssm/hybrid/encdec); the serving
-engine falls back to lock-step group batching there.
+The paged hooks are None for the scan families (recurrent state has no
+block-pool analog — it is O(1) per slot already); their continuous
+batching runs on the dense slot layout.
 """
 from __future__ import annotations
 
@@ -55,15 +80,23 @@ class Model:
     prefill: Callable
     decode: Callable
     cache_shapes: Callable
-    # slot-pool serving hooks (None when the cache layout is not slot
-    # addressable; the serving engine then uses lock-step group batching)
+    # slot-pool serving hooks (every family; continuous batching)
     cache_expand: Callable | None = None
     cache_slot_write: Callable | None = None
+    # per-slot state zeroing on free/preempt (scan families; None for KV
+    # families, whose stale strips are masked by per-slot pos instead)
+    cache_slot_reset: Callable | None = None
     # paged-KV serving hooks (None when the family has no paged layout)
     paged_cache_init: Callable | None = None
     cache_dtype: Callable | None = None
     prefill_paged: Callable | None = None
     decode_paged: Callable | None = None
+    # True when cache_len bounds the request's cache writes (KV strips);
+    # False for recurrent/ring state that never overflows (ssm, hybrid)
+    bounded_cache: bool = True
+    # True when prefill accepts batch["prefill_len"] (right-padded
+    # bucketed prompts); scan-family prefills would absorb pads into state
+    supports_prefill_len: bool = False
 
     def init(self, key):
         return init_params(self.templates, key)
@@ -94,6 +127,7 @@ def build_model(cfg: ModelConfig) -> Model:
                 transformer.decoder_prefill_paged, cfg=cfg),
             decode_paged=functools.partial(
                 transformer.decoder_decode_step_paged, cfg=cfg),
+            supports_prefill_len=True,
         )
     if fam == "hybrid":
         return Model(
@@ -102,6 +136,10 @@ def build_model(cfg: ModelConfig) -> Model:
             functools.partial(hybrid.hybrid_prefill, cfg=cfg),
             functools.partial(hybrid.hybrid_decode_step, cfg=cfg),
             functools.partial(hybrid.hybrid_cache_shapes, cfg),
+            cache_expand=hybrid.hybrid_cache_expand,
+            cache_slot_write=hybrid.hybrid_cache_slot_write,
+            cache_slot_reset=hybrid.hybrid_cache_slot_reset,
+            bounded_cache=False,   # O(1) state + wrapping attention ring
         )
     if fam == "ssm":
         return Model(
@@ -110,6 +148,10 @@ def build_model(cfg: ModelConfig) -> Model:
             functools.partial(xlstm_lm.xlstm_prefill, cfg=cfg),
             functools.partial(xlstm_lm.xlstm_decode_step, cfg=cfg),
             functools.partial(xlstm_lm.xlstm_cache_shapes, cfg),
+            cache_expand=xlstm_lm.xlstm_cache_expand,
+            cache_slot_write=xlstm_lm.xlstm_cache_slot_write,
+            cache_slot_reset=xlstm_lm.xlstm_cache_slot_reset,
+            bounded_cache=False,   # state size is context-independent
         )
     if fam == "encdec":
         return Model(
@@ -118,6 +160,10 @@ def build_model(cfg: ModelConfig) -> Model:
             functools.partial(encdec.encdec_prefill, cfg=cfg),
             functools.partial(encdec.encdec_decode_step, cfg=cfg),
             functools.partial(encdec.encdec_cache_shapes, cfg),
+            cache_expand=encdec.encdec_cache_expand,
+            cache_slot_write=encdec.encdec_cache_slot_write,
+            cache_slot_reset=encdec.encdec_cache_slot_reset,
+            # decoder self-KV strips are cache_len wide: budget enforced
         )
     raise ValueError(f"unknown family {fam}")
 

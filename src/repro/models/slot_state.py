@@ -1,0 +1,97 @@
+"""Slot-addressable recurrent-state helpers (continuous-batching serving).
+
+The serving engine's continuous scheduler needs three per-slot cache
+operations from every family (see ``repro.serving.engine``):
+
+  cache_expand(sub, batch)       batch-1 prefill cache -> empty B-slot pool
+  cache_slot_write(cache, sub, i) write a batch-1 prefill cache into slot i
+  cache_slot_reset(cache, i)      zero slot i's state on free/preempt
+
+For the transformer families these live in ``transformer.py`` (the KV
+strips share one batch axis).  The scan/recurrent families (ssm, hybrid,
+encdec) carry heterogeneous state trees whose *batch axis differs per
+leaf* — xlstm's mLSTM states are ``(n_groups, m_per, B, ...)`` (batch at
+axis 2) while its sLSTM states are ``(n_groups, B, ...)`` (axis 1); the
+hybrid/encdec leaves all put batch at axis 1.  This module builds the
+three hooks generically from a ``{leaf name: batch axis}`` map, which is
+the whole per-slot layout contract: as long as each leaf's slot slice is
+independent of every other slot's slice (true for recurrent state by
+construction — there is no cross-sequence mixing), admitting, evicting
+and resetting one request touches exactly one index of each leaf.
+
+This is the serving analog of per-lane vector state slicing (Ara,
+arXiv:1906.00478) and of AraXL's partition-into-addressable-slices
+scaling argument (arXiv:2501.10301): a monolithic batch-wide state forces
+lock-step scheduling; slicing it per slot lets the scheduler admit,
+finish and preempt one request at a time.
+
+``pos`` is special-cased everywhere: the batch-1 prefill returns it as a
+scalar, the slot pool carries it as a ``(B,)`` vector (one position per
+slot), and reset parks it at 0.
+
+All three returned hooks take only traced/jittable arguments except
+``cache_expand``'s ``batch`` (a static Python int — the engine jits it
+with ``static_argnums=(1,)``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _take_row(x, axis: int):
+    """Drop the (size-1) batch axis of a batch-1 prefill leaf."""
+    return jax.lax.index_in_dim(x, 0, axis, keepdims=False)
+
+
+def make_slot_hooks(batch_axes: dict[str, int]):
+    """Build (cache_expand, cache_slot_write, cache_slot_reset) for a flat
+    cache dict whose leaf ``name`` carries its batch dimension at
+    ``batch_axes[name]``.  ``pos`` must not appear in the map — it is
+    handled as the per-slot position vector."""
+    assert "pos" not in batch_axes, "pos is implicit (per-slot vector)"
+
+    def cache_expand(sub, batch: int):
+        """Grow a batch-1 prefill cache into an empty ``batch``-slot pool:
+        every state leaf zeroed with the batch axis widened to ``batch``,
+        positions a (B,) zero vector.  Slots are filled one at a time by
+        ``cache_slot_write`` on admission."""
+        out = {}
+        for name, ax in batch_axes.items():
+            x = sub[name]
+            shape = x.shape[:ax] + (batch,) + x.shape[ax + 1:]
+            out[name] = jnp.zeros(shape, x.dtype)
+        out["pos"] = jnp.zeros((batch,), jnp.int32)
+        return out
+
+    def cache_slot_write(cache, sub, slot):
+        """Write a batch-1 prefill cache into slot ``slot`` of the pool
+        (prefill-on-admit).  ``slot`` may be traced — one compile serves
+        every slot.  Every leaf of the slot is fully overwritten, so no
+        state from a previous occupant can leak into the new request."""
+        out = {}
+        for name, ax in batch_axes.items():
+            out[name] = jax.lax.dynamic_update_index_in_dim(
+                cache[name], _take_row(sub[name], ax), slot, ax)
+        out["pos"] = jax.lax.dynamic_update_index_in_dim(
+            cache["pos"],
+            jnp.reshape(jnp.asarray(sub["pos"], jnp.int32), ()), slot, 0)
+        return out
+
+    def cache_slot_reset(cache, slot):
+        """Zero slot ``slot``'s state and position (slot freed or its
+        request preempted).  Admission already rewrites the whole slot, so
+        this is a hygiene invariant, not a correctness requirement — but
+        it makes no-leak *testable* (a freed slot's recurrent state is
+        provably gone, asserted in tests) and keeps idle-slot decode math
+        running on zeros instead of a dead request's state."""
+        out = {}
+        for name, ax in batch_axes.items():
+            x = cache[name]
+            row = jnp.zeros(x.shape[:ax] + x.shape[ax + 1:], x.dtype)
+            out[name] = jax.lax.dynamic_update_index_in_dim(x, row, slot, ax)
+        out["pos"] = jax.lax.dynamic_update_index_in_dim(
+            cache["pos"], jnp.int32(0), slot, 0)
+        return out
+
+    return cache_expand, cache_slot_write, cache_slot_reset

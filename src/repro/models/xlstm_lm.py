@@ -9,6 +9,7 @@ import jax.numpy as jnp
 from ..distributed.act_sharding import constrain
 from .layers import (PT, embed_lookup, embed_templates, rmsnorm,
                      softmax_xent_chunked, stack_layers)
+from .slot_state import make_slot_hooks
 from .xlstm import (mlstm_block, mlstm_block_decode, mlstm_block_templates,
                     mlstm_block_with_state, slstm_block, slstm_block_decode,
                     slstm_block_templates, slstm_init_state)
@@ -77,7 +78,26 @@ def xlstm_loss(params, batch, cfg, *, remat=True, xent_chunk=512):
 
 # ---------------------------------------------------------------------------
 # Serving.
+#
+# Decode state is O(1)/token and fully recurrent: per sequence it is a
+# fixed-size tree of conv tails and (C, n, m) cell states.  Serving keeps
+# it in a (…, B, …) per-slot layout — the mLSTM leaves are stacked
+# (n_groups, m_per, B, …) by the grouped scan, the sLSTM leaves
+# (n_groups, B, …) — so one slot's state is one index of each leaf and the
+# continuous-batching slot hooks below admit/evict/reset one request at a
+# time (see ``repro.models.slot_state``).
 # ---------------------------------------------------------------------------
+
+# batch axis of every cache leaf (the serving slot axis); ``pos`` is the
+# implicit per-slot position vector
+XLSTM_STATE_AXES = {
+    "m_conv": 2, "m_c": 2, "m_n": 2, "m_m": 2,
+    "s_conv": 1, "s_c": 1, "s_n": 1, "s_h": 1, "s_m": 1,
+}
+
+xlstm_cache_expand, xlstm_cache_slot_write, xlstm_cache_slot_reset = \
+    make_slot_hooks(XLSTM_STATE_AXES)
+
 
 def xlstm_cache_shapes(cfg, batch_size: int, cache_len: int,
                        dtype=jnp.bfloat16):

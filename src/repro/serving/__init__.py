@@ -1,3 +1,20 @@
+"""Public serving API.
+
+* :class:`ServeEngine` — slot-pool continuous batching (plus the
+  lock-step baseline) over any family of the uniform Model API, with
+  dense, paged, and slot-addressable-recurrent cache layouts and a
+  stepwise session API for outer schedulers.
+* :class:`ClusterEngine` — N replicas behind a router; paged families
+  share one :class:`BlockAllocator` pool with preemption under
+  :class:`PoolPressure`, scan families run per-replica slot state.
+
+Cross-cutting invariants (asserted in ``tests/test_serving_props.py``,
+``tests/test_serving.py``, ``tests/test_cluster.py``): request-keyed
+sampling makes token streams placement/scheduler-independent; block
+accounting conserves the pool exactly; preemption + requeue is invisible
+in the output; freed slots leak no state to later occupants.  The full
+scheduler matrix and knob reference live in ``docs/serving.md``.
+"""
 from .cluster import ROUTER_POLICIES, ClusterEngine
 from .engine import EngineStats, Request, Result, ServeEngine
 from .kvcache import (BlockAllocator, BlockPoolStats, PoolPressure,

@@ -25,7 +25,16 @@ of the memory system.  The serving analog built here:
   only changes *when* a request runs, and sampling streams are keyed by
   request id, not slot or replica (see ``engine._sample_rows``).
 
-* replicas draw KV blocks from one **shared**
+* the transformer families serve through the **paged** KV layout; the
+  scan families (ssm/hybrid/encdec) have no block pool to share — their
+  per-slot recurrent state is O(1) per request — so their replicas run
+  the **dense slot layout** (``kv_layout`` resolves per family).  The
+  router, global FIFO queue, and occupancy accounting are identical;
+  only the pool-pressure/preemption machinery below is paged-specific
+  (a dense scan replica can never raise ``PoolPressure``: its state
+  budget is fixed at admission).
+
+* paged replicas draw KV blocks from one **shared**
   :class:`repro.serving.kvcache.BlockAllocator` (per-owner accounting:
   owner = replica index) under ``admission="overcommit"``: a request is
   admitted as soon as its *prefill* fits, instead of reserving its worst
@@ -76,11 +85,15 @@ class ClusterEngine:
 
     replicas / total_slots: replica count and the summed slot budget
     (``total_slots % replicas == 0``); each replica runs the continuous
-    scheduler with the paged KV layout.  block_size / n_blocks size the
-    shared pool - n_blocks defaults to the dense footprint of the whole
-    cluster (total_slots * cache_len positions) plus the null block.
+    scheduler.  kv_layout: "auto" (paged when the family has paged hooks,
+    else the dense slot layout — the scan families), "paged", or "dense".
+    block_size / n_blocks size the shared pool (paged only) - n_blocks
+    defaults to the dense footprint of the whole cluster
+    (total_slots * cache_len positions) plus the null block.
     router: one of ``ROUTER_POLICIES``.  admission: "overcommit"
-    (default; preemption resolves pool pressure) or "reserve".
+    (default; preemption resolves pool pressure) or "reserve"; ignored
+    by the dense layout, which has no pool to overcommit.  ``pool`` is
+    the shared BlockAllocator (None for dense clusters).
 
     preempt_hysteresis: anti-thrash guard — a preempted request is not
     re-admissible before ``k`` scheduler rounds have passed since its
@@ -100,7 +113,8 @@ class ClusterEngine:
 
     def __init__(self, model: Model, params, *, replicas: int = 2,
                  total_slots: int = 8, cache_len: int = 1024,
-                 router: str = "round_robin", block_size: int = 16,
+                 router: str = "round_robin", kv_layout: str = "auto",
+                 block_size: int = 16,
                  n_blocks: int | None = None,
                  bucket: str | int | None = None,
                  extra_inputs: dict | None = None,
@@ -113,25 +127,39 @@ class ClusterEngine:
             raise ValueError(
                 f"total_slots={total_slots} must be a positive multiple of "
                 f"replicas={replicas}")
-        if model.decode_paged is None:
+        if kv_layout not in ("auto", "paged", "dense"):
+            raise ValueError(f"kv_layout={kv_layout!r}")
+        if kv_layout == "auto":
+            kv_layout = "paged" if model.decode_paged is not None else "dense"
+        if kv_layout == "paged" and model.decode_paged is None:
             raise ValueError(
-                f"ClusterEngine needs the paged KV layout but family "
-                f"{model.cfg.family!r} has no paged cache hooks")
+                f"kv_layout='paged': family {model.cfg.family!r} has no "
+                "paged cache hooks (scan families cluster on the dense "
+                "slot layout)")
         if preempt_hysteresis < 0:
             raise ValueError(
                 f"preempt_hysteresis={preempt_hysteresis} must be >= 0")
         self.router = router
         self.total_slots = total_slots
+        self.kv_layout = kv_layout
         self.preempt_hysteresis = preempt_hysteresis
-        if n_blocks is None:
-            n_blocks = total_slots * blocks_needed(cache_len, block_size) + 1
-        self.pool = BlockAllocator(n_blocks, block_size)
+        if kv_layout == "paged":
+            if n_blocks is None:
+                n_blocks = (total_slots * blocks_needed(cache_len,
+                                                        block_size) + 1)
+            self.pool = BlockAllocator(n_blocks, block_size)
+            layout_kw = dict(kv_layout="paged", allocator=self.pool,
+                             admission=admission)
+        else:
+            # scan families: per-slot recurrent state, no shared pool, no
+            # pool pressure - admission is bounded by free slots alone
+            self.pool = None
+            layout_kw = dict(kv_layout="dense")
         self.engines = [
             ServeEngine(model, params, max_batch=total_slots // replicas,
                         cache_len=cache_len, extra_inputs=extra_inputs,
-                        mode="continuous", kv_layout="paged",
-                        bucket=bucket, allocator=self.pool,
-                        admission=admission, owner=i)
+                        mode="continuous", bucket=bucket, owner=i,
+                        **layout_kw)
             for i in range(replicas)]
         self.last_stats: EngineStats | None = None
         self.replica_stats: list[EngineStats] = []
@@ -212,7 +240,8 @@ class ClusterEngine:
             return results
         for _, r in todo:
             self.engines[0].check_request(r)
-        self.pool.reset_peak()
+        if self.pool is not None:
+            self.pool.reset_peak()
         # every replica gets the same base key: sampling streams are keyed
         # by request id, so placement cannot change sampled outputs
         for e in self.engines:
@@ -240,10 +269,13 @@ class ClusterEngine:
                     if e is None:
                         break
                     queue.popleft()
-                    # paged admission always defers to session_step, so
-                    # there is no admission-time Result to collect
-                    e.session_admit(r, tag=seq, extra_row=order,
-                                    admit_seq=admit_seq)
+                    # paged admission always defers to session_step, but a
+                    # dense (scan-family) admission runs the prefill here
+                    # and can satisfy a 1-token budget on the spot
+                    res = e.session_admit(r, tag=seq, extra_row=order,
+                                          admit_seq=admit_seq)
+                    if res is not None:
+                        out[seq] = res
                     admit_seq += 1
                 stepped = False
                 for e in self.engines:
@@ -304,9 +336,10 @@ class ClusterEngine:
             "cluster", wall, gen, gen / max(wall, 1e-9), steps,
             busy / max(offered, 1),
             float(np.mean(ttfts)) if ttfts else 0.0,
-            kv_layout="paged",
+            kv_layout=self.kv_layout,
             prefill_compiles=sum(s.prefill_compiles for s in reps),
-            block_util_peak=self.pool.stats().peak_utilization,
+            block_util_peak=(self.pool.stats().peak_utilization
+                             if self.pool is not None else 0.0),
             preempted=preempts,
             requeued=sum(s.requeued for s in reps),
             router_policy=self.router)

@@ -8,18 +8,25 @@ cadence is set by its slowest member.
 
 Two scheduling modes:
 
-* ``continuous`` (default for slot-addressable caches: dense/moe/vlm) - a
-  fixed pool of ``max_batch`` decode slots with per-slot KV state and
-  per-slot positions.  An admission scheduler prefills a queued request
-  into a freed slot *immediately* (prefill-on-admit via
+* ``continuous`` (the default for every family) - a fixed pool of
+  ``max_batch`` decode slots with per-slot cache state and per-slot
+  positions.  An admission scheduler prefills a queued request into a
+  freed slot *immediately* (prefill-on-admit via
   ``model.cache_slot_write``); the other slots keep decoding on the next
-  step.  A short request never holds its neighbors hostage.
+  step.  A short request never holds its neighbors hostage.  The slot
+  state is per-slot KV strips for the transformer families and per-slot
+  *recurrent* state for the scan families (ssm/hybrid/encdec: conv tails,
+  SSD/LSTM cell states, sliding-window ring KV, cross-attention strips —
+  see ``repro.models.slot_state``); a freed or preempted scan slot is
+  zeroed via ``model.cache_slot_reset`` so no recurrent state survives
+  its request.
 
-* ``lockstep`` - the legacy group scheduler, kept behind the ``mode`` flag
-  for scan-layout caches (ssm/hybrid/encdec, where per-slot cache writes
-  are not addressable): requests run in groups of ``max_batch``; a
-  finished sequence's slot idles until the whole group drains, and slot
-  refill re-runs a batched prefill over the next waiting group.
+* ``lockstep`` - the legacy group scheduler, kept behind the ``mode``
+  flag as a baseline (and as the uniform-length reference the
+  conformance property tests continuous mode against): requests run in
+  groups of ``max_batch``; a finished sequence's slot idles until the
+  whole group drains, and slot refill re-runs a batched prefill over the
+  next waiting group.
 
 Continuous mode supports two KV layouts (``kv_layout``):
 
@@ -80,6 +87,10 @@ identical while compiles drop to one per bucket
 (``EngineStats.prefill_compiles`` counts distinct compiled prefill
 shapes).  The paged layout ignores ``bucket``: its chunked prefill
 compiles exactly one ``(1, block_size)`` chunk shape for all prompts.
+Bucketing requires a prefill that understands ``prefill_len``
+(``model.supports_prefill_len``) — a scan-family prefill folds every
+position into recurrent state, so right-padding would corrupt it, and
+``bucket=`` is rejected there.
 
 Per-request sampling is vectorized and **request-keyed**: row ``i``'s
 ``t``-th token is sampled with ``fold_in(fold_in(key, rid_i), t)``, so a
@@ -108,6 +119,15 @@ from .kvcache import BlockAllocator, PoolPressure, blocks_needed
 
 @dataclasses.dataclass
 class Request:
+    """One generation request.
+
+    The scheduler may admit, move, preempt, and re-admit a request
+    freely: everything observable about its output is a pure function of
+    (``prompt``, ``max_new_tokens``, ``temperature``, ``rid``, base PRNG
+    key) — the conformance property in ``tests/test_serving_props.py``
+    holds the token stream byte-identical across every scheduler, cache
+    layout, and topology.  The remaining fields are scheduler
+    bookkeeping that preemption threads through a requeue."""
     prompt: list[int]
     max_new_tokens: int = 32       # total budget, including ``done``
     temperature: float = 0.0
@@ -132,6 +152,9 @@ class Request:
 
 @dataclasses.dataclass
 class Result:
+    """One request's output: the full generated stream (a preempted
+    request's ``done`` prefix included — resume is invisible) plus its
+    latency split."""
     rid: int
     tokens: list[int]
     prefill_ms: float = 0.0        # time-to-first-token for this request
@@ -140,12 +163,18 @@ class Result:
 
 @dataclasses.dataclass
 class EngineStats:
-    """Aggregate metrics for the last ``generate`` call."""
-    mode: str
+    """Aggregate metrics for the last ``generate`` call (or session).
+
+    ``occupancy`` is the utilization headline this repo exists to
+    measure: the fixed-shape decode launch always computes ``max_batch``
+    slot lanes, so occupancy is the fraction of launched lanes that held
+    a live request — the serving twin of the paper's vector-lane
+    utilization under short workloads."""
+    mode: str                      # resolved scheduler ("cluster" at top)
     wall_s: float
     generated_tokens: int
     tokens_per_s: float
-    decode_steps: int
+    decode_steps: int              # decode launches (cluster: summed)
     occupancy: float               # busy slot-steps / (max_batch * steps)
     ttft_ms_mean: float            # mean time-to-first-token
     kv_layout: str = "dense"
@@ -223,23 +252,42 @@ def _sample_rows(logits, temps, key, rids, tok_idx):
 class ServeEngine:
     """Batched generation over the uniform Model API.
 
-    mode: "auto" (continuous when the model exposes slot-cache hooks,
-    else lockstep), "continuous", or "lockstep".  Requesting "continuous"
-    on a scan-layout cache silently falls back to lockstep - check
-    ``engine.mode`` for the resolved scheduler.
+    Invariants the property suite (``tests/test_serving_props.py``)
+    asserts over this class:
+
+    * **scheduler-invisible tokens** — for one trace and base key, every
+      mode/layout/topology combination emits byte-identical token
+      streams (greedy rows are argmax; sampled rows are request-keyed,
+      see ``_sample_rows``).
+    * **block conservation** (paged) — after ``generate`` returns or
+      raises, every block and reservation is back in the pool.
+    * **preemption-invisible resume** — a preempted request re-admitted
+      with its ``done`` prefix reproduces the uninterrupted stream.
+    * **no state leak** — a freed/preempted slot's cache state cannot
+      reach a later occupant: scan-family slots are zeroed on release
+      (``model.cache_slot_reset``), KV-family slots are masked by their
+      per-slot ``pos`` and fully rewritten at the next admission.
+
+    mode: "auto" (resolves to continuous - every family is
+    slot-addressable), "continuous", or "lockstep" (the group-barrier
+    baseline).
 
     ``extra_inputs`` (vlm patches / encdec frames): leaves carry one row
     per request, indexed by submission order; a leaf with leading dim 1
     broadcasts to every request.  Too few rows is an error, not a clamp.
 
     kv_layout: "dense" or "paged" (continuous mode only; see module doc).
+    The scan families (ssm/hybrid/encdec) serve on the dense slot layout;
+    requesting "paged" for them raises (recurrent state is O(1) per slot
+    already - there is nothing to page).
     block_size / n_blocks size the paged pool - n_blocks defaults to the
     dense layout's footprint (max_batch * cache_len positions) plus the
     null block.  ``allocator=`` injects an external (shared) pool instead;
     ``owner=`` tags this engine's allocations in it; ``admission=``
     selects "reserve" (default) or "overcommit" (cluster preemption mode).
     bucket: None (exact-length prefills), "pow2", or an integer
-    pad-to-multiple.
+    pad-to-multiple; rejected when the family's prefill cannot mask pads
+    (``model.supports_prefill_len``).
     """
 
     def __init__(self, model: Model, params, *, max_batch: int = 8,
@@ -264,7 +312,16 @@ class ServeEngine:
         if mode == "auto":
             mode = "continuous" if slot_capable else "lockstep"
         if mode == "continuous" and not slot_capable:
-            mode = "lockstep"      # re-prefill fallback (scan-cache layout)
+            # every built-in family ships slot hooks now; a custom Model
+            # without them must ask for lockstep explicitly
+            raise ValueError(
+                f"mode='continuous': model {model.cfg.name!r} exposes no "
+                "cache_slot_write hook (pass mode='lockstep')")
+        if bucket and not model.supports_prefill_len:
+            raise ValueError(
+                f"bucket={bucket!r}: family {model.cfg.family!r} prefill "
+                "cannot mask right-pads (recurrent state would absorb "
+                "them); drop bucket= for scan families")
         if kv_layout == "paged":
             if model.decode_paged is None:
                 raise ValueError(
@@ -331,6 +388,11 @@ class ServeEngine:
                                              static_argnums=(1,))
                 self._slot_write = jax.jit(model.cache_slot_write,
                                            donate_argnums=(0,))
+            # scan families: zero a slot's recurrent state on free/preempt
+            # (KV families have no reset hook - pos masking covers them)
+            self._slot_reset = (
+                jax.jit(model.cache_slot_reset, donate_argnums=(0,))
+                if model.cache_slot_reset is not None else None)
 
     # ------------------------------------------------------------------
     # Public API.
@@ -402,7 +464,12 @@ class ServeEngine:
     def _check_budget(self, prefill_pos: int, max_new: int, rid) -> None:
         """Every position written past prefill must fit in cache_len: the
         per-slot strip length (dense; writes beyond it are silently dropped
-        by the one-hot update) or the block-table width (paged)."""
+        by the one-hot update) or the block-table width (paged).  Families
+        with unbounded state (``model.bounded_cache`` False: ssm's O(1)
+        recurrent state, hybrid's state + wrapping attention ring) have no
+        write budget to enforce."""
+        if not self.model.bounded_cache:
+            return
         writes = prefill_pos + max(max_new - 1, 0)
         if writes > self.cache_len:
             raise ValueError(
@@ -839,10 +906,19 @@ class ServeEngine:
         return Result(s.req.rid, tokens, s.ttft_ms, per_tok)
 
     def _release(self, s: _Slot, i: int) -> None:
-        """Paged: return the slot's blocks to the pool immediately and
-        park its block-table row on the null block so its idle decode
-        writes cannot touch recycled blocks."""
+        """Free slot ``i``'s cache-side state.
+
+        dense + scan family: zero the slot's recurrent state and position
+        (``model.cache_slot_reset``) so nothing of the finished/preempted
+        request survives in the pool — the no-leak invariant the
+        regression tests assert directly.
+
+        paged: return the slot's blocks to the pool immediately and park
+        its block-table row on the null block so its idle decode writes
+        cannot touch recycled blocks."""
         if self.kv_layout != "paged":
+            if self._slot_reset is not None and self._sess.cache is not None:
+                self._sess.cache = self._slot_reset(self._sess.cache, i)
             return
         self.allocator.free(s.blocks)
         self.allocator.unreserve(s.reserve_left)

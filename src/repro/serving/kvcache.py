@@ -37,6 +37,15 @@ The pool layout itself ((n_layers, n_blocks, n_kv_heads, block_size,
 head_dim)) is built by the model family (``model.paged_cache_init``); this
 module only manages block ownership and the layout-agnostic table/position
 updates shared by every paged family.
+
+**Conservation invariants** (asserted by the stateful allocator property
+in ``tests/test_kvcache.py`` and after every run of the conformance
+suite in ``tests/test_serving_props.py``): a block is never handed out
+twice, never freed twice, never freed by a non-owner path; ``n_live +
+n_free == capacity`` at all times; reservations never exceed free
+blocks; and after any ``generate`` — including one aborted by an
+exception — the pool drains to ``n_live == 0``, ``n_reserved == 0``,
+``n_free == capacity``.
 """
 from __future__ import annotations
 

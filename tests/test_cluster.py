@@ -203,8 +203,82 @@ def test_cluster_validates_shape_and_family(model_and_params):
         ClusterEngine(model, params, replicas=3, total_slots=4)
     cfg = smoke_config("xlstm-350m")
     scan_model = build_model(cfg)
+    scan_params = scan_model.init(jax.random.key(0))
+    # scan families cluster on the dense slot layout; explicitly asking
+    # for paged still fails loudly (no block hooks to page with)
     with pytest.raises(ValueError, match="paged"):
-        ClusterEngine(scan_model, scan_model.init(jax.random.key(0)))
+        ClusterEngine(scan_model, scan_params, kv_layout="paged")
+    cl = ClusterEngine(scan_model, scan_params, replicas=2, total_slots=4,
+                       cache_len=32)
+    assert cl.kv_layout == "dense" and cl.pool is None
+
+
+def test_scan_cluster_matches_single_engine():
+    """Dense-layout cluster (slot-addressable recurrent state): scan
+    families routed over narrow replicas emit the single-engine stream,
+    greedy and sampled rows alike."""
+    cfg = smoke_config("zamba2-1.2b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    reqs = [Request([1 + i, 2 + i, 3 + i], 4 + (i % 3),
+                    temperature=(1.0 if i % 2 else 0.0), rid=i)
+            for i in range(7)]
+    key = jax.random.key(23)
+    ref = ServeEngine(model, params, max_batch=4, cache_len=32,
+                      mode="continuous").generate(reqs, key=key)
+    cl = ClusterEngine(model, params, replicas=2, total_slots=4,
+                       cache_len=32)
+    for a, b in zip(ref, cl.generate(reqs, key=key)):
+        assert a.tokens == b.tokens, a.rid
+    assert cl.last_stats.kv_layout == "dense"
+    assert cl.last_stats.preempted == 0   # no pool, no pressure
+
+
+def test_scan_state_reset_on_preempt_no_leak():
+    """The per-slot scan-state analog of the allocator leak checks: a
+    preempted slot's recurrent state is zeroed immediately, and the slot's
+    next occupant decodes exactly as it would on a fresh engine - nothing
+    of the evicted request leaks through the recurrent state."""
+    import numpy as np
+    from repro.models.xlstm_lm import XLSTM_STATE_AXES
+    cfg = smoke_config("xlstm-350m")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    key = jax.random.key(31)
+    eng = ServeEngine(model, params, max_batch=1, cache_len=32,
+                      mode="continuous")
+    eng.begin_session(key)
+    victim = Request([9, 8, 7], 8, temperature=1.3, rid=0)
+    eng.session_admit(victim, tag=0)
+    eng.session_step()
+    eng.session_step()
+    _, requeued = eng.session_preempt(0)
+    assert len(requeued.done) == 3      # admit token + two step tokens
+    cache = eng._sess.cache
+    assert int(np.asarray(cache["pos"])[0]) == 0
+    for name, ax in XLSTM_STATE_AXES.items():
+        row = np.moveaxis(np.asarray(cache[name], np.float32), ax, 0)[0]
+        assert not row.any(), name
+    # next occupant of the same slot: byte-identical to a fresh engine
+    nxt = Request([1, 2, 3], 4, temperature=0.9, rid=1)
+    eng.session_admit(nxt, tag=1)
+    outs = {}
+    while eng.session_active:
+        for tag, res in eng.session_step():
+            outs[tag] = res
+    eng.end_session()
+    fresh = ServeEngine(model, params, max_batch=1, cache_len=32,
+                        mode="continuous").generate([nxt], key=key)[0]
+    assert outs[1].tokens == fresh.tokens
+    # and the victim's resume is preemption-invisible, recurrent state
+    # rebuilt from prompt + done alone
+    resumed = ServeEngine(model, params, max_batch=1, cache_len=32,
+                          mode="continuous").generate([requeued],
+                                                      key=key)[0]
+    uninterrupted = ServeEngine(model, params, max_batch=1, cache_len=32,
+                                mode="continuous").generate([victim],
+                                                            key=key)[0]
+    assert resumed.tokens == uninterrupted.tokens
 
 
 def test_cotenant_held_pool_fails_loudly(model_and_params):

@@ -135,13 +135,78 @@ def test_extra_inputs_too_few_rows_rejected(model_and_params):
         eng.generate(reqs)
 
 
-def test_scan_cache_family_falls_back_to_lockstep():
-    cfg = smoke_config("xlstm-350m")
+def _scan_setup(arch):
+    import jax.numpy as jnp
+    cfg = smoke_config(arch)
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
+    extra = None
+    if cfg.family == "encdec":
+        extra = {"frames": jax.random.normal(
+            jax.random.key(9), (8, 6, cfg.d_model)).astype(jnp.bfloat16)}
+    return cfg, model, params, extra
+
+
+@pytest.mark.parametrize("arch", ["xlstm-350m", "zamba2-1.2b",
+                                  "whisper-base"])
+def test_scan_family_serves_continuous(arch):
+    """Slot-addressable recurrent state: the scan families run the
+    continuous scheduler (no lockstep fallback) and emit byte-identical
+    tokens to the lock-step baseline on a uniform-length trace, greedy
+    and sampled rows alike."""
+    cfg, model, params, extra = _scan_setup(arch)
+    # short requests batched beside long ones: lockstep pins their slots
+    # to the group's slowest member, continuous refills them
+    reqs = [Request([1 + i, 2 + i, 3 + i], 8 if i % 2 else 2,
+                    temperature=(1.2 if i % 2 else 0.0), rid=i)
+            for i in range(4)]
+    key = jax.random.key(11)
+    cont = ServeEngine(model, params, max_batch=2, cache_len=32,
+                       mode="continuous", extra_inputs=extra)
+    assert cont.mode == "continuous"
+    res = cont.generate(reqs, key=key)
+    assert [len(r.tokens) for r in res] == [r.max_new_tokens for r in reqs]
+    lock = ServeEngine(model, params, max_batch=2, cache_len=32,
+                       mode="lockstep", extra_inputs=extra)
+    for a, b in zip(res, lock.generate(reqs, key=key)):
+        assert a.tokens == b.tokens, (arch, a.rid)
+    # the whole point: freed slots refill instead of idling to a barrier
+    assert cont.last_stats.decode_steps < lock.last_stats.decode_steps
+
+
+def test_scan_family_rejects_bucketing_and_paged():
+    """A scan-family prefill folds every position into recurrent state:
+    right-padded bucketed prompts would corrupt it, and there is no block
+    pool to page - both knobs fail loudly instead of mis-serving."""
+    cfg, model, params, _ = _scan_setup("xlstm-350m")
+    with pytest.raises(ValueError, match="bucket"):
+        ServeEngine(model, params, max_batch=2, cache_len=32,
+                    bucket="pow2")
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(model, params, max_batch=2, cache_len=32,
+                    kv_layout="paged")
+
+
+@pytest.mark.parametrize("arch", ["xlstm-350m", "whisper-base"])
+def test_freed_scan_slot_state_is_reset(arch):
+    """No-leak invariant: when a scan-family slot is freed, every leaf of
+    its recurrent state (and its position) is zeroed - nothing of the
+    finished request survives for a later occupant to read."""
+    import numpy as np
+    cfg, model, params, extra = _scan_setup(arch)
     eng = ServeEngine(model, params, max_batch=2, cache_len=32,
-                      mode="continuous")
-    assert eng.mode == "lockstep"   # scan-cache layout: re-prefill fallback
-    res = eng.generate([Request([1, 2, 3], 4, rid=0),
-                        Request([4, 5], 3, rid=1)])
-    assert [len(r.tokens) for r in res] == [4, 3]
+                      mode="continuous", extra_inputs=extra)
+    eng.begin_session(jax.random.key(0))
+    eng.session_admit(Request([1, 2, 3], 3, rid=0), tag=0)
+    while eng.session_active:
+        eng.session_step()
+    cache = eng._sess.cache
+    if arch == "xlstm-350m":
+        from repro.models.xlstm_lm import XLSTM_STATE_AXES as axes
+    else:
+        from repro.models.encdec import ENCDEC_STATE_AXES as axes
+    assert int(np.asarray(cache["pos"])[0]) == 0
+    for name, ax in axes.items():
+        row = np.moveaxis(np.asarray(cache[name], np.float32), ax, 0)[0]
+        assert not row.any(), (arch, name)
+    eng.end_session()

@@ -23,6 +23,16 @@ each through:
   * cluster 2x2 over a starved pool (overcommit admission: pool pressure
                                  forces preemption + requeue mid-trace)
 
+A second property runs the same conformance over the **scan families**
+(ssm / hybrid / encdec), whose continuous batching rides slot-addressable
+recurrent state (``repro.models.slot_state``) instead of KV strips:
+
+  {ssm, hybrid, encdec} x {continuous, lockstep-on-uniform-lengths}
+                        x {single, 1xN cluster, Nx1 cluster}
+
+must be byte-identical per trace too (their clusters run the dense slot
+layout — no pool, so the drain check is vacuous there).
+
 After every run the shared pools must be fully drained (no leaked blocks
 or reservations) — a stateful invariant the random traces exercise far
 harder than the fixed regression traces do.
@@ -153,6 +163,94 @@ def test_serving_conformance_random_traces(harness, seed):
 @pytest.mark.parametrize("seed", range(N_FALLBACK))
 def test_serving_conformance_fallback(harness, seed):
     _check_conformance(harness, seed)
+
+
+# ---------------------------------------------------------------------------
+# Scan families: slot-addressable recurrent state.
+# ---------------------------------------------------------------------------
+
+SCAN_ARCHS = {"ssm": "xlstm-350m", "hybrid": "zamba2-1.2b",
+              "encdec": "whisper-base"}
+N_SCAN_EXAMPLES = 20                   # per family, CI (hypothesis)
+N_SCAN_FALLBACK = 4                    # per family, no-dep fallback
+
+
+@pytest.fixture(scope="module")
+def scan_harness():
+    """One engine set per scan family: continuous reference, lock-step
+    baseline, and dense-layout clusters (wide 1xN and narrow Nx1)."""
+    import jax.numpy as jnp
+    out = {}
+    for family, arch in SCAN_ARCHS.items():
+        cfg = smoke_config(arch)
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        extra = None
+        if family == "encdec":
+            # one encoder-frame row per possible request (submission
+            # order indexes extra_inputs), shared by every engine
+            extra = {"frames": jax.random.normal(
+                jax.random.key(42), (8, 6, cfg.d_model)
+            ).astype(jnp.bfloat16)}
+        kw = dict(cache_len=CACHE_LEN, extra_inputs=extra)
+        engines = {
+            "continuous": ServeEngine(model, params, max_batch=SLOTS,
+                                      mode="continuous", **kw),
+            "lockstep": ServeEngine(model, params, max_batch=SLOTS,
+                                    mode="lockstep", **kw),
+            "cluster-1xN": ClusterEngine(model, params, replicas=1,
+                                         total_slots=SLOTS, **kw),
+            "cluster-Nx1": ClusterEngine(model, params, replicas=SLOTS,
+                                         total_slots=SLOTS, **kw),
+        }
+        assert engines["cluster-Nx1"].kv_layout == "dense"
+        out[family] = (cfg, engines)
+    return out
+
+
+def _check_scan_conformance(scan_harness, family: str, seed: int):
+    cfg, engines = scan_harness[family]
+    rng = np.random.default_rng(seed)
+    reqs, key_seed = _draw_trace(rng, cfg.vocab_size)
+    key = jax.random.key(key_seed)
+    uniform = len({len(r.prompt) for r in reqs}) == 1
+
+    ref = engines["continuous"].generate(reqs, key=key)
+    assert [r.rid for r in ref] == [q.rid for q in reqs]
+    assert [len(r.tokens) for r in ref] == [q.max_new_tokens for q in reqs]
+    for name, eng in engines.items():
+        if name == "continuous":
+            continue
+        if name == "lockstep" and not uniform:
+            continue    # left-padded group prefill needs one length
+        got = eng.generate(reqs, key=key)
+        for a, b in zip(ref, got):
+            assert a.tokens == b.tokens, (
+                f"{family}/{name} diverged on rid={a.rid} (seed {seed}): "
+                f"{a.tokens} vs {b.tokens}")
+
+
+@pytest.mark.skipif(not HAS_HYPOTHESIS,
+                    reason="hypothesis drives the full example budget; "
+                           "the seeded fallback below covers the no-dep "
+                           "environment")
+@settings(max_examples=N_SCAN_EXAMPLES, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_scan_family_conformance_random_traces(scan_harness, seed):
+    """{ssm, hybrid, encdec} x {continuous, lockstep-on-uniform}
+    x {single, 1xN, Nx1 cluster}: byte-identical tokens per trace (every
+    family sees every drawn trace — a shrunk counterexample names the
+    family in its assert message)."""
+    for family in sorted(SCAN_ARCHS):
+        _check_scan_conformance(scan_harness, family, seed)
+
+
+@pytest.mark.skipif(HAS_HYPOTHESIS,
+                    reason="hypothesis variant runs the full budget")
+@pytest.mark.parametrize("family", sorted(SCAN_ARCHS))
+@pytest.mark.parametrize("seed", range(N_SCAN_FALLBACK))
+def test_scan_family_conformance_fallback(scan_harness, family, seed):
+    _check_scan_conformance(scan_harness, family, seed)
 
 
 def test_pressure_cluster_actually_preempts(harness):

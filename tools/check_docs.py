@@ -1,0 +1,122 @@
+"""Markdown link-check + lint for the repo docs (stdlib only; CI gate).
+
+Checks, over README.md, ROADMAP.md, and docs/**/*.md:
+
+  * every relative link target exists on disk (``[text](path)`` and
+    ``[text](path#anchor)``);
+  * every in-document / cross-document ``#anchor`` resolves to a heading
+    (GitHub slug rules: lowercase, spaces -> dashes, punctuation
+    stripped);
+  * fenced code blocks are balanced (an unclosed ``` renders half the
+    page as code);
+  * no literal tab characters (GitHub renders them 8 wide and breaks
+    table alignment).
+
+http(s) links are *not* fetched (CI must stay hermetic); they are only
+required to be non-empty.
+
+Exit status is the number of problems found; problems print as
+``path:line: message`` so editors and CI logs can jump to them.
+"""
+from __future__ import annotations
+
+import functools
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOC_FILES = ["README.md", "ROADMAP.md", "PAPER.md", "PAPERS.md",
+             "CHANGES.md", "ISSUE.md"]
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*)$")
+
+
+def doc_paths() -> list[pathlib.Path]:
+    out = [ROOT / f for f in DOC_FILES if (ROOT / f).exists()]
+    out += sorted((ROOT / "docs").glob("**/*.md"))
+    return out
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markdown emphasis/code/links, lowercase,
+    drop punctuation, spaces to dashes."""
+    h = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", heading)   # [t](u) -> t
+    h = h.replace("`", "").replace("*", "").strip()   # underscores survive
+    h = h.lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+@functools.lru_cache(maxsize=None)
+def headings_of(path: pathlib.Path) -> set[str]:
+    slugs: set[str] = set()
+    counts: dict[str, int] = {}
+    in_fence = False
+    for line in path.read_text().splitlines():
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = github_slug(m.group(2))
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
+
+
+def check_file(path: pathlib.Path, problems: list[str]) -> None:
+    text = path.read_text()
+    rel = path.relative_to(ROOT)
+    fence_depth = 0
+    in_fence = False
+    for i, line in enumerate(text.splitlines(), 1):
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            fence_depth += 1
+        if "\t" in line:
+            problems.append(f"{rel}:{i}: literal tab character")
+        if in_fence:
+            continue
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            base, _, anchor = target.partition("#")
+            if base:
+                dest = (path.parent / base).resolve()
+                if not dest.exists():
+                    problems.append(
+                        f"{rel}:{i}: broken link target {target!r}")
+                    continue
+            else:
+                dest = path
+            if anchor:
+                if dest.suffix != ".md" or dest.is_dir():
+                    continue        # anchors into code files: not checked
+                if anchor not in headings_of(dest):
+                    problems.append(
+                        f"{rel}:{i}: anchor #{anchor} not found in "
+                        f"{dest.relative_to(ROOT)}")
+    if fence_depth % 2:
+        problems.append(f"{rel}: unbalanced ``` code fence")
+
+
+def main() -> int:
+    paths = doc_paths()
+    problems: list[str] = []
+    for p in paths:
+        check_file(p, problems)
+    for msg in problems:
+        print(msg, file=sys.stderr)
+    print(f"[check_docs] {len(paths)} files, {len(problems)} problems")
+    return min(len(problems), 125)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
