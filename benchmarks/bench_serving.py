@@ -35,6 +35,14 @@ Tokens must match byte-for-byte and continuous must win occupancy and
 decode-step count (both deterministic; tok/s is reported, not asserted,
 to keep CI timing-independent).
 
+A third trace hammers one **shared prompt prefix** (the production
+shape: system prompts / few-shot templates) through the paged engine
+with the prefix cache off vs on: the cached run must emit byte-identical
+tokens while admitting most prompt blocks by reference — hit rate is
+asserted > 0; TTFT and pool peak are reported (cache on skips prefill
+chunks and shares blocks, so both should drop, but wall-clock is not
+asserted to keep CI timing-independent).
+
 Emits ``name,us_per_call,derived`` CSV rows like the other benches:
   serving_lockstep,<wall_us>,tok/s=...;occ=...
   serving_continuous,<wall_us>,tok/s=...;occ=...
@@ -42,6 +50,9 @@ Emits ``name,us_per_call,derived`` CSV rows like the other benches:
   serving_speedup,,continuous/lockstep=...
   serving_paged_admission,,footprint=...;capacity=...;admitted=...
   serving_prefill_mem,,dense_kv_intermediate=...;paged_chunk_kv=...;...
+  serving_prefix_off,<wall_us>,ttft_ms=...;pool_peak=...;hits=0
+  serving_prefix_on,<wall_us>,ttft_ms=...;pool_peak=...;hits=...
+  serving_prefix_summary,,ttft=...;hit_rate=...;pool_peak=...
   serving_scan_ssm_lockstep,<wall_us>,tok/s=...;occ=...
   serving_scan_ssm_continuous,<wall_us>,tok/s=...;occ=...
   serving_scan_speedup,,continuous/lockstep=...
@@ -189,6 +200,67 @@ def _scan_family_report(smoke: bool):
          "recurrent state)")
 
 
+def _prefix_cache_report(smoke: bool):
+    """Shared-prefix trace through the paged engine, prefix cache off vs
+    on.
+
+    Every request opens with the same system-prompt-shaped prefix
+    (whole ``BLOCK``-sized spans, so the chain keys resolve) followed by
+    a short per-request tail.  With the cache on, the first admission
+    registers the prefix blocks and every later one references them
+    (refcount++, prefill fast-forwarded past the hit chunks), so tokens
+    must stay byte-identical to the cold run while TTFT and the pool
+    peak drop.  Hit rate and token identity are asserted; the timing
+    deltas are reported only (CI timing noise)."""
+    from repro.configs import smoke_config
+    from repro.models import build_model
+    from repro.serving import Request, ServeEngine
+
+    cfg = smoke_config("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    cache_len = 32 if smoke else CACHE_LEN
+    n_reqs = 6 if smoke else 12
+    prefix_blocks = 1 if smoke else 3
+    prefix = [(3 * j + 1) % cfg.vocab_size
+              for j in range(prefix_blocks * BLOCK)]
+    reqs = [Request(prefix + [(11 * i + j) % cfg.vocab_size
+                              for j in range(4)],
+                    SHORT_NEW, temperature=0.0, rid=i)
+            for i in range(n_reqs)]
+
+    stats, tokens = {}, {}
+    for name, pc in (("off", False), ("on", True)):
+        eng = ServeEngine(model, params, max_batch=2, cache_len=cache_len,
+                          kv_layout="paged", block_size=BLOCK,
+                          prefix_cache=pc)
+        # warmup compile with sub-block prompts: registers nothing, so
+        # the timed trace still sees one cold admission then pure hits
+        eng.generate([Request(list(range(PROMPT_LEN)), 2, rid=-1)
+                      for _ in range(2)])
+        res = eng.generate(reqs)
+        tokens[name] = [r.tokens for r in res]
+        s = stats[name] = eng.last_stats
+        emit(f"serving_prefix_{name}", s.wall_s * 1e6,
+             f"ttft_ms={s.ttft_ms_mean:.2f};"
+             f"pool_peak={s.block_util_peak:.2f};hits={s.prefix_hits};"
+             f"reused={s.prefix_tokens_reused}")
+
+    check_tokens("bench_serving", "prefix_off", tokens["off"],
+                 "prefix_on", tokens["on"], [r.rid for r in reqs])
+    on, off = stats["on"], stats["off"]
+    assert on.prefix_hits > 0, \
+        "prefix cache saw no hits on a shared-prefix trace"
+    assert off.prefix_hits == 0, off.prefix_hits
+    total_prompt = sum(len(r.prompt) for r in reqs)
+    emit("serving_prefix_summary", "",
+         f"ttft_on={on.ttft_ms_mean:.2f}ms_vs_off={off.ttft_ms_mean:.2f}"
+         f"ms;hit_rate={on.prefix_tokens_reused / total_prompt:.2f};"
+         f"pool_peak_on={on.block_util_peak:.2f}"
+         f"vs{off.block_util_peak:.2f} "
+         f"({n_reqs} reqs x {prefix_blocks * BLOCK}-token shared prefix)")
+
+
 def run(smoke: bool = False, json_path: str | None = None):
     from benchmarks.common import reset_rows
     from repro.configs import smoke_config
@@ -263,6 +335,10 @@ def run(smoke: bool = False, json_path: str | None = None):
     # prefill transient memory: the dense (L, Hkv, prompt, hd) KV
     # intermediate vs the chunked path's single-block transient
     _prefill_mem_report(model, params, cache_len, BLOCK, smoke)
+
+    # shared-prefix trace: refcounted prefix cache off vs on, tokens
+    # byte-identical, hit rate asserted
+    _prefix_cache_report(smoke)
 
     # scan family (slot-addressable recurrent state): same scheduler
     # comparison, no KV strips involved

@@ -55,6 +55,10 @@ def main():
     ap.add_argument("--bucket", default=None,
                     help="prefill length bucketing: 'pow2' or an integer "
                          "pad-to-multiple (default: exact lengths)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="paged layout: admit shared prompt prefixes by "
+                         "referencing resident pool blocks (refcounted, "
+                         "copy-on-write; see docs/serving.md)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="serve through a cluster of this many engine "
                          "replicas sharing one KV pool (--max-batch is the "
@@ -100,7 +104,8 @@ def main():
                             block_size=args.block_size,
                             n_blocks=args.n_blocks, bucket=bucket,
                             admission=args.admission or "overcommit",
-                            preempt_hysteresis=args.hysteresis)
+                            preempt_hysteresis=args.hysteresis,
+                            prefix_cache=args.prefix_cache)
     else:
         eng = ServeEngine(model, params, max_batch=args.max_batch,
                           cache_len=args.cache_len, mode=args.mode,
@@ -108,7 +113,8 @@ def main():
                           kv_layout=args.kv_layout,
                           block_size=args.block_size,
                           n_blocks=args.n_blocks, bucket=bucket,
-                          admission=args.admission or "reserve")
+                          admission=args.admission or "reserve",
+                          prefix_cache=args.prefix_cache)
     reqs = [Request([int(t) % cfg.vocab_size for t in p.split()],
                     args.max_new, args.temperature, rid=i)
             for i, p in enumerate(args.prompts)]
@@ -119,6 +125,9 @@ def main():
     paged = (f" block_util_peak={s.block_util_peak:.2f}"
              f" preempted={s.preempted} requeued={s.requeued}"
              if s.kv_layout == "paged" else "")
+    if args.prefix_cache:
+        paged += (f" prefix_hits={s.prefix_hits}"
+                  f" prefix_reused={s.prefix_tokens_reused}")
     cluster = f" router={s.router_policy}" if s.router_policy else ""
     print(f"[serve] mode={s.mode} kv={s.kv_layout} "
           f"tokens/s={s.tokens_per_s:.1f} "

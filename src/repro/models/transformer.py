@@ -193,7 +193,12 @@ def decoder_prefill(params, batch, cfg, *, cache_len=None):
                                    window=w)
         x = x + a
         h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
-        x = constrain(x + _ffn(lp, h, cfg), "hidden")
+        # exact=True routes moe dropless: serving prefill must produce the
+        # same hiddens as the chunked paged prefill (which is dropless by
+        # construction at chunk length <= capacity), so paged==dense token
+        # identity holds for the moe family too.  Training keeps
+        # capacity-factor routing (decoder_loss does not share this body).
+        x = constrain(x + _ffn(lp, h, cfg, exact=True), "hidden")
         # write the layer cache in place (carried, not stacked as scan ys:
         # ys accumulation double-buffers the full multi-GB cache)
         kc_all = jax.lax.dynamic_update_index_in_dim(kc_all, kc, idx, 0)

@@ -11,11 +11,14 @@
 Cross-cutting invariants (asserted in ``tests/test_serving_props.py``,
 ``tests/test_serving.py``, ``tests/test_cluster.py``): request-keyed
 sampling makes token streams placement/scheduler-independent; block
-accounting conserves the pool exactly; preemption + requeue is invisible
-in the output; freed slots leak no state to later occupants.  The full
-scheduler matrix and knob reference live in ``docs/serving.md``.
+accounting conserves the pool exactly (refcounted prefix sharing
+included — ``sum(refs) >= n_live``, cached blocks stay allocatable);
+a prefix-cache hit serves bytes bit-identical to a cold prefill;
+preemption + requeue is invisible in the output; freed slots leak no
+state to later occupants.  The full scheduler matrix and knob reference
+live in ``docs/serving.md``.
 """
 from .cluster import ROUTER_POLICIES, ClusterEngine
 from .engine import EngineStats, Request, Result, ServeEngine
 from .kvcache import (BlockAllocator, BlockPoolStats, PoolPressure,
-                      blocks_needed)
+                      blocks_needed, prefix_chain_keys)

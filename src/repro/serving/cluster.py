@@ -51,6 +51,17 @@ of the memory system.  The serving analog built here:
   resolves the same way.  ``admission="reserve"`` is also accepted for a
   no-preemption cluster.
 
+* with ``prefix_cache=True`` (paged only) every replica registers and
+  resolves prompt-prefix blocks in the **shared** allocator-level index.
+  Entries are tagged with the writer replica and ``lookup`` is scoped to
+  it: block *accounting* is pool-global but the device-side pool arrays
+  are per-replica (see the device-memory caveat below), so only the
+  replica whose pool holds the bytes may admit by reference.  Preempting
+  a request that holds shared blocks only drops its references — a block
+  another request reads stays live, and a registered block whose last
+  reference drops parks in the allocator's cached LRU instead of being
+  recycled, so the victim's prefix survives for its re-admission.
+
 * requeued victims re-enter behind a **preemption hysteresis**
   (``preempt_hysteresis`` scheduler rounds, waived when the cluster is
   idle): the raw FIFO requeue could re-admit a victim straight back into
@@ -106,6 +117,11 @@ class ClusterEngine:
     hysteresis is waived while the whole cluster is idle (an empty
     cluster cannot be under pressure, so waiting would only stall).
 
+    prefix_cache: paged clusters only — replicas admit shared prompt
+    prefixes by referencing resident pool blocks through the shared
+    allocator's writer-scoped index (see the module doc; rejected for
+    dense scan-family clusters).
+
     ``generate`` mirrors ``ServeEngine.generate``; ``last_stats`` is the
     cluster-level aggregate (mode="cluster", ``router_policy`` set) and
     ``replica_stats`` keeps the per-replica EngineStats.
@@ -119,7 +135,8 @@ class ClusterEngine:
                  bucket: str | int | None = None,
                  extra_inputs: dict | None = None,
                  admission: str = "overcommit",
-                 preempt_hysteresis: int = 4):
+                 preempt_hysteresis: int = 4,
+                 prefix_cache: bool = False):
         if router not in ROUTER_POLICIES:
             raise ValueError(f"router={router!r}: pick one of "
                              f"{ROUTER_POLICIES}")
@@ -149,10 +166,15 @@ class ClusterEngine:
                                                         block_size) + 1)
             self.pool = BlockAllocator(n_blocks, block_size)
             layout_kw = dict(kv_layout="paged", allocator=self.pool,
-                             admission=admission)
+                             admission=admission,
+                             prefix_cache=prefix_cache)
         else:
             # scan families: per-slot recurrent state, no shared pool, no
             # pool pressure - admission is bounded by free slots alone
+            if prefix_cache:
+                raise ValueError(
+                    "prefix_cache=True requires the paged layout (dense "
+                    "scan-family replicas have no blocks to share)")
             self.pool = None
             layout_kw = dict(kv_layout="dense")
         self.engines = [
@@ -342,4 +364,7 @@ class ClusterEngine:
                              if self.pool is not None else 0.0),
             preempted=preempts,
             requeued=sum(s.requeued for s in reps),
-            router_policy=self.router)
+            router_policy=self.router,
+            prefix_hits=sum(s.prefix_hits for s in reps),
+            prefix_tokens_reused=sum(s.prefix_tokens_reused
+                                     for s in reps))

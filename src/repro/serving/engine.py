@@ -92,6 +92,28 @@ Bucketing requires a prefill that understands ``prefill_len``
 position into recurrent state, so right-padding would corrupt it, and
 ``bucket=`` is rejected there.
 
+Prefix caching (``prefix_cache=True``, paged layout only): full
+``block_size`` spans of a finished prefill's prompt are *registered* in
+the allocator's prefix index under exact chain keys (nested tuples over
+the span's token ids, chained on the parent key — token-exact, no hash
+collisions).  A later admission whose prompt starts with the same spans
+*references* the resident blocks instead of recomputing them: refcount
+incremented, chunked prefill fast-forwarded to the first cold block,
+``EngineStats.prefix_hits``/``prefix_tokens_reused`` counting the skip.
+A request whose whole prefill is covered re-runs only its final chunk
+(the engine needs that chunk's logits to sample the first token), and
+because that chunk's pool block is shared, the write barrier in
+``_advance_prefill`` gives the slot a private **copy-on-write** block
+first (allocate, byte-copy, re-table, drop the shared reference).
+Blocks written by decode are never registered — only chunk-prefill
+output is, so a cache hit serves bytes that are bit-identical to what
+the cold path would recompute.  Registered blocks whose last reference
+drops park in the allocator's cached LRU (revivable by a later hit,
+evicted LRU-first when the pool needs them), and the engine keeps its
+device-side pool alive across sessions so cached bytes stay resident;
+``session_abort`` flushes this engine's index entries instead (an
+aborted session's pool state is not trustworthy).
+
 Per-request sampling is vectorized and **request-keyed**: row ``i``'s
 ``t``-th token is sampled with ``fold_in(fold_in(key, rid_i), t)``, so a
 request's sampled stream depends only on its ``rid`` and the base key -
@@ -183,6 +205,8 @@ class EngineStats:
     preempted: int = 0             # requests evicted under pool pressure
     requeued: int = 0              # re-admissions of preempted requests
     router_policy: str = ""        # cluster-level: routing policy used
+    prefix_hits: int = 0           # prompt blocks admitted by reference
+    prefix_tokens_reused: int = 0  # prefill positions skipped via hits
 
 
 @dataclasses.dataclass
@@ -202,6 +226,9 @@ class _Slot:
     # prefill has finished and the first token is sampled (dense slots are
     # always None — their prefill runs at admit)
     chunks_done: int | None = None
+    # prefix cache: blocks[:shared_until] are referenced from the prefix
+    # index (refcounted, read-only for this slot until copy-on-write)
+    shared_until: int = 0
     extra_row: int = 0             # extra_inputs row (vlm patches)
     admit_t: float = 0.0           # perf_counter at admission (TTFT base)
 
@@ -224,6 +251,8 @@ class _Session:
     preempted: int = 0
     requeued: int = 0
     admit_counter: int = 0
+    prefix_hits: int = 0
+    prefix_reused: int = 0
     # Results finished during session_step's prefill phase, parked here so
     # they survive a PoolPressure raised later in the same step (the slot
     # is already released — a lost local would drop the Result for good);
@@ -288,6 +317,10 @@ class ServeEngine:
     bucket: None (exact-length prefills), "pow2", or an integer
     pad-to-multiple; rejected when the family's prefill cannot mask pads
     (``model.supports_prefill_len``).
+    prefix_cache: paged layout only — admit shared prompt prefixes by
+    referencing resident pool blocks (see the module doc); rejected for
+    families whose prefill carries a non-token prefix (vlm patches:
+    patch content is not addressable by token ids).
     """
 
     def __init__(self, model: Model, params, *, max_batch: int = 8,
@@ -297,7 +330,8 @@ class ServeEngine:
                  n_blocks: int | None = None,
                  bucket: str | int | None = None,
                  allocator: BlockAllocator | None = None,
-                 admission: str = "reserve", owner: Any = 0):
+                 admission: str = "reserve", owner: Any = 0,
+                 prefix_cache: bool = False):
         assert mode in ("auto", "continuous", "lockstep"), mode
         assert kv_layout in ("dense", "paged"), kv_layout
         assert admission in ("reserve", "overcommit"), admission
@@ -335,9 +369,18 @@ class ServeEngine:
         elif admission != "reserve":
             raise ValueError("admission='overcommit' requires "
                              "kv_layout='paged'")
+        elif prefix_cache:
+            raise ValueError("prefix_cache=True requires kv_layout="
+                             "'paged' (there are no blocks to share)")
+        if prefix_cache and model.cfg.family == "vlm":
+            raise ValueError(
+                "prefix_cache=True: vlm prompts start with a patch prefix "
+                "whose content is not addressable by token ids, so prefix "
+                "blocks cannot be content-hashed")
         self.mode = mode
         self.kv_layout = kv_layout
         self._admission = admission
+        self.prefix_cache = prefix_cache
         self.last_stats: EngineStats | None = None
         self._prefill_shapes: set[int] = set()   # compiled prefill lengths
         self._sess: _Session | None = None
@@ -379,6 +422,11 @@ class ServeEngine:
             self._bt_set = jax.jit(kvcache.bt_set_entry, donate_argnums=(0,))
             self._slot_release = jax.jit(kvcache.slot_release,
                                          donate_argnums=(0,))
+            self._copy_block = jax.jit(kvcache.pool_copy_block,
+                                       donate_argnums=(0,))
+            # device pool persisted across sessions (prefix_cache only):
+            # cached blocks' bytes must stay resident to be hit again
+            self._pcache = None
         else:
             self._decode = jax.jit(model.decode, donate_argnums=(1,))
             self._prefill = jax.jit(
@@ -502,6 +550,39 @@ class ServeEngine:
                   + max(r.max_new_tokens - len(r.done) - 1, 0))
         return blocks_needed(writes, self.block_size)
 
+    def _prefix_hits(self, r: Request) -> tuple[list, bool]:
+        """Resolve the request's prefill (prompt + done) against the
+        prefix index: the longest run of resident full blocks, as
+        ``([(chain_key, block_id), ...], full_boundary)``.  Pure — no
+        refcounts move until ``session_admit`` applies the hits —
+        so ``session_can_admit`` can price an admission exactly.
+        ``full_boundary`` is True when the hits cover the *entire*
+        prefill: the final chunk must then be recomputed anyway (its
+        logits seed the first sampled token), behind a copy-on-write
+        of its shared block."""
+        if not self.prefix_cache:
+            return [], False
+        seq = list(r.prompt) + list(r.done)
+        hits = []
+        for key in kvcache.prefix_chain_keys(seq, self.block_size):
+            blk = self.allocator.lookup(key, self.owner)
+            if blk is None:
+                break
+            hits.append((key, blk))
+        boundary = bool(hits) and len(hits) * self.block_size == len(seq)
+        return hits, boundary
+
+    def _admit_block_need(self, r: Request) -> int:
+        """Blocks a reserve admission must find unreserved-free: the worst
+        case minus blocks admitted by reference, plus one for the
+        full-boundary COW copy, plus one per hit that revives a cached
+        (refcount-0) block — a revival spends an allocatable block just
+        like a fresh allocation does."""
+        hits, boundary = self._prefix_hits(r)
+        n_cached = sum(self.allocator.is_cached(b) for _, b in hits)
+        return (self._worst_blocks(r) - len(hits) + int(boundary)
+                + n_cached)
+
     # ------------------------------------------------------------------
     # Stepwise session API (one continuous-batching run; ``generate``
     # drives it for the single-engine case, ClusterEngine interleaves
@@ -584,7 +665,7 @@ class ServeEngine:
             return True
         if self._admission == "overcommit":
             return self.allocator.n_avail >= 1
-        return self.allocator.n_avail >= self._worst_blocks(r)
+        return self.allocator.n_avail >= self._admit_block_need(r)
 
     def session_admit(self, r: Request, tag: int, extra_row: int = 0,
                       admit_seq: int | None = None) -> Result | None:
@@ -619,24 +700,61 @@ class ServeEngine:
             prefill_pos = (self._n_prefix() + len(r.prompt) + len(r.done))
             self._check_budget(prefill_pos,
                                r.max_new_tokens - len(r.done), r.rid)
+            hits, boundary = self._prefix_hits(r)
             reserve_left = 0
             if self._admission == "reserve":
-                # promise the whole worst case up front; every lazy block
-                # allocation (prefill chunks included) converts one
-                # promise into a live block, so growth can never fail
-                reserve_left = self._worst_blocks(r)
-                self.allocator.reserve(reserve_left)
+                # promise the whole worst case up front (minus blocks
+                # admitted by reference, plus the boundary COW copy and
+                # any cached revivals — see _admit_block_need); every
+                # lazy allocation converts one promise into a live
+                # block, so growth can never fail
+                reserve_left = (self._worst_blocks(r) - len(hits)
+                                + int(boundary))
+                n_cached = sum(self.allocator.is_cached(b)
+                               for _, b in hits)
+                self.allocator.reserve(reserve_left + n_cached)
             if sess.cache is None:
-                sess.cache = self.model.paged_cache_init(
-                    batch=self.max_batch, n_blocks=self.allocator.n_blocks,
-                    block_size=self.block_size, max_blocks=self.max_blocks,
-                    dtype=self.model.cache_dtype(self.params))
+                if self._pcache is not None:
+                    # prefix cache: the previous session's device pool is
+                    # revived so cached blocks' bytes are still resident
+                    sess.cache, self._pcache = self._pcache, None
+                else:
+                    sess.cache = self.model.paged_cache_init(
+                        batch=self.max_batch,
+                        n_blocks=self.allocator.n_blocks,
+                        block_size=self.block_size,
+                        max_blocks=self.max_blocks,
+                        dtype=self.model.cache_dtype(self.params))
+            # apply the hits: reference each resident block (reviving
+            # cached ones) and install it in the slot's block table
+            taken: list[int] = []
+            for idx, (_, blk) in enumerate(hits):
+                if self.allocator.is_cached(blk):
+                    # reviving costs one allocatable block; under reserve
+                    # it was priced into the reservation above (and can
+                    # never fail); under overcommit the revived block is
+                    # itself part of n_free, so this never fails either
+                    self.allocator.take_cached(
+                        blk, self.owner,
+                        from_reservation=self._admission == "reserve")
+                else:
+                    self.allocator.incref(blk, self.owner)
+                sess.cache = self._bt_set(sess.cache, slot, idx, blk)
+                taken.append(blk)
+            h = len(taken)
+            # a fully-covered prefill still re-runs its final chunk (the
+            # engine needs its logits) behind the COW barrier; partial
+            # coverage resumes cold at the first miss
+            chunks_done = h - 1 if boundary else h
+            sess.prefix_hits += h
+            sess.prefix_reused += chunks_done * self.block_size
             if r.done or r.requeues:
                 sess.requeued += 1
             sess.slots[slot] = _Slot(
                 req=r, tag=tag, tokens=[], ttft_ms=0.0, admit_seq=admit_seq,
                 prefill_pos=prefill_pos, reserve_left=reserve_left,
-                chunks_done=0, extra_row=extra_row,
+                blocks=taken, shared_until=h,
+                chunks_done=chunks_done, extra_row=extra_row,
                 admit_t=(r.first_admit_t if r.first_admit_t is not None
                          else t0))
             sess.temps[slot] = r.temperature
@@ -760,19 +878,47 @@ class ServeEngine:
     def _grow_slot(self, sess: _Session, i: int, s: _Slot) -> None:
         """Allocate slot ``i``'s next block and install it in the block
         table (lazy growth, shared by prefill chunks and decode writes).
-        Under reserve admission one standing promise becomes live; under
-        overcommit an empty pool surfaces as PoolPressure."""
+        Under reserve admission one standing promise becomes live — the
+        allocation draws *from the reservation* (``from_reservation=``),
+        so it can spend blocks other requests' promises hold back, and
+        the allocator retires the promise atomically with the grant;
+        under overcommit an empty pool surfaces as PoolPressure."""
+        blk = self._alloc_block(i, from_reservation=s.reserve_left > 0)
+        if s.reserve_left:
+            s.reserve_left -= 1
+        sess.cache = self._bt_set(sess.cache, i, len(s.blocks), blk)
+        s.blocks.append(blk)
+
+    def _alloc_block(self, i: int, *, from_reservation: bool) -> int:
+        """One pool allocation with overcommit pressure translation."""
         try:
-            blk = self.allocator.alloc(self.owner)
+            return self.allocator.alloc(self.owner,
+                                        from_reservation=from_reservation)
         except MemoryError as e:
             if self._admission == "overcommit":
                 raise PoolPressure(self.owner, i) from e
             raise
-        sess.cache = self._bt_set(sess.cache, i, len(s.blocks), blk)
-        s.blocks.append(blk)
-        if s.reserve_left:
-            s.reserve_left -= 1
-            self.allocator.unreserve(1)
+
+    def _cow_block(self, sess: _Session, i: int, s: _Slot, c: int) -> None:
+        """Copy-on-write barrier for chunk ``c`` of slot ``i``: the slot is
+        about to write into ``blocks[c]``, which it holds by reference from
+        the prefix index.  If any other request also holds it, allocate a
+        private block, copy the shared bytes, and swap the table entry
+        (the shared block just loses this slot's reference); a sole holder
+        rewrites in place — the recompute produces identical bytes, so the
+        index entry stays valid either way.  Resumable: a PoolPressure
+        from the allocation mutates nothing."""
+        old = s.blocks[c]
+        if self.allocator.refcount(old) > 1:
+            blk = self._alloc_block(i, from_reservation=s.reserve_left > 0)
+            if s.reserve_left:
+                s.reserve_left -= 1
+            sess.cache = self._copy_block(sess.cache, np.int32(blk),
+                                          np.int32(old))
+            sess.cache = self._bt_set(sess.cache, i, c, blk)
+            self.allocator.free([old], self.owner)
+            s.blocks[c] = blk
+        s.shared_until = c
 
     def _chunk_tokens(self, r: Request, chunk: int) -> jnp.ndarray:
         """(1, block_size) token feed for combined positions
@@ -807,6 +953,12 @@ class ServeEngine:
         logits = None
         while s.chunks_done < n_chunks:
             c = s.chunks_done
+            if c < s.shared_until:
+                # write barrier: this chunk is about to rewrite a block
+                # referenced from the prefix index (a full-boundary hit
+                # recomputes its final chunk for the logits) — give the
+                # slot a private copy first if anyone else reads it
+                self._cow_block(sess, i, s, c)  # may raise PoolPressure
             if len(s.blocks) <= c:
                 self._grow_slot(sess, i, s)     # may raise PoolPressure
             batch = {"tokens": self._chunk_tokens(r, c), **extra}
@@ -815,6 +967,15 @@ class ServeEngine:
                 self.params, sess.cache, batch, np.int32(i), np.int32(c),
                 np.int32(s.prefill_pos))
             s.chunks_done += 1
+        if self.prefix_cache:
+            # publish every full prompt-prefix block (re-registering a hit
+            # is a no-op; a COW'd boundary block supersedes the old entry).
+            # Decode writes always land past prefill_pos — in blocks beyond
+            # the full spans — so registered bytes are pure prefill output
+            seq = list(r.prompt) + list(r.done)
+            for c, key in enumerate(
+                    kvcache.prefix_chain_keys(seq, self.block_size)):
+                self.allocator.register(key, s.blocks[c], self.owner)
         tok = self._sample(logits, jnp.full((1,), r.temperature),
                            sess.key, jnp.asarray([r.rid], np.int32),
                            jnp.asarray([len(r.done)], np.int32))
@@ -869,8 +1030,16 @@ class ServeEngine:
             for s in sess.slots:
                 if s is not None:
                     if s.blocks:
-                        self.allocator.free(s.blocks)
+                        self.allocator.free(s.blocks, self.owner)
                     self.allocator.unreserve(s.reserve_left)
+            if self.prefix_cache:
+                # the aborted session's device pool is not trustworthy
+                # (a failure may have left blocks half-written): drop it
+                # and de-index everything this engine registered — cached
+                # blocks return to the raw free list, so the pool still
+                # drains clean
+                self._pcache = None
+                self.allocator.flush_index(self.owner)
         self._sess = None
 
     def end_session(self) -> EngineStats:
@@ -895,7 +1064,13 @@ class ServeEngine:
             prefill_compiles=len(self._prefill_shapes),
             block_util_peak=(self.allocator.stats().peak_utilization
                              if self.kv_layout == "paged" else 0.0),
-            preempted=sess.preempted, requeued=sess.requeued)
+            preempted=sess.preempted, requeued=sess.requeued,
+            prefix_hits=sess.prefix_hits,
+            prefix_tokens_reused=sess.prefix_reused)
+        if self.kv_layout == "paged" and self.prefix_cache:
+            # keep the device pool alive across sessions: cached blocks'
+            # bytes must stay resident for a later session to hit them
+            self._pcache = sess.cache
         self._sess = None
         return stats
 
@@ -913,14 +1088,16 @@ class ServeEngine:
         request survives in the pool — the no-leak invariant the
         regression tests assert directly.
 
-        paged: return the slot's blocks to the pool immediately and park
-        its block-table row on the null block so its idle decode writes
-        cannot touch recycled blocks."""
+        paged: drop the slot's block references — an unshared block
+        returns to the pool immediately, a shared one stays live for its
+        other holders, a registered last-reference block parks in the
+        cached LRU — and park the block-table row on the null block so
+        idle decode writes cannot touch recycled blocks."""
         if self.kv_layout != "paged":
             if self._slot_reset is not None and self._sess.cache is not None:
                 self._sess.cache = self._slot_reset(self._sess.cache, i)
             return
-        self.allocator.free(s.blocks)
+        self.allocator.free(s.blocks, self.owner)
         self.allocator.unreserve(s.reserve_left)
         s.blocks, s.reserve_left = [], 0
         self._sess.cache = self._slot_release(self._sess.cache, i)

@@ -15,7 +15,8 @@ from repro.kernels.paged_attention import (paged_decode_attention_pallas,
                                            paged_prefill_attention_xla)
 from repro.kernels.ref import paged_prefill_attention_ref
 from repro.models import build_model
-from repro.serving import BlockAllocator, Request, ServeEngine, blocks_needed
+from repro.serving import (BlockAllocator, Request, ServeEngine,
+                           blocks_needed, prefix_chain_keys)
 
 from helpers import (HAS_HYPOTHESIS, RuleBasedStateMachine, invariant,
                      precondition, rule, run_state_machine_as_test,
@@ -98,16 +99,20 @@ def test_allocator_stats_track_peak():
 
 
 def test_allocator_owner_accounting():
-    """Shared-pool bookkeeping: live blocks are tagged with the owner that
-    drew them (a cluster's replica index)."""
+    """Shared-pool bookkeeping: live block references are tagged with the
+    owner that drew them (a cluster's replica index), and ``free``
+    validates the caller actually holds the reference it drops."""
     a = BlockAllocator(8, BLOCK)
     xs = a.alloc_n(2, owner="r0")
     y = a.alloc(owner="r1")
     assert a.live_by_owner() == {"r0": 2, "r1": 1}
     assert a.owner_of(y) == "r1"
-    a.free(xs)
+    with pytest.raises(ValueError, match="owner"):
+        a.free(xs, owner="r1")          # r1 holds no reference on xs
+    assert a.live_by_owner() == {"r0": 2, "r1": 1}
+    a.free(xs, owner="r0")
     assert a.live_by_owner() == {"r1": 1}
-    a.free([y])
+    a.free([y], owner="r1")
     assert a.live_by_owner() == {}
 
 
@@ -135,40 +140,230 @@ def test_blocks_needed():
     assert blocks_needed(17, 16) == 2
 
 
+def test_alloc_gates_on_avail_not_free():
+    """Regression (reservation starvation): an allocation without a
+    matching reservation must gate on ``n_avail``, never raw ``n_free`` —
+    before the fix an atomic admission could consume blocks promised to
+    another request's lazy growth, making the promised growth fail."""
+    a = BlockAllocator(6, BLOCK)            # capacity 5
+    a.reserve(3)                            # another request's promise
+    a.alloc()                               # 2 unreserved-free: fine
+    a.alloc()
+    assert (a.n_free, a.n_avail) == (3, 0)
+    with pytest.raises(MemoryError):
+        a.alloc()                           # would eat a promised block
+    free_before = a.n_free
+    with pytest.raises(MemoryError):
+        a.alloc_n(1)                        # same hole via alloc_n
+    assert a.n_free == free_before          # and it mutated nothing
+    # the promise holder itself draws *from* the reservation: always
+    # succeeds, and retires the promise atomically with the grant
+    for want in (2, 1, 0):
+        a.alloc(from_reservation=True)
+        assert a.n_reserved == want
+    assert a.n_free == 0
+
+
+def test_alloc_n_from_reservation():
+    a = BlockAllocator(6, BLOCK)
+    a.reserve(4)
+    with pytest.raises(MemoryError):
+        a.alloc_n(2)                        # 1 unreserved-free only
+    ids = a.alloc_n(4, from_reservation=True)
+    assert len(ids) == 4 and a.n_reserved == 0
+
+
+def test_free_is_atomic():
+    """Regression (partial free): a ``free`` whose list fails validation
+    mid-way must leave the pool exactly as it was — before the fix the
+    blocks ahead of the bad entry were already freed when the ValueError
+    raised, leaving the pool half-mutated."""
+    a = BlockAllocator(6, BLOCK)
+    b1, b2, b3 = a.alloc_n(3)
+    with pytest.raises(ValueError):
+        a.free([b1, b2, 999, b3])           # 999 was never live
+    assert a.n_live == 3                    # b1/b2 NOT freed by the reject
+    with pytest.raises(ValueError):
+        a.free([b1, b1])                    # one reference, listed twice
+    assert a.n_live == 3
+    a.free([b1, b2, b3])                    # the valid list still works
+    assert a.n_live == 0 and a.n_free == a.capacity
+
+
 # ---------------------------------------------------------------------------
-# Stateful allocator property: random alloc/grow/free/reserve sequences
-# must conserve blocks, never double-hand-out or double-free, keep owner
-# accounting exact, and leave the pool fully free at teardown.  The
-# hypothesis RuleBasedStateMachine explores+shrinks sequences in CI; the
-# seeded random walk keeps the same coverage when hypothesis is absent.
+# Prefix index: chain keys, refcounted sharing, cached LRU.
+# ---------------------------------------------------------------------------
+
+def test_prefix_chain_keys_exact():
+    ks = prefix_chain_keys([1, 2, 3, 4, 5], 2)
+    assert len(ks) == 2                     # full spans only
+    assert ks[0] == (None, (1, 2))
+    assert ks[1] == ((None, (1, 2)), (3, 4))
+    # same span, different prefix -> different key (chained identity)
+    other = prefix_chain_keys([9, 9, 3, 4], 2)
+    assert other[1] != ks[1]
+    assert prefix_chain_keys([1], 2) == []
+
+
+def test_prefix_register_lookup_and_writer_scope():
+    a = BlockAllocator(8, BLOCK)
+    blk = a.alloc(owner="r0")
+    key = ("k", 0)
+    a.register(key, blk, owner="r0")
+    assert a.lookup(key, owner="r0") == blk
+    # entries are writer-scoped: another replica's device pool does not
+    # hold these bytes, so its lookup must miss
+    assert a.lookup(key, owner="r1") is None
+    assert a.lookup(("k", 1), owner="r0") is None
+    with pytest.raises(ValueError):
+        a.register(("k", 2), 999)           # never live
+
+
+def test_prefix_refcount_sharing():
+    a = BlockAllocator(8, BLOCK)
+    blk = a.alloc(owner="r0")
+    a.incref(blk, owner="r0")               # second request, same replica
+    assert a.refcount(blk) == 2
+    a.free([blk], owner="r0")
+    assert a.refcount(blk) == 1 and a.n_live == 1
+    a.free([blk], owner="r0")
+    assert a.refcount(blk) == 0 and a.n_free == a.capacity
+    with pytest.raises(ValueError):
+        a.incref(blk)                       # not live any more
+
+
+def test_cached_block_lifecycle():
+    """A registered block whose last reference drops parks in the cached
+    LRU: still indexed (hits revive it), still counted free, evicted
+    LRU-first only when the raw free list runs dry."""
+    a = BlockAllocator(5, BLOCK)            # capacity 4
+    b1 = a.alloc()
+    a.register(("k", 1), b1)
+    a.free([b1])
+    assert a.is_cached(b1) and a.n_cached == 1
+    assert a.n_free == a.capacity           # cached blocks stay allocatable
+    assert a.lookup(("k", 1)) == b1
+    a.take_cached(b1)                       # hit revives it
+    assert a.refcount(b1) == 1 and a.n_cached == 0
+    a.free([b1])                            # parks again
+    # eviction order: raw free list first, cached LRU-last
+    got = [a.alloc() for _ in range(3)]
+    assert b1 not in got
+    assert a.alloc() == b1                  # free list dry: evicts cached
+    assert a.lookup(("k", 1)) is None       # eviction dropped the entry
+
+
+def test_cached_lru_eviction_order():
+    a = BlockAllocator(5, BLOCK)
+    b1, b2 = a.alloc(), a.alloc()
+    a.register(("k", 1), b1)
+    a.register(("k", 2), b2)
+    a.free([b1])                            # older cached entry
+    a.free([b2])
+    a.alloc_n(2)                            # drain the raw free list
+    assert a.alloc() == b1                  # LRU-first eviction
+    assert a.lookup(("k", 1)) is None
+    assert a.lookup(("k", 2)) == b2         # newer entry survives
+
+
+def test_register_supersede_last_writer_wins():
+    a = BlockAllocator(8, BLOCK)
+    b1, b2 = a.alloc(), a.alloc()
+    key = ("k", 0)
+    a.register(key, b1)
+    a.free([b1])                            # b1 parks cached under key
+    a.register(key, b2)                     # a fresh writer supersedes
+    assert a.lookup(key) == b2
+    assert not a.is_cached(b1)              # superseded cached copy is
+    assert a.n_cached == 0                  # a plain free block again
+    a.check_integrity()
+
+
+def test_take_cached_gating_and_flush():
+    a = BlockAllocator(4, BLOCK)            # capacity 3
+    b1 = a.alloc()
+    a.register(("k", 1), b1)
+    a.free([b1])
+    a.reserve(3)                            # everything promised away
+    with pytest.raises(MemoryError):
+        a.take_cached(b1)                   # revival spends n_avail
+    a.take_cached(b1, from_reservation=True)
+    assert a.refcount(b1) == 1 and a.n_reserved == 2
+    a.unreserve(2)
+    a.free([b1])
+    assert a.n_cached == 1
+    assert a.flush_index() == 1             # index torn down: cached
+    assert a.n_cached == 0                  # blocks rejoin the free list
+    assert a.n_free == a.capacity
+    a.check_integrity()
+
+
+def test_flush_index_per_owner():
+    a = BlockAllocator(8, BLOCK)
+    b1 = a.alloc(owner="r0")
+    b2 = a.alloc(owner="r1")
+    a.register(("k", 1), b1, owner="r0")
+    a.register(("k", 2), b2, owner="r1")
+    assert a.flush_index("r0") == 1
+    assert a.lookup(("k", 1), owner="r0") is None
+    assert a.lookup(("k", 2), owner="r1") == b2
+    a.free([b1], owner="r0")
+    a.free([b2], owner="r1")
+
+
+# ---------------------------------------------------------------------------
+# Stateful allocator property: random alloc/grow/free/reserve/share/
+# register sequences must conserve blocks, never double-hand-out or
+# double-free, keep owner and refcount accounting exact (sum(refs) >=
+# n_live; a non-holder cannot free), keep cached blocks allocatable, and
+# drain the pool fully free at teardown.  The hypothesis
+# RuleBasedStateMachine explores+shrinks sequences in CI; the seeded
+# random walk keeps the same coverage when hypothesis is absent.
 # ---------------------------------------------------------------------------
 
 _MACHINE_BLOCKS = 9          # 8 allocatable + null
+_OWNERS = ["r0", "r1"]
 
 
 class AllocatorMachine(RuleBasedStateMachine):
     def __init__(self):
         super().__init__()
         self.a = BlockAllocator(_MACHINE_BLOCKS, BLOCK)
-        self.held: dict = {"r0": [], "r1": []}    # model: owner -> ids
+        # model: owner -> list of held references (a shared block appears
+        # once per reference, possibly under both owners)
+        self.held: dict = {o: [] for o in _OWNERS}
         self.reserved = 0
+        self.next_key = 0
 
-    @rule(owner=st.sampled_from(["r0", "r1"]))
+    def _distinct_held(self):
+        return {b for ids in self.held.values() for b in ids}
+
+    @rule(owner=st.sampled_from(_OWNERS))
     def alloc_one(self, owner):
-        if self.a.n_free:
+        if self.a.n_avail:
             blk = self.a.alloc(owner)
             assert blk != 0, "null block handed out"
-            assert all(blk not in ids for ids in self.held.values()), \
+            assert blk not in self._distinct_held(), \
                 f"block {blk} handed out twice"
             self.held[owner].append(blk)
         else:
+            # raw free blocks may remain, but they are spoken for:
+            # an unreserved allocation must not eat them
             with pytest.raises(MemoryError):
                 self.a.alloc(owner)
 
-    @rule(n=st.integers(0, 4), owner=st.sampled_from(["r0", "r1"]))
+    @rule(owner=st.sampled_from(_OWNERS))
+    def alloc_from_reservation(self, owner):
+        if self.reserved:
+            blk = self.a.alloc(owner, from_reservation=True)
+            assert blk not in self._distinct_held()
+            self.held[owner].append(blk)
+            self.reserved -= 1          # the grant retired one promise
+
+    @rule(n=st.integers(0, 4), owner=st.sampled_from(_OWNERS))
     def alloc_many(self, n, owner):
         free_before = self.a.n_free
-        if n <= free_before:
+        if n <= self.a.n_avail:
             ids = self.a.alloc_n(n, owner)
             assert len(set(ids)) == n and 0 not in ids
             self.held[owner].extend(ids)
@@ -177,20 +372,69 @@ class AllocatorMachine(RuleBasedStateMachine):
                 self.a.alloc_n(n, owner)
             assert self.a.n_free == free_before    # all-or-nothing
 
-    @rule(k=st.integers(0, 3), owner=st.sampled_from(["r0", "r1"]))
+    @rule(k=st.integers(0, 3), owner=st.sampled_from(_OWNERS))
     def free_some(self, k, owner):
         ids, keep = self.held[owner][:k], self.held[owner][k:]
-        self.a.free(ids)
+        self.a.free(ids, owner)
         self.held[owner] = keep
+
+    @rule(i=st.integers(0, 7), owner=st.sampled_from(_OWNERS))
+    def incref_shared(self, i, owner):
+        """A prefix hit on a live block: any owner may add a reference."""
+        live = sorted(self._distinct_held())
+        if live:
+            blk = live[i % len(live)]
+            self.a.incref(blk, owner)
+            self.held[owner].append(blk)
+
+    @rule(i=st.integers(0, 7), owner=st.sampled_from(_OWNERS))
+    def register_one(self, i, owner):
+        """Publish a held block under a fresh chain key (the prefix index
+        itself is exercised by the unit tests; here it matters because a
+        registered block parks in the cached LRU instead of the free list
+        when its last reference drops — conservation must hold anyway)."""
+        ids = self.held[owner]
+        if ids:
+            self.a.register(("k", self.next_key), ids[i % len(ids)], owner)
+            self.next_key += 1
+
+    @rule(i=st.integers(0, 7), owner=st.sampled_from(_OWNERS))
+    def revive_cached(self, i, owner):
+        """A prefix hit on a cached (refcount-0) block revives it; the
+        revival spends an allocatable block so it gates like alloc."""
+        cached = sorted(b for b in range(1, _MACHINE_BLOCKS)
+                        if self.a.is_cached(b))
+        if not cached:
+            return
+        blk = cached[i % len(cached)]
+        if self.a.n_avail:
+            self.a.take_cached(blk, owner)
+            self.held[owner].append(blk)
+        else:
+            with pytest.raises(MemoryError):
+                self.a.take_cached(blk, owner)
 
     @rule()
     def double_free_rejected(self):
         ids = self.held["r0"]
         if ids:
             blk = ids.pop()
-            self.a.free([blk])
+            before = self.a.refcount(blk)
+            self.a.free([blk], "r0")
+            if blk not in self._distinct_held() and before == 1:
+                with pytest.raises(ValueError):
+                    self.a.free([blk], "r0")
+
+    @rule()
+    def non_holder_free_rejected(self):
+        """Only an owner holding a reference may drop one — and the
+        rejected call must not mutate the pool (atomicity)."""
+        only_r0 = [b for b in self.held["r0"] if b not in self.held["r1"]]
+        if only_r0:
+            live_before = self.a.n_live
             with pytest.raises(ValueError):
-                self.a.free([blk])
+                self.a.free([only_r0[0]], "r1")
+            assert self.a.n_live == live_before
 
     @rule(n=st.integers(0, 4))
     def reserve_some(self, n):
@@ -210,24 +454,34 @@ class AllocatorMachine(RuleBasedStateMachine):
             with pytest.raises(ValueError):
                 self.a.unreserve(n)
 
+    @rule()
+    def flush_some_index(self):
+        self.a.flush_index("r1")        # live refs unaffected by design
+
     @invariant()
     def conservation(self):
-        held = sum(len(ids) for ids in self.held.values())
-        assert self.a.n_live == held
+        distinct = self._distinct_held()
+        refs = sum(len(ids) for ids in self.held.values())
+        assert self.a.n_live == len(distinct)
+        assert refs >= self.a.n_live            # sum(refs) >= n_live
         assert self.a.n_free + self.a.n_live == self.a.capacity
+        assert self.a.n_cached <= self.a.n_free
         assert self.a.n_reserved == self.reserved
         assert self.a.n_avail == self.a.n_free - self.reserved
         by_owner = {o: len(ids) for o, ids in self.held.items() if ids}
         assert self.a.live_by_owner() == by_owner
         stats = self.a.stats()
         assert stats.peak_live >= self.a.n_live
+        self.a.check_integrity()
 
     def teardown(self):
-        for ids in self.held.values():
-            self.a.free(ids)
+        for owner, ids in self.held.items():
+            self.a.free(ids, owner)
         self.a.unreserve(self.reserved)
+        self.a.flush_index()
         assert self.a.n_live == 0 and self.a.n_reserved == 0
         assert self.a.n_free == self.a.capacity
+        assert self.a.n_cached == 0
 
 
 def test_allocator_state_machine():
@@ -242,15 +496,20 @@ def test_allocator_random_walk(seed):
     missing: drive the same rule set from a numpy PRNG."""
     rng = np.random.default_rng(seed)
     m = AllocatorMachine()
-    rules = [lambda: m.alloc_one(["r0", "r1"][rng.integers(2)]),
-             lambda: m.alloc_many(int(rng.integers(0, 5)),
-                                  ["r0", "r1"][rng.integers(2)]),
-             lambda: m.free_some(int(rng.integers(0, 4)),
-                                 ["r0", "r1"][rng.integers(2)]),
+    own = lambda: _OWNERS[rng.integers(2)]          # noqa: E731
+    rules = [lambda: m.alloc_one(own()),
+             lambda: m.alloc_from_reservation(own()),
+             lambda: m.alloc_many(int(rng.integers(0, 5)), own()),
+             lambda: m.free_some(int(rng.integers(0, 4)), own()),
+             lambda: m.incref_shared(int(rng.integers(0, 8)), own()),
+             lambda: m.register_one(int(rng.integers(0, 8)), own()),
+             lambda: m.revive_cached(int(rng.integers(0, 8)), own()),
              lambda: m.double_free_rejected(),
+             lambda: m.non_holder_free_rejected(),
              lambda: m.reserve_some(int(rng.integers(0, 5))),
-             lambda: m.unreserve_some(int(rng.integers(0, 5)))]
-    for _ in range(300):
+             lambda: m.unreserve_some(int(rng.integers(0, 5))),
+             lambda: m.flush_some_index()]
+    for _ in range(400):
         rules[rng.integers(len(rules))]()
         m.conservation()
     m.teardown()
@@ -375,6 +634,127 @@ def test_paged_requires_capable_family():
     with pytest.raises(ValueError, match="paged"):
         ServeEngine(model, params, max_batch=2, cache_len=32,
                     kv_layout="paged")
+
+
+# ---------------------------------------------------------------------------
+# Prefix cache: engine-level hit/COW/identity semantics.
+# ---------------------------------------------------------------------------
+
+_SHARED = list(range(1, 17))        # two full blocks at block_size=8
+
+
+def _prefix_engines(model_and_params, **kw):
+    cold = _engine(model_and_params, max_batch=2, kv_layout="paged",
+                   block_size=8, **kw)
+    warm = _engine(model_and_params, max_batch=2, kv_layout="paged",
+                   block_size=8, prefix_cache=True, **kw)
+    return cold, warm
+
+
+def _assert_drained(a):
+    a.check_integrity()
+    assert a.n_live == 0 and a.n_reserved == 0
+    assert a.n_free == a.capacity
+
+
+def test_prefix_cache_hits_and_identity(model_and_params):
+    """Shared-prefix admissions hit the index, skip prefill chunks, and
+    emit tokens byte-identical to the cold path; the pool drains clean
+    with the reused blocks parked in the cached LRU."""
+    reqs = [Request(_SHARED + [20 + i], 6, rid=i) for i in range(3)]
+    cold, warm = _prefix_engines(model_and_params)
+    ref = cold.generate(reqs)
+    got = warm.generate(reqs)
+    for d, p in zip(ref, got):
+        assert d.tokens == p.tokens, d.rid
+    s = warm.last_stats
+    assert s.prefix_hits > 0
+    assert s.prefix_tokens_reused == s.prefix_hits * 8
+    _assert_drained(warm.allocator)
+    assert warm.allocator.n_cached > 0
+
+
+def test_prefix_cache_survives_sessions(model_and_params):
+    """Cached blocks (and their device-side bytes) outlive the session:
+    a second ``generate`` hits the prefixes the first one registered."""
+    cold, warm = _prefix_engines(model_and_params)
+    warm.generate([Request(_SHARED + [40], 4, rid=0)])
+    first_hits = warm.last_stats.prefix_hits
+    got = warm.generate([Request(_SHARED + [41], 4, rid=1)])
+    assert warm.last_stats.prefix_hits == 2     # both full blocks hit
+    ref = cold.generate([Request(_SHARED + [41], 4, rid=1)])
+    assert got[0].tokens == ref[0].tokens
+    assert first_hits == 0                      # nothing resident at first
+    _assert_drained(warm.allocator)
+
+
+def test_prefix_cache_full_boundary_cow(model_and_params):
+    """A prompt fully covered by hits re-runs only its final chunk (the
+    first token needs its logits) behind a copy-on-write of the shared
+    block — tokens still match the cold path, for a sole survivor and
+    for two concurrent sharers of the same blocks."""
+    cold, warm = _prefix_engines(model_and_params)
+    warm.generate([Request(_SHARED + [40], 4, rid=0)])      # seed the index
+    for reqs in ([Request(_SHARED, 5, rid=1)],
+                 [Request(_SHARED, 5, rid=2),
+                  Request(_SHARED, 5, rid=3)]):
+        got = warm.generate(reqs)
+        ref = cold.generate(reqs)
+        for d, p in zip(ref, got):
+            assert d.tokens == p.tokens, d.rid
+        assert warm.last_stats.prefix_hits >= 2
+        _assert_drained(warm.allocator)
+
+
+def test_prefix_cache_overcommit_admission(model_and_params):
+    """prefix_cache composes with overcommit admission (no reservations:
+    hits and revivals spend n_avail directly)."""
+    reqs = [Request(_SHARED + [50 + i], 5, rid=i) for i in range(4)]
+    cold = _engine(model_and_params, max_batch=2, kv_layout="paged",
+                   block_size=8).generate(reqs)
+    warm = _engine(model_and_params, max_batch=2, kv_layout="paged",
+                   block_size=8, prefix_cache=True, admission="overcommit")
+    got = warm.generate(reqs)
+    for d, p in zip(cold, got):
+        assert d.tokens == p.tokens, d.rid
+    assert warm.last_stats.prefix_hits > 0
+    _assert_drained(warm.allocator)
+
+
+def test_prefix_cache_abort_flushes_index(model_and_params):
+    """``session_abort`` must leave the pool clean *and* drop this
+    engine's index entries — an aborted session's device pool is torn
+    down, so the registered bytes no longer exist to be hit."""
+    _, warm = _prefix_engines(model_and_params)
+    warm.generate([Request(_SHARED + [40], 4, rid=0)])
+    assert warm.allocator.n_cached > 0          # prefixes are resident
+    warm.begin_session()
+    warm.session_admit(Request(_SHARED + [41], 4, rid=1), tag=0)
+    warm.session_abort()
+    assert warm.allocator.n_cached == 0         # abort flushed the index
+    _assert_drained(warm.allocator)
+    # the engine is not wedged: a fresh generate recomputes cold and
+    # re-registers (no hits the first time around)
+    got = warm.generate([Request(_SHARED + [42], 4, rid=2)])
+    assert len(got[0].tokens) == 4
+    assert warm.last_stats.prefix_hits == 0
+    _assert_drained(warm.allocator)
+
+
+def test_prefix_cache_requires_paged(model_and_params):
+    _, model, params = model_and_params
+    with pytest.raises(ValueError, match="prefix_cache"):
+        ServeEngine(model, params, max_batch=2, cache_len=CACHE_LEN,
+                    prefix_cache=True)
+
+
+def test_prefix_cache_rejects_vlm():
+    cfg = smoke_config("phi-3-vision-4.2b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    with pytest.raises(ValueError, match="vlm"):
+        ServeEngine(model, params, max_batch=2, cache_len=CACHE_LEN,
+                    kv_layout="paged", block_size=16, prefix_cache=True)
 
 
 # ---------------------------------------------------------------------------

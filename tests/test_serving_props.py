@@ -95,21 +95,43 @@ def harness():
         # wanting 3 each — overcommit admission must preempt to serve it
         "cluster-2x2-pressure": cluster(replicas=2, total_slots=4,
                                         n_blocks=8),
+        # prefix cache on: shared-prefix traces admit by reference with
+        # refcounted blocks + COW; cache state *persists across traces*
+        # (cached blocks survive generate calls), so every subsequent
+        # trace also checks hit-vs-cold byte identity
+        "paged-prefix-cache": eng(max_batch=SLOTS, kv_layout="paged",
+                                  block_size=BLOCK, prefix_cache=True),
+        # ...and under a starved pool: preemption of requests *holding
+        # shared blocks* must only drop their references
+        "cluster-2x2-pressure-prefix": cluster(replicas=2, total_slots=4,
+                                               n_blocks=8,
+                                               prefix_cache=True),
     }
     return cfg, engines
 
 
 def _draw_trace(rng: np.random.Generator, vocab: int):
     """Random trace + base key seed from a numpy PRNG (the single-seed
-    entry point lets hypothesis and the fallback share one generator)."""
+    entry point lets hypothesis and the fallback share one generator).
+    Half the traces carry a shared prompt prefix (>= one full block, so
+    prefix-cache cells get real hits: block sharing, COW divergence, and
+    full-boundary coverage all fall out of the random tails)."""
     n = int(rng.integers(1, 7))
     uniform = bool(rng.integers(0, 2))
     fixed_len = int(rng.integers(1, MAX_PROMPT + 1))
+    shared = ([int(t) for t in
+               rng.integers(0, vocab, int(rng.integers(BLOCK, BLOCK + 2)))]
+              if rng.integers(0, 2) else [])
     reqs = []
     for i in range(n):
         plen = fixed_len if uniform else int(rng.integers(1, MAX_PROMPT + 1))
+        prompt = [int(t) for t in rng.integers(0, vocab, plen)]
+        if shared and rng.integers(0, 2):
+            # sharing requests carry the common prefix; a zero-length
+            # tail makes the prompt end exactly on the shared span
+            prompt = shared + prompt[:int(rng.integers(0, plen + 1))]
         reqs.append(Request(
-            prompt=[int(t) for t in rng.integers(0, vocab, plen)],
+            prompt=prompt,
             max_new_tokens=int(rng.integers(1, MAX_NEW + 1)),
             temperature=float(TEMPERATURES[rng.integers(len(TEMPERATURES))]),
             rid=i,
@@ -141,6 +163,10 @@ def _check_conformance(harness, seed: int):
                 f"{a.tokens} vs {b.tokens}")
         pool = getattr(eng, "pool", None) or getattr(eng, "allocator", None)
         if pool is not None:
+            # refcount-leak + conservation invariants: every reference
+            # dropped, every reservation returned, cached blocks still
+            # allocatable (n_free counts them), index consistent
+            pool.check_integrity()
             assert pool.n_live == 0, (name, seed)
             assert pool.n_reserved == 0, (name, seed)
             assert pool.n_free == pool.capacity, (name, seed)
@@ -253,6 +279,79 @@ def test_scan_family_conformance_fallback(scan_harness, family, seed):
     _check_scan_conformance(scan_harness, family, seed)
 
 
+# ---------------------------------------------------------------------------
+# MoE family: dense serving prefill now routes dropless (exact=True), so
+# paged==dense token identity holds and the family joins the matrix.
+# ---------------------------------------------------------------------------
+
+N_MOE_EXAMPLES = 12                    # CI (hypothesis)
+N_MOE_FALLBACK = 3                     # no-dep fallback
+
+
+@pytest.fixture(scope="module")
+def moe_harness():
+    cfg = smoke_config("granite-moe-1b-a400m")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    kw = dict(cache_len=CACHE_LEN)
+    engines = {
+        "dense-continuous": ServeEngine(model, params, max_batch=SLOTS,
+                                        mode="continuous", **kw),
+        "paged-continuous": ServeEngine(model, params, max_batch=SLOTS,
+                                        kv_layout="paged", block_size=BLOCK,
+                                        **kw),
+        "paged-prefix-cache": ServeEngine(model, params, max_batch=SLOTS,
+                                          kv_layout="paged",
+                                          block_size=BLOCK,
+                                          prefix_cache=True, **kw),
+        "cluster-2x1": ClusterEngine(model, params, replicas=2,
+                                     total_slots=2, block_size=BLOCK, **kw),
+    }
+    return cfg, engines
+
+
+def _check_moe_conformance(moe_harness, seed: int):
+    cfg, engines = moe_harness
+    rng = np.random.default_rng(seed)
+    reqs, key_seed = _draw_trace(rng, cfg.vocab_size)
+    key = jax.random.key(key_seed)
+    ref = engines["dense-continuous"].generate(reqs, key=key)
+    assert [len(r.tokens) for r in ref] == [q.max_new_tokens for q in reqs]
+    for name, eng in engines.items():
+        if name == "dense-continuous":
+            continue
+        got = eng.generate(reqs, key=key)
+        for a, b in zip(ref, got):
+            assert a.tokens == b.tokens, (
+                f"moe/{name} diverged on rid={a.rid} (seed {seed}): "
+                f"{a.tokens} vs {b.tokens}")
+        pool = getattr(eng, "pool", None) or getattr(eng, "allocator", None)
+        if pool is not None:
+            pool.check_integrity()
+            assert pool.n_live == 0 and pool.n_reserved == 0, (name, seed)
+
+
+@pytest.mark.skipif(not HAS_HYPOTHESIS,
+                    reason="hypothesis drives the full example budget; "
+                           "the seeded fallback below covers the no-dep "
+                           "environment")
+@settings(max_examples=N_MOE_EXAMPLES, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_moe_family_conformance_random_traces(moe_harness, seed):
+    """moe x {dense, paged, paged+prefix-cache, cluster}: byte-identical
+    tokens per trace — the caveat that excluded the family (capacity-
+    factor routing in the dense prefill vs dropless chunks in the paged
+    one) is closed by routing the dense serving prefill dropless too."""
+    _check_moe_conformance(moe_harness, seed)
+
+
+@pytest.mark.skipif(HAS_HYPOTHESIS,
+                    reason="hypothesis variant runs the full budget")
+@pytest.mark.parametrize("seed", range(N_MOE_FALLBACK))
+def test_moe_family_conformance_fallback(moe_harness, seed):
+    _check_moe_conformance(moe_harness, seed)
+
+
 def test_pressure_cluster_actually_preempts(harness):
     """The starved-pool cell must really exercise the preemption path —
     otherwise the matrix silently stops covering requeue/resume.  A
@@ -274,6 +373,31 @@ def test_pressure_cluster_actually_preempts(harness):
     for a, b in zip(ref, got):
         assert a.tokens == b.tokens, a.rid
     assert cl.pool.n_live == 0 and cl.pool.n_reserved == 0
+
+
+def test_pressure_prefix_cluster_preempts_shared_holders(harness):
+    """Preemption of requests *holding shared blocks*: every request
+    carries the same full-block prefix through the starved pool with the
+    prefix cache on, so victims are (with overwhelming likelihood) among
+    the sharers — their eviction may only drop references, never free a
+    block a survivor still reads.  Tokens must match the uncontended
+    dense reference byte for byte, and the pool must drain clean."""
+    cfg, engines = harness
+    shared = list(range(2, 2 + BLOCK))
+    reqs = [Request(shared + list(range(40 + 4 * i, 44 + 4 * i)), MAX_NEW,
+                    temperature=(0.9 if i % 2 else 0.0), rid=i)
+            for i in range(6)]
+    key = jax.random.key(23)
+    ref = engines["dense-continuous"].generate(reqs, key=key)
+    cl = engines["cluster-2x2-pressure-prefix"]
+    got = cl.generate(reqs, key=key)
+    assert cl.last_stats.preempted >= 1
+    assert cl.last_stats.prefix_hits >= 1
+    for a, b in zip(ref, got):
+        assert a.tokens == b.tokens, a.rid
+    cl.pool.check_integrity()
+    assert cl.pool.n_live == 0 and cl.pool.n_reserved == 0
+    assert cl.pool.n_free == cl.pool.capacity
 
 
 def test_paged_single_compile_across_trace_shapes(harness):
