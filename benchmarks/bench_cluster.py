@@ -34,6 +34,19 @@ Emits ``name,us_per_call,derived`` CSV rows like the other benches:
   cluster_{1x8,2x4,4x2},<wall_us>,tok/s=...;occ=...;preempted=...
   cluster_speedup,,best_small/1x8=...
   cluster_pressure_{reserve,preempt},<wall_us>,tok/s=...;preempted=...
+  serving_latency_cluster,,ttft_ms_p50=...;...;tpot_ms_p50=...
+  serving_latency_cluster_pressure,,ttft_ms_p50=...;...
+  cluster_trace,,events=...;flows=...;lifecycle=ok
+
+The latency rows come off the cluster's *merged* per-replica metric
+registries (raw histogram samples concatenated before the percentile is
+taken — a mean of replica means cannot produce a cluster p99; see
+docs/observability.md).  The pressure run serves with a live
+:class:`Tracer` attached: its tokens are checked against the untraced
+reserve reference (tracing must not perturb scheduling), the event
+stream must be lifecycle-well-formed with at least one preempt→requeue
+flow, and ``--trace PATH`` exports it as Chrome-trace JSON (validated
+in CI by ``tools/check_trace.py``).
 
 ``--smoke`` shrinks to the smoke model for the CI gate: it asserts
 token identity and the preemption count but not the throughput ordering
@@ -107,7 +120,15 @@ def _stats_line(s):
             f"pool_util_peak={s.block_util_peak:.2f}")
 
 
-def run(smoke: bool = False, json_path: str | None = None):
+def _latency_line(s, n: int):
+    return (f"ttft_ms_p50={s.ttft_ms_p50:.1f};p90={s.ttft_ms_p90:.1f};"
+            f"p99={s.ttft_ms_p99:.1f};tpot_ms_p50={s.tpot_ms_p50:.2f};"
+            f"p99={s.tpot_ms_p99:.2f};"
+            f"queue_age_ms_p99={s.queue_age_ms_p99:.1f};n={n}")
+
+
+def run(smoke: bool = False, json_path: str | None = None,
+        trace_path: str | None = None):
     from benchmarks.common import reset_rows
     from repro.models import build_model
     from repro.serving import ClusterEngine, ServeEngine
@@ -145,6 +166,10 @@ def run(smoke: bool = False, json_path: str | None = None):
         s = cl.last_stats
         toks_per_s[shape] = s.tokens_per_s
         emit(f"cluster_{shape}", s.wall_s * 1e6, _stats_line(s))
+        if replicas == 2:
+            # cluster percentiles from the merged replica histograms
+            emit("serving_latency_cluster", "",
+                 _latency_line(s, N_SHORT_REQS))
 
     base = toks_per_s["1x8"]
     best = max((v, k) for k, v in toks_per_s.items() if k != "1x8")
@@ -177,14 +202,34 @@ def run(smoke: bool = False, json_path: str | None = None):
                        router="round_robin", admission="overcommit",
                        bucket="pow2", **pool_kw)
     _warmup(cl, vocab, TOTAL_SLOTS)
+    # serve the pressure run with a live tracer attached (after warmup,
+    # so the trace holds only the timed run): its tokens are checked
+    # against the *untraced* reserve reference below, which is the
+    # observer-effect gate for the cluster path
+    from repro.serving import NULL_TRACER, Tracer, validate_lifecycle
+    tracer = Tracer()
+    cl.set_tracer(tracer)
     pgot = [r.tokens for r in cl.generate(preqs)]
+    cl.set_tracer(NULL_TRACER)
     s = cl.last_stats
     emit("cluster_pressure_preempt", s.wall_s * 1e6, _stats_line(s))
+    emit("serving_latency_cluster_pressure", "",
+         _latency_line(s, N_PRESSURE_REQS))
     check_tokens("bench_cluster/pressure", "reserve", pref, "preempt",
                  pgot, prids)
     assert s.preempted >= 1, (
         "pressure trace exercised no preemption (pool too large or "
         "admission not overcommitted?)")
+    events = tracer.events()
+    validate_lifecycle(events)
+    flows = sum(1 for e in events if e.ph == "s")
+    assert flows >= 1, "preemption fired but recorded no flow arrow"
+    emit("cluster_trace", "",
+         f"events={len(events)};flows={flows};lifecycle=ok")
+    if trace_path:
+        n = tracer.export(trace_path)
+        print(f"[bench] wrote {trace_path} ({n} trace events)",
+              file=sys.stderr)
     served = all(len(t) == r.max_new_tokens for t, r in zip(pgot, preqs))
     assert served, "cluster failed to serve the full pressure trace"
     assert cl.pool.n_live == 0 and cl.pool.n_reserved == 0, (
@@ -204,6 +249,7 @@ if __name__ == "__main__":
     import os
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-    from benchmarks.common import json_path_arg
+    from benchmarks.common import json_path_arg, path_arg
     print("name,us_per_call,derived")
-    run(smoke="--smoke" in sys.argv, json_path=json_path_arg(sys.argv))
+    run(smoke="--smoke" in sys.argv, json_path=json_path_arg(sys.argv),
+        trace_path=path_arg(sys.argv, "--trace"))

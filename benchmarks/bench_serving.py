@@ -56,10 +56,26 @@ Emits ``name,us_per_call,derived`` CSV rows like the other benches:
   serving_scan_ssm_lockstep,<wall_us>,tok/s=...;occ=...
   serving_scan_ssm_continuous,<wall_us>,tok/s=...;occ=...
   serving_scan_speedup,,continuous/lockstep=...
+  serving_latency_{continuous,paged},,ttft_ms_p50=...;...;tpot_ms_p50=...
+  serving_trace,<wall_us>,events=...;spans=...;lifecycle=ok;tokens=...
+  serving_nulltracer_overhead,,ns_per_guarded_call=...;bound=...
+
+The last three are the telemetry subsystem's gates (docs/observability.md):
+percentile latency rows come off the :class:`MetricsRegistry` every run
+now feeds, the trace row re-runs the paged trace with a live
+:class:`Tracer` attached and asserts tokens stay byte-identical (tracing
+must never perturb scheduling or sampling) and the event stream is
+lifecycle-well-formed, and the overhead row bounds the disabled-path
+cost of the default :class:`NullTracer`.
 
 ``--smoke`` shrinks the trace/model work for the CI CPU regression gate;
-``--json PATH`` additionally dumps every row for the CI artifact.
+``--json PATH`` additionally dumps every row for the CI artifact;
+``--trace PATH`` exports the traced re-run as Chrome-trace JSON
+(validated in CI by ``tools/check_trace.py``).
 """
+import sys
+import time
+
 import jax
 import jax.numpy as jnp
 
@@ -261,7 +277,66 @@ def _prefix_cache_report(smoke: bool):
          f"({n_reqs} reqs x {prefix_blocks * BLOCK}-token shared prefix)")
 
 
-def run(smoke: bool = False, json_path: str | None = None):
+def _telemetry_report(model, params, vocab, n_reqs, long_new, cache_len,
+                      n_blocks, base_tokens, trace_path):
+    """Traced re-run of the paged trace: tracing must not change tokens
+    (the zero-observer-effect contract), the recorded event stream must
+    be lifecycle-well-formed, and the default :class:`NullTracer` must
+    be cheap enough to leave step timing untouched
+    (docs/observability.md).  ``--trace PATH`` additionally exports the
+    Chrome-trace JSON for Perfetto / tools/check_trace.py."""
+    from repro.serving import (NULL_TRACER, Request, ServeEngine, Tracer,
+                               validate_lifecycle)
+
+    eng = ServeEngine(model, params, max_batch=MAX_BATCH,
+                      cache_len=cache_len, mode="continuous",
+                      kv_layout="paged", block_size=BLOCK,
+                      n_blocks=n_blocks)
+    eng.generate([Request(list(range(PROMPT_LEN)), 2, rid=-1)
+                  for _ in range(MAX_BATCH)])   # warmup compile
+    tracer = Tracer()
+    eng.set_tracer(tracer)
+    reqs = _trace(vocab, n_reqs, SHORT_NEW, long_new)
+    res = eng.generate(reqs)
+    eng.set_tracer(NULL_TRACER)
+    # observer-effect gate: the traced run's bytes must match the
+    # untraced paged run of the same trace exactly
+    check_tokens("bench_serving", "paged", base_tokens, "paged_traced",
+                 [r.tokens for r in res], [r.rid for r in reqs])
+    events = tracer.events()
+    validate_lifecycle(events)
+    spans = sum(1 for e in events if e.ph == "X")
+    s = eng.last_stats
+    emit("serving_trace", s.wall_s * 1e6,
+         f"events={len(events)};spans={spans};lifecycle=ok;"
+         f"tokens=identical({n_reqs})")
+    if trace_path:
+        n = tracer.export(trace_path)
+        print(f"[bench] wrote {trace_path} ({n} trace events)",
+              file=sys.stderr)
+
+    # NullTracer overhead: the hot-path guard (``if tracer.enabled:``) on
+    # the default tracer, per call.  A decode step takes O(10) of these;
+    # the bound is deliberately loose (CI CPU noise) — the point is
+    # catching an accidentally-instantiated recording tracer or an
+    # attribute-heavy guard, either of which blows it by orders of
+    # magnitude.
+    tr = NULL_TRACER
+    n_calls = 200_000
+    t0 = time.perf_counter()
+    for _ in range(n_calls):
+        if tr.enabled:
+            tr.instant("t", "x")
+    ns = (time.perf_counter() - t0) / n_calls * 1e9
+    bound = 2000.0
+    assert ns < bound, f"NullTracer guard costs {ns:.0f}ns/call"
+    emit("serving_nulltracer_overhead", "",
+         f"ns_per_guarded_call={ns:.1f};bound={bound:.0f}ns;"
+         f"calls={n_calls}")
+
+
+def run(smoke: bool = False, json_path: str | None = None,
+        trace_path: str | None = None):
     from benchmarks.common import reset_rows
     from repro.configs import smoke_config
     from repro.models import build_model
@@ -312,6 +387,15 @@ def run(smoke: bool = False, json_path: str | None = None):
     check_tokens("bench_serving", "continuous", tokens["continuous"],
                  "paged", tokens["paged"], [r.rid for r in reqs])
 
+    # percentile latency rows straight off the metrics registry each run
+    # feeds (EngineStats.from_registry); CI gates on their presence
+    for name in ("continuous", "paged"):
+        s = stats[name]
+        emit(f"serving_latency_{name}", "",
+             f"ttft_ms_p50={s.ttft_ms_p50:.1f};p90={s.ttft_ms_p90:.1f};"
+             f"p99={s.ttft_ms_p99:.1f};tpot_ms_p50={s.tpot_ms_p50:.2f};"
+             f"p99={s.tpot_ms_p99:.2f};n={n_reqs}")
+
     speedup = (stats["continuous"].tokens_per_s
                / max(stats["lockstep"].tokens_per_s, 1e-9))
     emit("serving_speedup", "",
@@ -343,6 +427,12 @@ def run(smoke: bool = False, json_path: str | None = None):
     # scan family (slot-addressable recurrent state): same scheduler
     # comparison, no KV strips involved
     _scan_family_report(smoke)
+
+    # telemetry gates: traced re-run (byte-identical tokens + well-formed
+    # lifecycle) and the NullTracer disabled-path overhead bound
+    _telemetry_report(model, params, cfg.vocab_size, n_reqs, long_new,
+                      cache_len, pool_positions // BLOCK + 1,
+                      tokens["paged"], trace_path)
     if json_path:
         write_json(json_path, bench="bench_serving", smoke=smoke)
     return speedup
@@ -350,9 +440,9 @@ def run(smoke: bool = False, json_path: str | None = None):
 
 if __name__ == "__main__":
     import os
-    import sys
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-    from benchmarks.common import json_path_arg
+    from benchmarks.common import json_path_arg, path_arg
     print("name,us_per_call,derived")
-    run(smoke="--smoke" in sys.argv, json_path=json_path_arg(sys.argv))
+    run(smoke="--smoke" in sys.argv, json_path=json_path_arg(sys.argv),
+        trace_path=path_arg(sys.argv, "--trace"))

@@ -72,15 +72,19 @@ def reset_rows() -> None:
     _ROWS.clear()
 
 
-def json_path_arg(argv) -> str | None:
-    """Pull the ``--json PATH`` value out of a bench's argv (None when the
+def path_arg(argv, flag: str) -> str | None:
+    """Pull a ``FLAG PATH`` value out of a bench's argv (None when the
     flag is absent; a missing value is a clear error, not an IndexError)."""
-    if "--json" not in argv:
+    if flag not in argv:
         return None
-    i = argv.index("--json")
+    i = argv.index(flag)
     if i + 1 >= len(argv) or argv[i + 1].startswith("--"):
-        sys.exit("--json needs a file path argument")
+        sys.exit(f"{flag} needs a file path argument")
     return argv[i + 1]
+
+
+def json_path_arg(argv) -> str | None:
+    return path_arg(argv, "--json")
 
 
 def write_json(path: str, **extra) -> None:

@@ -22,7 +22,8 @@ import jax
 
 from ..configs import get_config, list_archs, smoke_config
 from ..models import build_model
-from ..serving import ROUTER_POLICIES, ClusterEngine, Request, ServeEngine
+from ..serving import (ROUTER_POLICIES, ClusterEngine, Request, ServeEngine,
+                       Tracer)
 
 
 def main():
@@ -70,6 +71,14 @@ def main():
                     help="cluster anti-thrash guard: a preempted request "
                          "is not re-admitted for this many scheduler "
                          "rounds (--replicas > 1)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record request-lifecycle telemetry and write a "
+                         "Chrome-trace-event JSON (open at "
+                         "https://ui.perfetto.dev; see "
+                         "docs/observability.md)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the metrics-registry summary (p50/p90/p99 "
+                         "TTFT+TPOT, queue age, occupancy/pool timelines)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -91,6 +100,7 @@ def main():
         import jax.numpy as jnp
         extra = {"frames": jnp.zeros((len(args.prompts), 16, cfg.d_model),
                                      jnp.bfloat16)}
+    tracer = Tracer() if (args.trace or args.metrics) else None
     if args.replicas > 1:
         if args.mode != "auto" or args.kv_layout != "dense":
             ap.error("--replicas > 1 always serves continuous and "
@@ -105,7 +115,8 @@ def main():
                             n_blocks=args.n_blocks, bucket=bucket,
                             admission=args.admission or "overcommit",
                             preempt_hysteresis=args.hysteresis,
-                            prefix_cache=args.prefix_cache)
+                            prefix_cache=args.prefix_cache,
+                            tracer=tracer)
     else:
         eng = ServeEngine(model, params, max_batch=args.max_batch,
                           cache_len=args.cache_len, mode=args.mode,
@@ -114,7 +125,8 @@ def main():
                           block_size=args.block_size,
                           n_blocks=args.n_blocks, bucket=bucket,
                           admission=args.admission or "reserve",
-                          prefix_cache=args.prefix_cache)
+                          prefix_cache=args.prefix_cache,
+                          tracer=tracer)
     reqs = [Request([int(t) % cfg.vocab_size for t in p.split()],
                     args.max_new, args.temperature, rid=i)
             for i, p in enumerate(args.prompts)]
@@ -134,6 +146,21 @@ def main():
           f"generated={s.generated_tokens} steps={s.decode_steps} "
           f"occupancy={s.occupancy:.2f} ttft_mean={s.ttft_ms_mean:.1f}ms "
           f"prefill_compiles={s.prefill_compiles}{paged}{cluster}")
+    if args.metrics:
+        print(f"[metrics] ttft_ms p50={s.ttft_ms_p50:.1f} "
+              f"p90={s.ttft_ms_p90:.1f} p99={s.ttft_ms_p99:.1f} "
+              f"mean={s.ttft_ms_mean:.1f}")
+        print(f"[metrics] tpot_ms p50={s.tpot_ms_p50:.2f} "
+              f"p90={s.tpot_ms_p90:.2f} p99={s.tpot_ms_p99:.2f} "
+              f"mean={s.tpot_ms_mean:.2f}")
+        print(f"[metrics] queue_age_ms mean={s.queue_age_ms_mean:.1f} "
+              f"p99={s.queue_age_ms_p99:.1f}")
+        for name, val in sorted(eng.last_metrics.snapshot().items()):
+            print(f"[metrics] {name}={val}")
+    if args.trace:
+        n = tracer.export(args.trace)
+        print(f"[trace] wrote {n} events to {args.trace} "
+              "(open at https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

@@ -7,6 +7,11 @@
 * :class:`ClusterEngine` — N replicas behind a router; paged families
   share one :class:`BlockAllocator` pool with preemption under
   :class:`PoolPressure`, scan families run per-replica slot state.
+* telemetry — :class:`Tracer`/:class:`NullTracer` request-lifecycle
+  tracing (Chrome-trace/Perfetto export), the :class:`MetricsRegistry`
+  percentile metrics every :class:`EngineStats` is derived from, and
+  injectable clocks (:class:`FakeClock` for deterministic latency
+  tests).  See ``docs/observability.md``.
 
 Cross-cutting invariants (asserted in ``tests/test_serving_props.py``,
 ``tests/test_serving.py``, ``tests/test_cluster.py``): request-keyed
@@ -15,10 +20,15 @@ accounting conserves the pool exactly (refcounted prefix sharing
 included — ``sum(refs) >= n_live``, cached blocks stay allocatable);
 a prefix-cache hit serves bytes bit-identical to a cold prefill;
 preemption + requeue is invisible in the output; freed slots leak no
-state to later occupants.  The full scheduler matrix and knob reference
-live in ``docs/serving.md``.
+state to later occupants; recorded event streams are
+lifecycle-well-formed (:func:`validate_lifecycle`) and tracing never
+changes tokens.  The full scheduler matrix and knob reference live in
+``docs/serving.md``.
 """
 from .cluster import ROUTER_POLICIES, ClusterEngine
 from .engine import EngineStats, Request, Result, ServeEngine
 from .kvcache import (BlockAllocator, BlockPoolStats, PoolPressure,
                       blocks_needed, prefix_chain_keys)
+from .telemetry import (MONOTONIC, NULL_TRACER, FakeClock, MetricsRegistry,
+                        MonotonicClock, NullTracer, Tracer,
+                        validate_lifecycle)

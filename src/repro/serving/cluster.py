@@ -78,14 +78,13 @@ threaded through the replicas' jitted decode steps is an open item.
 from __future__ import annotations
 
 import collections
-import time
 
 import jax
-import numpy as np
 
 from ..models.model import Model
 from .engine import EngineStats, Request, Result, ServeEngine
 from .kvcache import BlockAllocator, PoolPressure, blocks_needed
+from .telemetry import MONOTONIC, NULL_TRACER, MetricsRegistry
 
 ROUTER_POLICIES = ("round_robin", "least_loaded", "shortest_queue")
 
@@ -123,8 +122,15 @@ class ClusterEngine:
     dense scan-family clusters).
 
     ``generate`` mirrors ``ServeEngine.generate``; ``last_stats`` is the
-    cluster-level aggregate (mode="cluster", ``router_policy`` set) and
+    cluster-level aggregate (mode="cluster", ``router_policy`` set,
+    percentiles from the *merged* replica histograms — exact cluster-wide
+    p50/p99 TTFT+TPOT, not an average of replica means) and
     ``replica_stats`` keeps the per-replica EngineStats.
+
+    tracer / clock / track: telemetry (``docs/observability.md``).  The
+    tracer cascades to every replica (track ``replica{i}``) and to the
+    shared pool; router decisions, victim picks, requeues, and
+    hysteresis waits land on the ``cluster`` track.
     """
 
     def __init__(self, model: Model, params, *, replicas: int = 2,
@@ -136,7 +142,8 @@ class ClusterEngine:
                  extra_inputs: dict | None = None,
                  admission: str = "overcommit",
                  preempt_hysteresis: int = 4,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 tracer=None, clock=None):
         if router not in ROUTER_POLICIES:
             raise ValueError(f"router={router!r}: pick one of "
                              f"{ROUTER_POLICIES}")
@@ -181,11 +188,32 @@ class ClusterEngine:
             ServeEngine(model, params, max_batch=total_slots // replicas,
                         cache_len=cache_len, extra_inputs=extra_inputs,
                         mode="continuous", bucket=bucket, owner=i,
-                        **layout_kw)
+                        track=f"replica{i}", **layout_kw)
             for i in range(replicas)]
         self.last_stats: EngineStats | None = None
         self.replica_stats: list[EngineStats] = []
+        self.last_metrics = MetricsRegistry()
         self._rr = 0
+        self.tracer = NULL_TRACER
+        self.clock = MONOTONIC
+        if tracer is not None:
+            self.set_tracer(tracer)
+        if clock is not None:
+            self.clock = clock
+            for e in self.engines:
+                e.clock = clock
+
+    def set_tracer(self, tracer) -> None:
+        """Attach (or detach, with None) a tracer, cascading it to every
+        replica and the shared pool; the cluster adopts an enabled
+        tracer's clock (like ``ServeEngine.set_tracer``)."""
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        if self.tracer.enabled:
+            self.clock = self.tracer.clock
+        for e in self.engines:
+            e.set_tracer(tracer)
+        if self.pool is not None:
+            self.pool.set_tracer(self.tracer)
 
     # ------------------------------------------------------------------
     # Routing.
@@ -258,7 +286,7 @@ class ClusterEngine:
         results = [Result(r.rid, list(r.done)) for r in requests]
         if not todo:
             self.replica_stats = []
-            self.last_stats = self._aggregate([], 0.0, 0, 0, 0)
+            self.last_stats = self._aggregate(0.0, [])
             return results
         for _, r in todo:
             self.engines[0].check_request(r)
@@ -268,34 +296,47 @@ class ClusterEngine:
         # by request id, so placement cannot change sampled outputs
         for e in self.engines:
             e.begin_session(key)
+        tr = self.tracer
+        t_start = self.clock.now()
+        # cluster-level metrics (merged with the replicas' at aggregate):
+        # scheduler-loop counters the engines cannot see
+        cm = MetricsRegistry()
         queue = collections.deque(
-            (seq, order, r, 0) for seq, (order, r) in enumerate(todo))
+            (seq, order, r, 0, t_start) for seq, (order, r)
+            in enumerate(todo))
         out: list[Result | None] = [None] * len(todo)
         admit_seq = 0
-        preempts = 0
         rounds = 0
-        t_start = time.perf_counter()
         try:
             while queue or any(e.session_active for e in self.engines):
                 # route: FIFO head into a replica with slot + pool headroom
                 while queue:
-                    seq, order, r, ready = queue[0]
+                    seq, order, r, ready, enq_t = queue[0]
                     if ready > rounds and any(e.session_active
                                               for e in self.engines):
                         # anti-thrash hysteresis: a fresh victim waits out
                         # its cool-down (head-of-line: nothing skips it);
                         # waived when the cluster is idle — no live request
                         # can be causing pressure then
+                        cm.counter("hysteresis_wait_rounds").inc()
+                        if tr.enabled:
+                            tr.instant("cluster", "hysteresis_wait",
+                                       rid=r.rid,
+                                       rounds_left=ready - rounds)
                         break
                     e = self._route(r)
                     if e is None:
                         break
                     queue.popleft()
+                    if tr.enabled:
+                        tr.instant("cluster", "route", rid=r.rid,
+                                   replica=e.owner, policy=self.router)
                     # paged admission always defers to session_step, but a
                     # dense (scan-family) admission runs the prefill here
                     # and can satisfy a 1-token budget on the spot
                     res = e.session_admit(r, tag=seq, extra_row=order,
-                                          admit_seq=admit_seq)
+                                          admit_seq=admit_seq,
+                                          enqueue_t=enq_t)
                     if res is not None:
                         out[seq] = res
                     admit_seq += 1
@@ -313,11 +354,21 @@ class ClusterEngine:
                                 raise   # nothing to evict: genuine OOM
                             ve, vi = victim
                             tag, r2 = ve.session_preempt(vi)
-                            preempts += 1
+                            if tr.enabled:
+                                tr.instant("cluster", "preempt_pick",
+                                           rid=r2.rid, replica=ve.owner,
+                                           slot=vi,
+                                           pressured=e.owner)
+                                tr.instant("cluster", "requeue",
+                                           rid=r2.rid,
+                                           ready_round=(
+                                               rounds
+                                               + self.preempt_hysteresis))
                             self._requeue(
                                 queue,
                                 (tag, todo[tag][0], r2,
-                                 rounds + self.preempt_hysteresis))
+                                 rounds + self.preempt_hysteresis,
+                                 self.clock.now()))
                     for tag, res in finished:
                         out[tag] = res
                     stepped = True
@@ -333,38 +384,34 @@ class ClusterEngine:
             for e in self.engines:
                 e.session_abort()
             raise
-        wall = time.perf_counter() - t_start
-        ttfts = [t for e in self.engines for t in e.session_ttfts()]
-        slot_steps = [e.session_slot_steps() for e in self.engines]
-        busy = sum(b for b, _ in slot_steps)
-        offered = sum(o for _, o in slot_steps)
+        wall = self.clock.now() - t_start
         self.replica_stats = [e.end_session() for e in self.engines]
-        self.last_stats = self._aggregate(ttfts, wall, preempts, busy,
-                                          offered)
+        self.last_stats = self._aggregate(
+            wall, [e.last_metrics for e in self.engines], cm)
         for (i, _), res in zip(todo, out):
             results[i] = res
         return results
 
-    def _aggregate(self, ttfts, wall: float, preempts: int, busy: int,
-                   offered: int) -> EngineStats:
-        """Cluster-level EngineStats over the per-replica stats.  busy /
-        offered: busy and launched slot-steps summed over replicas
-        (capacity-weighted occupancy counts only steps each replica
-        actually launched - a drained replica stops offering lanes)."""
+    def _aggregate(self, wall: float, registries,
+                   extra: MetricsRegistry | None = None) -> EngineStats:
+        """Cluster-level EngineStats: *merge* the replicas' metric
+        registries (counters add; busy/offered slot-steps give the
+        capacity-weighted occupancy — a drained replica stops offering
+        lanes) and derive the view from the merged registry, so the
+        TTFT/TPOT percentiles are exact over the union of every
+        replica's raw samples rather than an average of replica means.
+        ``extra`` carries the cluster's own scheduler-loop counters."""
+        merged = MetricsRegistry()
+        for m in registries:
+            merged.merge(m)
+        if extra is not None:
+            merged.merge(extra)
+        self.last_metrics = merged
         reps = self.replica_stats
-        gen = sum(s.generated_tokens for s in reps)
-        steps = sum(s.decode_steps for s in reps)
-        return EngineStats(
-            "cluster", wall, gen, gen / max(wall, 1e-9), steps,
-            busy / max(offered, 1),
-            float(np.mean(ttfts)) if ttfts else 0.0,
+        return EngineStats.from_registry(
+            merged, mode="cluster", wall_s=wall,
             kv_layout=self.kv_layout,
             prefill_compiles=sum(s.prefill_compiles for s in reps),
             block_util_peak=(self.pool.stats().peak_utilization
                              if self.pool is not None else 0.0),
-            preempted=preempts,
-            requeued=sum(s.requeued for s in reps),
-            router_policy=self.router,
-            prefix_hits=sum(s.prefix_hits for s in reps),
-            prefix_tokens_reused=sum(s.prefix_tokens_reused
-                                     for s in reps))
+            router_policy=self.router)

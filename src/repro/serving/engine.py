@@ -127,7 +127,6 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import time
 from typing import Any
 
 import jax
@@ -137,6 +136,7 @@ import numpy as np
 from ..models.model import Model
 from . import kvcache
 from .kvcache import BlockAllocator, PoolPressure, blocks_needed
+from .telemetry import MONOTONIC, NULL_TRACER, MetricsRegistry
 
 
 @dataclasses.dataclass
@@ -191,7 +191,15 @@ class EngineStats:
     measure: the fixed-shape decode launch always computes ``max_batch``
     slot lanes, so occupancy is the fraction of launched lanes that held
     a live request — the serving twin of the paper's vector-lane
-    utilization under short workloads."""
+    utilization under short workloads.
+
+    Built as a *view over a* :class:`~repro.serving.telemetry.MetricsRegistry`
+    (``from_registry``): the registry holds the raw counters and
+    histogram samples, this dataclass snapshots the derived numbers.
+    The mean fields predate the registry and are kept for compatibility;
+    the ``*_p50/p90/p99`` fields are exact nearest-rank percentiles over
+    the raw samples, so cluster stats can merge replica histograms
+    instead of averaging replica means."""
     mode: str                      # resolved scheduler ("cluster" at top)
     wall_s: float
     generated_tokens: int
@@ -207,6 +215,49 @@ class EngineStats:
     router_policy: str = ""        # cluster-level: routing policy used
     prefix_hits: int = 0           # prompt blocks admitted by reference
     prefix_tokens_reused: int = 0  # prefill positions skipped via hits
+    ttft_ms_p50: float = 0.0       # time-to-first-token percentiles
+    ttft_ms_p90: float = 0.0
+    ttft_ms_p99: float = 0.0
+    tpot_ms_mean: float = 0.0      # time-per-output-token (per request)
+    tpot_ms_p50: float = 0.0
+    tpot_ms_p90: float = 0.0
+    tpot_ms_p99: float = 0.0
+    queue_age_ms_mean: float = 0.0  # enqueue -> admission wait
+    queue_age_ms_p99: float = 0.0
+
+    @classmethod
+    def from_registry(cls, m: MetricsRegistry, *, mode: str, wall_s: float,
+                      kv_layout: str = "dense", prefill_compiles: int = 0,
+                      block_util_peak: float = 0.0,
+                      router_policy: str = "") -> "EngineStats":
+        """Derive the stats view from a registry (one engine session's,
+        or several replicas' registries merged)."""
+        ttft = m.histogram("ttft_ms")
+        tpot = m.histogram("tpot_ms")
+        qage = m.histogram("queue_age_ms")
+        gen = m.counter("generated_tokens").n
+        steps = m.counter("decode_steps").n
+        busy = m.counter("busy_slot_steps").n
+        offered = m.counter("offered_slot_steps").n
+        return cls(
+            mode, wall_s, gen, gen / max(wall_s, 1e-9), steps,
+            busy / max(offered, 1), ttft.mean,
+            kv_layout=kv_layout, prefill_compiles=prefill_compiles,
+            block_util_peak=block_util_peak,
+            preempted=m.counter("preempted").n,
+            requeued=m.counter("requeued").n,
+            router_policy=router_policy,
+            prefix_hits=m.counter("prefix_hits").n,
+            prefix_tokens_reused=m.counter("prefix_tokens_reused").n,
+            ttft_ms_p50=ttft.percentile(50),
+            ttft_ms_p90=ttft.percentile(90),
+            ttft_ms_p99=ttft.percentile(99),
+            tpot_ms_mean=tpot.mean,
+            tpot_ms_p50=tpot.percentile(50),
+            tpot_ms_p90=tpot.percentile(90),
+            tpot_ms_p99=tpot.percentile(99),
+            queue_age_ms_mean=qage.mean,
+            queue_age_ms_p99=qage.percentile(99))
 
 
 @dataclasses.dataclass
@@ -230,29 +281,33 @@ class _Slot:
     # index (refcounted, read-only for this slot until copy-on-write)
     shared_until: int = 0
     extra_row: int = 0             # extra_inputs row (vlm patches)
-    admit_t: float = 0.0           # perf_counter at admission (TTFT base)
+    admit_t: float = 0.0           # clock time of the *first* admission
+    #                                (TTFT base, carried across preempts)
+    span_t0: float = 0.0           # clock time of *this* admission (the
+    #                                request span's start in the trace)
+    first_tok_t: float = 0.0       # clock time of this admission's first
+    #                                sampled token (decode-stretch start)
 
 
 @dataclasses.dataclass
 class _Session:
-    """Mutable state of one stepwise continuous-batching run."""
+    """Mutable state of one stepwise continuous-batching run.
+
+    All scalar accounting (decode/busy steps, generated tokens, preempt
+    and prefix counters) and every latency sample (TTFT, TPOT, queue
+    age) live in ``metrics`` — ``end_session`` derives
+    :class:`EngineStats` from it, and the cluster merges replica
+    registries for exact cross-replica percentiles."""
     key: Any                       # base PRNG key (rid/step-keyed streams)
     slots: list
     toks: np.ndarray               # (B, 1) next-token feed
     temps: np.ndarray              # (B,) per-slot temperature
     rids: np.ndarray               # (B,) per-slot request id
     tok_idx: np.ndarray            # (B,) next sample's stream index
-    ttfts: list
+    metrics: MetricsRegistry
     t_start: float
     cache: Any = None
-    decode_steps: int = 0
-    busy_steps: int = 0
-    gen_tokens: int = 0
-    preempted: int = 0
-    requeued: int = 0
     admit_counter: int = 0
-    prefix_hits: int = 0
-    prefix_reused: int = 0
     # Results finished during session_step's prefill phase, parked here so
     # they survive a PoolPressure raised later in the same step (the slot
     # is already released — a lost local would drop the Result for good);
@@ -321,6 +376,16 @@ class ServeEngine:
     referencing resident pool blocks (see the module doc); rejected for
     families whose prefill carries a non-token prefix (vlm patches:
     patch content is not addressable by token ids).
+    tracer / clock / track: telemetry (``repro.serving.telemetry``;
+    ``docs/observability.md``).  ``tracer`` defaults to the no-op
+    ``NULL_TRACER``; a real ``Tracer`` records request-lifecycle spans,
+    pool events, and per-step dispatch/device spans, host-side only (no
+    compiled function depends on it — ``set_tracer`` may attach one to
+    a warm engine).  ``clock`` injects the timebase every latency
+    number is computed from (defaults to the tracer's clock when a
+    tracer is given, else the process monotonic clock).  ``track``
+    names this engine's trace track (default ``engine{owner}``; the
+    cluster passes ``replica{i}``).
     """
 
     def __init__(self, model: Model, params, *, max_batch: int = 8,
@@ -331,7 +396,8 @@ class ServeEngine:
                  bucket: str | int | None = None,
                  allocator: BlockAllocator | None = None,
                  admission: str = "reserve", owner: Any = 0,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 tracer=None, clock=None, track: str | None = None):
         assert mode in ("auto", "continuous", "lockstep"), mode
         assert kv_layout in ("dense", "paged"), kv_layout
         assert admission in ("reserve", "overcommit"), admission
@@ -342,6 +408,12 @@ class ServeEngine:
         self.extra = extra_inputs or {}
         self.bucket = bucket
         self.owner = owner
+        self.tracer = NULL_TRACER
+        self.clock = MONOTONIC
+        self.track = track if track is not None else f"engine{owner}"
+        # survives end_session so an outer aggregator (the cluster) can
+        # merge per-replica registries after sessions close
+        self.last_metrics = MetricsRegistry()
         slot_capable = model.cache_slot_write is not None
         if mode == "auto":
             mode = "continuous" if slot_capable else "lockstep"
@@ -441,6 +513,33 @@ class ServeEngine:
             self._slot_reset = (
                 jax.jit(model.cache_slot_reset, donate_argnums=(0,))
                 if model.cache_slot_reset is not None else None)
+        if tracer is not None:
+            self.set_tracer(tracer)
+        if clock is not None:
+            self.clock = clock
+
+    # ------------------------------------------------------------------
+    # Telemetry plumbing.
+    # ------------------------------------------------------------------
+
+    def set_tracer(self, tracer, track: str | None = None) -> None:
+        """Attach (or detach, with None) a tracer.  Host-side only — no
+        compiled function depends on it, so a warm engine keeps its
+        caches.  The engine adopts an enabled tracer's clock so spans
+        and instants share one timeline (assign ``self.clock`` after to
+        override); an owned pool's allocator follows the same tracer."""
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        if track is not None:
+            self.track = track
+        if self.tracer.enabled:
+            self.clock = self.tracer.clock
+        if self.kv_layout == "paged" and self._owns_pool:
+            self.allocator.set_tracer(self.tracer)
+
+    def _slot_track(self, i: int) -> str:
+        """Trace track of slot ``i`` (request spans nest per slot, so
+        concurrent slots never interleave spans on one track)."""
+        return f"{self.track}/slot{i}"
 
     # ------------------------------------------------------------------
     # Public API.
@@ -452,6 +551,7 @@ class ServeEngine:
         todo = [(i, r) for i, r in enumerate(requests)
                 if r.max_new_tokens - len(r.done) > 0]
         if not todo:
+            self.last_metrics = MetricsRegistry()
             self.last_stats = EngineStats(
                 self.mode, 0.0, 0, 0.0, 0, 0.0, 0.0,
                 kv_layout=self.kv_layout,
@@ -605,7 +705,7 @@ class ServeEngine:
             temps=np.zeros((bsz,), np.float32),
             rids=np.zeros((bsz,), np.int32),
             tok_idx=np.zeros((bsz,), np.int32),
-            ttfts=[], t_start=time.perf_counter())
+            metrics=MetricsRegistry(), t_start=self.clock.now())
 
     def _require_session(self) -> _Session:
         if self._sess is None:
@@ -639,13 +739,15 @@ class ServeEngine:
 
     def session_ttfts(self) -> list[float]:
         """First-admission TTFTs recorded so far (cluster aggregation)."""
-        return list(self._require_session().ttfts)
+        sess = self._require_session()
+        return list(sess.metrics.histogram("ttft_ms").samples)
 
     def session_slot_steps(self) -> tuple[int, int]:
         """(busy, offered) slot-steps of the open session - offered counts
         max_batch lanes per launched decode step (cluster occupancy)."""
-        sess = self._require_session()
-        return sess.busy_steps, self.max_batch * sess.decode_steps
+        m = self._require_session().metrics
+        return (m.counter("busy_slot_steps").n,
+                m.counter("offered_slot_steps").n)
 
     def session_can_admit(self, r: Request) -> bool:
         """Pool-side admission test (always true for the dense layout,
@@ -668,7 +770,8 @@ class ServeEngine:
         return self.allocator.n_avail >= self._admit_block_need(r)
 
     def session_admit(self, r: Request, tag: int, extra_row: int = 0,
-                      admit_seq: int | None = None) -> Result | None:
+                      admit_seq: int | None = None,
+                      enqueue_t: float | None = None) -> Result | None:
         """Admit ``r`` into the first free slot.
 
         dense: prefill runs here (prefill-on-admit) and the first token is
@@ -687,7 +790,8 @@ class ServeEngine:
         ``tag`` is echoed back with the Result from ``session_step``;
         ``extra_row`` indexes ``extra_inputs``; ``admit_seq`` orders
         admissions globally for victim selection (defaults to a per-engine
-        counter)."""
+        counter); ``enqueue_t`` is the clock time the request entered the
+        caller's queue (recorded as its queue-age sample)."""
         sess = self._require_session()
         slot = self.session_free_slot()
         if slot is None:
@@ -695,7 +799,10 @@ class ServeEngine:
         if admit_seq is None:
             admit_seq = sess.admit_counter
         sess.admit_counter = max(sess.admit_counter, admit_seq) + 1
-        t0 = time.perf_counter()
+        t0 = self.clock.now()
+        if enqueue_t is not None:
+            sess.metrics.histogram("queue_age_ms").observe(
+                (t0 - enqueue_t) * 1e3)
         if self.kv_layout == "paged":
             prefill_pos = (self._n_prefix() + len(r.prompt) + len(r.done))
             self._check_budget(prefill_pos,
@@ -746,20 +853,43 @@ class ServeEngine:
             # engine needs its logits) behind the COW barrier; partial
             # coverage resumes cold at the first miss
             chunks_done = h - 1 if boundary else h
-            sess.prefix_hits += h
-            sess.prefix_reused += chunks_done * self.block_size
+            sess.metrics.counter("prefix_hits").inc(h)
+            sess.metrics.counter("prefix_tokens_reused").inc(
+                chunks_done * self.block_size)
             if r.done or r.requeues:
-                sess.requeued += 1
+                sess.metrics.counter("requeued").inc()
+            tr = self.tracer
+            if tr.enabled:
+                st = self._slot_track(slot)
+                tr.instant(st, "admit", rid=r.rid, slot=slot,
+                           readmit=bool(r.done or r.requeues),
+                           prefix_hits=h,
+                           prefix_tokens=chunks_done * self.block_size)
+                if h:
+                    tr.instant("pool", "kv_ref", rid=r.rid, n=h)
+                if r.requeues:
+                    # close the flow arrow the eviction opened: the trace
+                    # draws preempt (victim slot) -> re-admission (here)
+                    tr.flow_end(st, "preempt_flow",
+                                f"preempt-{r.rid}-{r.requeues}")
             sess.slots[slot] = _Slot(
                 req=r, tag=tag, tokens=[], ttft_ms=0.0, admit_seq=admit_seq,
                 prefill_pos=prefill_pos, reserve_left=reserve_left,
                 blocks=taken, shared_until=h,
                 chunks_done=chunks_done, extra_row=extra_row,
                 admit_t=(r.first_admit_t if r.first_admit_t is not None
-                         else t0))
+                         else t0), span_t0=t0)
             sess.temps[slot] = r.temperature
             sess.rids[slot] = r.rid
             return None
+        tr = self.tracer
+        if tr.enabled:
+            tr.instant(self._slot_track(slot), "admit", rid=r.rid,
+                       slot=slot, readmit=bool(r.done or r.requeues),
+                       prefix_hits=0, prefix_tokens=0)
+            if r.requeues:
+                tr.flow_end(self._slot_track(slot), "preempt_flow",
+                            f"preempt-{r.rid}-{r.requeues}")
         prompt = np.asarray(list(r.prompt) + list(r.done), np.int32)
         plen = len(prompt)
         sb = self._bucket_len(plen)
@@ -790,18 +920,25 @@ class ServeEngine:
                            sess.key, jnp.asarray([r.rid], np.int32),
                            jnp.asarray([len(r.done)], np.int32))
         tok = int(np.asarray(jax.block_until_ready(tok))[0])
-        ttft_ms = (time.perf_counter() - t0) * 1e3
+        t1 = self.clock.now()
+        ttft_ms = (t1 - t0) * 1e3
+        if tr.enabled:
+            tr.complete(self._slot_track(slot), "prefill", t0, t1,
+                        rid=r.rid, tokens=plen)
         if r.done or r.requeues:
-            sess.requeued += 1
+            sess.metrics.counter("requeued").inc()
         if not r.done:
-            sess.ttfts.append(ttft_ms)
+            sess.metrics.histogram("ttft_ms").observe(ttft_ms)
         if r.first_ttft_ms is not None:
             ttft_ms = r.first_ttft_ms   # re-admission: keep the real TTFT
         s = _Slot(req=r, tag=tag, tokens=[tok], ttft_ms=ttft_ms,
-                  admit_seq=admit_seq, prefill_pos=prefill_pos, admit_t=t0)
+                  admit_seq=admit_seq, prefill_pos=prefill_pos, admit_t=t0,
+                  span_t0=t0, first_tok_t=t1)
         if len(r.done) + 1 >= r.max_new_tokens:
             res = self._finish(s)       # satisfied by prefill alone
             self._release(s, slot)
+            if tr.enabled:
+                self._trace_finish(s, slot, self.clock.now())
             return res
         sess.slots[slot] = s
         sess.toks[slot, 0] = tok
@@ -834,6 +971,8 @@ class ServeEngine:
                         sess.finished_pending.append((s.tag, res))
                         self._release(s, i)
                         sess.slots[i] = None
+                        if self.tracer.enabled:
+                            self._trace_finish(s, i, self.clock.now())
         active = [i for i in range(bsz) if sess.slots[i] is not None]
         if self.kv_layout == "paged":
             # lazy growth: each slot's next write position must have a
@@ -853,15 +992,32 @@ class ServeEngine:
         # slots compute too - their rows are masked by per-slot pos and
         # fully rewritten on the next admission; paged idle rows write
         # into the null block)
-        t0 = time.perf_counter()
+        tr = self.tracer
+        t0 = self.clock.now()
         logits, sess.cache = self._decode(self.params, sess.cache,
                                           jnp.asarray(sess.toks))
+        # the decode launch returns asynchronously: [t0, t_disp] is host
+        # dispatch (trace/lowering lookup + enqueue), the np.asarray
+        # below blocks until the device result lands, so [t_disp, t1]
+        # is device compute + sampling + transfer
+        t_disp = self.clock.now()
         nxt = np.asarray(self._sample(
             logits, jnp.asarray(sess.temps), sess.key,
             jnp.asarray(sess.rids), jnp.asarray(sess.tok_idx)))
-        dt = time.perf_counter() - t0
-        sess.decode_steps += 1
-        sess.busy_steps += len(active)
+        t1 = self.clock.now()
+        dt = t1 - t0
+        m = sess.metrics
+        m.counter("decode_steps").inc()
+        m.counter("busy_slot_steps").inc(len(active))
+        m.counter("offered_slot_steps").inc(bsz)
+        m.timeline("occupancy").record(t1, len(active) / bsz)
+        if self.kv_layout == "paged":
+            m.timeline("pool_util").record(
+                t1, self.allocator.n_live / max(self.allocator.capacity, 1))
+        if tr.enabled:
+            tr.complete(self.track, "step", t0, t1, active=len(active))
+            tr.complete(self.track, "dispatch", t0, t_disp)
+            tr.complete(self.track, "device", t_disp, t1)
         for i in active:
             s = sess.slots[i]
             s.tokens.append(int(nxt[i]))
@@ -873,6 +1029,8 @@ class ServeEngine:
                 finished.append((s.tag, self._finish(s)))
                 self._release(s, i)
                 sess.slots[i] = None   # freed: refilled on the next admit
+                if tr.enabled:
+                    self._trace_finish(s, i, t1)
         return finished
 
     def _grow_slot(self, sess: _Session, i: int, s: _Slot) -> None:
@@ -886,6 +1044,9 @@ class ServeEngine:
         blk = self._alloc_block(i, from_reservation=s.reserve_left > 0)
         if s.reserve_left:
             s.reserve_left -= 1
+        if self.tracer.enabled:
+            self.tracer.instant("pool", "kv_alloc", rid=s.req.rid, n=1,
+                                block=blk)
         sess.cache = self._bt_set(sess.cache, i, len(s.blocks), blk)
         s.blocks.append(blk)
 
@@ -896,6 +1057,9 @@ class ServeEngine:
                                         from_reservation=from_reservation)
         except MemoryError as e:
             if self._admission == "overcommit":
+                if self.tracer.enabled:
+                    self.tracer.instant("pool", "pool_pressure",
+                                        owner=self.owner, slot=i)
                 raise PoolPressure(self.owner, i) from e
             raise
 
@@ -918,6 +1082,9 @@ class ServeEngine:
             sess.cache = self._bt_set(sess.cache, i, c, blk)
             self.allocator.free([old], self.owner)
             s.blocks[c] = blk
+            if self.tracer.enabled:
+                self.tracer.instant("pool", "kv_cow", rid=s.req.rid,
+                                    alloc=1, freed=1, block=blk)
         s.shared_until = c
 
     def _chunk_tokens(self, r: Request, chunk: int) -> jnp.ndarray:
@@ -963,9 +1130,11 @@ class ServeEngine:
                 self._grow_slot(sess, i, s)     # may raise PoolPressure
             batch = {"tokens": self._chunk_tokens(r, c), **extra}
             self._prefill_shapes.add(("chunk", self.block_size))
-            logits, sess.cache = self._prefill_chunk(
-                self.params, sess.cache, batch, np.int32(i), np.int32(c),
-                np.int32(s.prefill_pos))
+            with self.tracer.span(self._slot_track(i), "chunk",
+                                  rid=r.rid, chunk=c):
+                logits, sess.cache = self._prefill_chunk(
+                    self.params, sess.cache, batch, np.int32(i),
+                    np.int32(c), np.int32(s.prefill_pos))
             s.chunks_done += 1
         if self.prefix_cache:
             # publish every full prompt-prefix block (re-registering a hit
@@ -980,11 +1149,19 @@ class ServeEngine:
                            sess.key, jnp.asarray([r.rid], np.int32),
                            jnp.asarray([len(r.done)], np.int32))
         tok = int(np.asarray(jax.block_until_ready(tok))[0])
-        ttft_ms = (time.perf_counter() - s.admit_t) * 1e3
+        t1 = self.clock.now()
+        ttft_ms = (t1 - s.admit_t) * 1e3
+        if self.tracer.enabled:
+            # this admission's prefill: s.span_t0 (admit), not s.admit_t
+            # (which spans back across preemptions to the first attempt)
+            self.tracer.complete(self._slot_track(i), "prefill",
+                                 s.span_t0, t1, rid=r.rid,
+                                 chunks=n_chunks, tokens=s.prefill_pos)
         if not r.done:
-            sess.ttfts.append(ttft_ms)
+            sess.metrics.histogram("ttft_ms").observe(ttft_ms)
         s.ttft_ms = (r.first_ttft_ms if r.first_ttft_ms is not None
                      else ttft_ms)
+        s.first_tok_t = t1
         s.tokens.append(tok)
         s.chunks_done = None            # prefill complete: decode from here
         if len(r.done) + 1 >= r.max_new_tokens:
@@ -1013,9 +1190,25 @@ class ServeEngine:
             # from first_admit_t on re-admissions), so a chain of
             # mid-prefill evictions keeps the original TTFT base
             first_admit_t=s.admit_t, requeues=s.req.requeues + 1)
+        tr = self.tracer
+        if tr.enabled:
+            st = self._slot_track(slot)
+            t1 = self.clock.now()
+            if s.steps:
+                tr.complete(st, "decode", s.first_tok_t, t1,
+                            rid=s.req.rid, tokens=s.steps)
+            tr.complete(st, f"req {s.req.rid}", s.span_t0, t1,
+                        rid=s.req.rid, preempted=True)
+            tr.instant(st, "preempt", rid=s.req.rid,
+                       tokens_done=len(requeued.done),
+                       mid_prefill=s.chunks_done is not None)
+            # open the flow arrow; the requeue/abort that answers this
+            # eviction closes it (fid matches the requeued copy's count)
+            tr.flow_start(st, "preempt_flow",
+                          f"preempt-{s.req.rid}-{requeued.requeues}")
         self._release(s, slot)
         sess.slots[slot] = None
-        sess.preempted += 1
+        sess.metrics.counter("preempted").inc()
         return s.tag, requeued
 
     def session_abort(self) -> None:
@@ -1026,6 +1219,11 @@ class ServeEngine:
         sess = self._sess
         if sess is None:
             return
+        if self.tracer.enabled:
+            for i, s in enumerate(sess.slots):
+                if s is not None:
+                    self.tracer.instant(self._slot_track(i), "abort",
+                                        rid=s.req.rid)
         if self.kv_layout == "paged":
             for s in sess.slots:
                 if s is not None:
@@ -1053,20 +1251,14 @@ class ServeEngine:
                 "end_session with undelivered finished Results (a "
                 "PoolPressure interrupted their step; call session_step "
                 "once more to collect them)")
-        wall = time.perf_counter() - sess.t_start
-        gen = sess.gen_tokens
-        stats = EngineStats(
-            "continuous", wall, gen, gen / max(wall, 1e-9),
-            sess.decode_steps,
-            sess.busy_steps / max(self.max_batch * sess.decode_steps, 1),
-            float(np.mean(sess.ttfts)) if sess.ttfts else 0.0,
+        wall = self.clock.now() - sess.t_start
+        stats = EngineStats.from_registry(
+            sess.metrics, mode="continuous", wall_s=wall,
             kv_layout=self.kv_layout,
             prefill_compiles=len(self._prefill_shapes),
             block_util_peak=(self.allocator.stats().peak_utilization
-                             if self.kv_layout == "paged" else 0.0),
-            preempted=sess.preempted, requeued=sess.requeued,
-            prefix_hits=sess.prefix_hits,
-            prefix_tokens_reused=sess.prefix_reused)
+                             if self.kv_layout == "paged" else 0.0))
+        self.last_metrics = sess.metrics
         if self.kv_layout == "paged" and self.prefix_cache:
             # keep the device pool alive across sessions: cached blocks'
             # bytes must stay resident for a later session to hit them
@@ -1077,8 +1269,24 @@ class ServeEngine:
     def _finish(self, s: _Slot) -> Result:
         per_tok = s.decode_s * 1e3 / max(s.steps, 1)
         tokens = list(s.req.done) + s.tokens
-        self._sess.gen_tokens += len(tokens)
+        m = self._sess.metrics
+        m.counter("generated_tokens").inc(len(tokens))
+        if s.steps:
+            m.histogram("tpot_ms").observe(per_tok)
         return Result(s.req.rid, tokens, s.ttft_ms, per_tok)
+
+    def _trace_finish(self, s: _Slot, i: int, t1: float) -> None:
+        """Close a finished request's spans on its slot track: the decode
+        stretch (first token -> finish), the whole-admission request
+        span, and the ``finish`` instant."""
+        tr = self.tracer
+        st = self._slot_track(i)
+        if s.steps:
+            tr.complete(st, "decode", s.first_tok_t, t1, rid=s.req.rid,
+                        tokens=s.steps)
+        tr.complete(st, f"req {s.req.rid}", s.span_t0, t1, rid=s.req.rid)
+        tr.instant(st, "finish", rid=s.req.rid,
+                   tokens=len(s.req.done) + len(s.tokens))
 
     def _release(self, s: _Slot, i: int) -> None:
         """Free slot ``i``'s cache-side state.
@@ -1097,6 +1305,9 @@ class ServeEngine:
             if self._slot_reset is not None and self._sess.cache is not None:
                 self._sess.cache = self._slot_reset(self._sess.cache, i)
             return
+        if self.tracer.enabled and s.blocks:
+            self.tracer.instant("pool", "kv_free", rid=s.req.rid,
+                                n=len(s.blocks))
         self.allocator.free(s.blocks, self.owner)
         self.allocator.unreserve(s.reserve_left)
         s.blocks, s.reserve_left = [], 0
@@ -1121,7 +1332,8 @@ class ServeEngine:
                     if not self.session_can_admit(queue[0][2]):
                         break
                     seq, order, r = queue.popleft()
-                    res = self.session_admit(r, tag=seq, extra_row=order)
+                    res = self.session_admit(r, tag=seq, extra_row=order,
+                                             enqueue_t=self._sess.t_start)
                     if res is not None:
                         results[seq] = res
                 if queue and not self.session_active:
@@ -1161,36 +1373,36 @@ class ServeEngine:
         """items: [(submission order, Request)]; results align with items."""
         results: list[Result | None] = [None] * len(items)
         queue = [(seq, order, r) for seq, (order, r) in enumerate(items)]
-        decode_steps = busy_steps = 0
-        ttfts: list[float] = []
-        t_start = time.perf_counter()
+        m = MetricsRegistry()
+        t_start = self.clock.now()
         while queue:
             group = queue[: self.max_batch]
             queue = queue[self.max_batch:]
-            stats = self._generate_group(group, key, results)
-            decode_steps += stats[0]
-            busy_steps += stats[1]
-            ttfts.extend(stats[2])
-        wall = time.perf_counter() - t_start
-        gen = sum(len(r.tokens) for r in results)
-        self.last_stats = EngineStats(
-            "lockstep", wall, gen, gen / max(wall, 1e-9), decode_steps,
-            busy_steps / max(self.max_batch * decode_steps, 1),
-            float(np.mean(ttfts)) if ttfts else 0.0,
+            self._generate_group(group, key, results, m)
+        wall = self.clock.now() - t_start
+        m.counter("generated_tokens").inc(
+            sum(len(r.tokens) for r in results))
+        self.last_metrics = m
+        self.last_stats = EngineStats.from_registry(
+            m, mode="lockstep", wall_s=wall,
             prefill_compiles=len(self._prefill_shapes))
         return results
 
-    def _generate_group(self, group, key, results):
+    def _generate_group(self, group, key, results, m: MetricsRegistry):
         reqs = [r for _, _, r in group]
         prompts = self._pad_prompts([list(r.prompt) + list(r.done)
                                      for r in reqs])
         self._prefill_shapes.add(prompts.shape[1])
         batch = {"tokens": jnp.asarray(prompts),
                  **self._gather_extra([order for _, order, _ in group])}
-        t0 = time.perf_counter()
+        t0 = self.clock.now()
         logits, cache = self._prefill(self.params, batch)
         jax.block_until_ready(logits)
-        prefill_ms = (time.perf_counter() - t0) * 1e3
+        t_pf = self.clock.now()
+        prefill_ms = (t_pf - t0) * 1e3
+        if self.tracer.enabled:
+            self.tracer.complete(self.track, "prefill", t0, t_pf,
+                                 group=len(reqs))
         remaining = [r.max_new_tokens - len(r.done) for r in reqs]
         max_new = max(remaining)
         if self._slot_capable:
@@ -1205,7 +1417,7 @@ class ServeEngine:
         toks = np.asarray(self._sample(logits, temps, key, rids,
                                        jnp.asarray(base_idx)))[:, None]
         outs = [[int(toks[i, 0])] for i in range(len(reqs))]
-        t1 = time.perf_counter()
+        t1 = self.clock.now()
         n_steps = 0
         for _ in range(max_new - 1):
             logits, cache = self._decode(self.params, cache,
@@ -1218,13 +1430,23 @@ class ServeEngine:
                 if len(outs[i]) < remaining[i]:
                     outs[i].append(int(toks[i, 0]))
         jax.block_until_ready(logits)
-        decode_ms = ((time.perf_counter() - t1) * 1e3 / max(n_steps, 1))
+        t2 = self.clock.now()
+        decode_ms = (t2 - t1) * 1e3 / max(n_steps, 1)
+        if self.tracer.enabled and n_steps:
+            self.tracer.complete(self.track, "decode_group", t1, t2,
+                                 steps=n_steps, group=len(reqs))
         busy_total = 0
         # recompute busy slot-steps: request i is busy for its first
         # (remaining - 1) decode steps of this group
         for rem in remaining:
             busy_total += min(max(rem - 1, 0), max(n_steps, 0))
+        m.counter("decode_steps").inc(n_steps)
+        m.counter("busy_slot_steps").inc(busy_total)
+        m.counter("offered_slot_steps").inc(self.max_batch * n_steps)
+        for _ in reqs:
+            m.histogram("ttft_ms").observe(prefill_ms)
         for i, (seq, _, r) in enumerate(group):
             results[seq] = Result(r.rid, list(r.done) + outs[i], prefill_ms,
                                   decode_ms)
-        return n_steps, busy_total, [prefill_ms] * len(reqs)
+            if remaining[i] > 1:
+                m.histogram("tpot_ms").observe(decode_ms)

@@ -83,6 +83,8 @@ from typing import Any
 
 import jax.numpy as jnp
 
+from .telemetry import NULL_TRACER
+
 NULL_BLOCK = 0
 
 
@@ -153,7 +155,23 @@ class BlockAllocator:
         self.n_blocks = n_blocks
         self.block_size = block_size
         self._policy: str | None = None
+        self._tracer = NULL_TRACER
         self.reset()
+
+    # -- telemetry -----------------------------------------------------
+
+    def set_tracer(self, tracer) -> None:
+        """Attach a tracer: pool mutations emit a ``blocks`` counter
+        series (free / live / reserved / cached — the free-block
+        watermark timeline in the trace) and reservation instants on the
+        ``pool`` track.  Host-side only; no device state involved."""
+        self._tracer = tracer if tracer is not None else NULL_TRACER
+
+    def _trace_watermark(self) -> None:
+        if self._tracer.enabled:
+            self._tracer.counter("pool", "blocks", free=len(self._free),
+                                 live=self.n_live, reserved=self._reserved,
+                                 cached=self.n_cached)
 
     def claim_policy(self, policy: str) -> None:
         """Engines sharing this pool must agree on one admission policy:
@@ -251,6 +269,7 @@ class BlockAllocator:
         self._peak = max(self._peak, len(self._live))
         if from_reservation:
             self.unreserve(1)
+        self._trace_watermark()
         return blk
 
     def alloc_n(self, n: int, owner=0, *,
@@ -298,6 +317,7 @@ class BlockAllocator:
                 self._cached.move_to_end(blk)
             else:
                 self._free.append(blk)
+        self._trace_watermark()
 
     # -- prefix index (refcounted content-addressed blocks) ------------
 
@@ -370,6 +390,7 @@ class BlockAllocator:
         self._peak = max(self._peak, len(self._live))
         if from_reservation:
             self.unreserve(1)
+        self._trace_watermark()
 
     def flush_index(self, owner=None) -> int:
         """Drop prefix-index entries (all, or one writer's) - cached
@@ -410,6 +431,10 @@ class BlockAllocator:
             assert blk in self._key_of, "cached block lost its index key"
         for key, (blk, _) in self._index.items():
             assert self._key_of.get(blk) == key, "index/key_of mismatch"
+        if self._tracer.enabled:
+            self._tracer.instant("pool", "integrity_ok", live=self.n_live,
+                                 free=self.n_free,
+                                 reserved=self._reserved)
 
     # -- reservations (worst-case admission promises) ------------------
 
@@ -422,6 +447,9 @@ class BlockAllocator:
                 f"cannot reserve {n} blocks: only {self.n_avail} of "
                 f"{self.capacity} unreserved-free")
         self._reserved += n
+        if self._tracer.enabled and n:
+            self._tracer.instant("pool", "reserve", n=n)
+        self._trace_watermark()
 
     def unreserve(self, n: int) -> None:
         """Release reservations (a promised block became live, or its
@@ -431,6 +459,8 @@ class BlockAllocator:
                 f"unreserve({n}) exceeds standing reservations "
                 f"({self._reserved})")
         self._reserved -= n
+        if n:
+            self._trace_watermark()
 
     # -- accounting ----------------------------------------------------
 

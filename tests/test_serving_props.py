@@ -37,6 +37,16 @@ After every run the shared pools must be fully drained (no leaked blocks
 or reservations) — a stateful invariant the random traces exercise far
 harder than the fixed regression traces do.
 
+Three cells (paged single, Nx1 cluster, pressure cluster) additionally
+serve every drawn trace with a live :class:`Tracer` attached: the token
+assert against the *untraced* reference doubles as the observer-effect
+gate (tracing must never perturb scheduling or sampling), and the
+recorded event stream must be lifecycle-well-formed
+(:func:`validate_lifecycle`: an admit precedes the first decode, every
+preempt is followed by a requeue or abort, per-request block
+alloc/ref/COW acquisitions balance the frees — see
+docs/observability.md).
+
 With hypothesis installed (CI) the trace space is explored and shrunk by
 ``@given``; without it, a seeded-PRNG fallback draws the same
 distributions so the suite still runs everywhere.
@@ -47,7 +57,8 @@ import pytest
 
 from repro.configs import smoke_config
 from repro.models import build_model
-from repro.serving import ClusterEngine, Request, ServeEngine
+from repro.serving import (NULL_TRACER, ClusterEngine, Request, ServeEngine,
+                           Tracer, validate_lifecycle)
 
 from helpers import HAS_HYPOTHESIS, given, settings, st
 
@@ -139,6 +150,13 @@ def _draw_trace(rng: np.random.Generator, vocab: int):
     return reqs, int(rng.integers(0, 2 ** 31))
 
 
+# cells that also run lifecycle-traced (single paged, routed cluster,
+# preempting cluster): tokens still compare against the untraced
+# reference, so these double as the tracing-observer-effect property
+TRACED_CELLS = {"paged-continuous", "cluster-Nx1-round_robin",
+                "cluster-2x2-pressure"}
+
+
 def _check_conformance(harness, seed: int):
     cfg, engines = harness
     rng = np.random.default_rng(seed)
@@ -156,7 +174,18 @@ def _check_conformance(harness, seed: int):
             continue
         if name == "dense-lockstep" and not uniform:
             continue    # left-padded group prefill needs one length
-        got = eng.generate(reqs, key=key)
+        tracer = Tracer() if name in TRACED_CELLS else None
+        if tracer is not None:
+            eng.set_tracer(tracer)
+        try:
+            got = eng.generate(reqs, key=key)
+        finally:
+            if tracer is not None:
+                # engines are module-scoped: restore the no-op default so
+                # later examples/tests run untraced
+                eng.set_tracer(NULL_TRACER)
+        if tracer is not None:
+            validate_lifecycle(tracer.events())
         for a, b in zip(ref, got):
             assert a.tokens == b.tokens, (
                 f"{name} diverged on rid={a.rid} (seed {seed}): "

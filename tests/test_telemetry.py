@@ -1,0 +1,250 @@
+"""Telemetry subsystem tests (see docs/observability.md).
+
+Unit level: injectable clocks, the NullTracer no-op contract, exact
+nearest-rank percentiles, lossless registry merge (counters add, raw
+histogram samples concatenate — the property that makes cluster p99s
+meaningful), and the Chrome-trace export schema (track metadata, µs
+conversion, flow pairing) — checked with the same ``tools/check_trace.py``
+validator CI runs on bench artifacts.
+
+Integration level: a ServeEngine under an injected :class:`FakeClock`
+produces fully deterministic latency stats; tracing an engine leaves its
+token stream byte-identical; a starved-pool cluster records a
+lifecycle-well-formed event stream whose preemptions carry matched
+flow-arrow pairs.
+"""
+import json
+import pathlib
+import sys
+
+import jax
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import build_model
+from repro.serving import (NULL_TRACER, ClusterEngine, EngineStats,
+                           FakeClock, MetricsRegistry, NullTracer, Request,
+                           ServeEngine, Tracer, validate_lifecycle)
+from repro.serving.telemetry import percentile
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "tools"))
+import check_trace  # noqa: E402  (the CI trace validator, reused here)
+
+CACHE_LEN = 48
+BLOCK = 8
+SLOTS = 3
+
+
+# ---------------------------------------------------------------------------
+# Clocks, tracer primitives
+# ---------------------------------------------------------------------------
+
+def test_fake_clock_ticks_and_advances():
+    c = FakeClock(start=10.0, tick=0.5)
+    assert c.now() == 10.0
+    assert c.now() == 10.5
+    c.advance(2.0)
+    assert c.now() == 13.0
+
+
+def test_null_tracer_is_inert():
+    tr = NULL_TRACER
+    assert isinstance(tr, NullTracer) and not tr.enabled
+    with tr.span("t", "x", rid=1):
+        pass
+    tr.instant("t", "x")
+    tr.counter("t", "c", v=1)
+    tr.flow_start("t", "f", "id0")
+    tr.flow_end("t", "f", "id0")
+    assert tr.events() == []
+
+
+def test_tracer_records_with_fake_clock():
+    clock = FakeClock(start=1.0, tick=1.0)
+    tr = Tracer(clock=clock)
+    with tr.span("trk", "work", rid=7):    # enters at 1.0, exits at 2.0
+        pass
+    tr.instant("trk", "mark", rid=7)       # 3.0
+    (span, inst) = tr.events()
+    assert (span.ph, span.name, span.ts, span.dur) == ("X", "work", 1.0, 1.0)
+    assert span.args["rid"] == 7
+    assert (inst.ph, inst.ts) == ("i", 3.0)
+
+
+# ---------------------------------------------------------------------------
+# Percentiles + registry merge
+# ---------------------------------------------------------------------------
+
+def test_nearest_rank_percentile_exact():
+    xs = list(range(1, 101))               # 1..100: pN == N exactly
+    assert percentile(xs, 50) == 50
+    assert percentile(xs, 90) == 90
+    assert percentile(xs, 99) == 99
+    assert percentile([42.0], 99) == 42.0
+    assert percentile([], 50) == 0.0
+    assert percentile([3.0, 1.0, 2.0], 50) == 2.0   # unsorted input
+
+
+def test_registry_merge_is_lossless():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.counter("n").inc(3)
+    b.counter("n").inc(4)
+    for v in (1.0, 2.0):
+        a.histogram("h").observe(v)
+    for v in (100.0, 200.0):
+        b.histogram("h").observe(v)
+    a.gauge("g").set(1.0)
+    b.gauge("g").set(2.0)
+    a.merge(b)
+    assert a.counter("n").n == 7
+    h = a.histogram("h")
+    assert h.count == 4
+    # the merged p99 is the max raw sample — unreachable from a mean of
+    # per-registry means (51.5), which is the cluster bug this fixes
+    assert h.percentile(99) == 200.0
+    assert a.gauge("g").value == 2.0
+
+
+def test_stats_view_over_registry():
+    m = MetricsRegistry()
+    m.counter("generated_tokens").inc(10)
+    m.counter("decode_steps").inc(5)
+    m.counter("busy_slot_steps").inc(15)
+    m.counter("offered_slot_steps").inc(20)
+    for v in (1.0, 2.0, 3.0, 4.0):
+        m.histogram("ttft_ms").observe(v)
+    s = EngineStats.from_registry(m, mode="continuous", wall_s=2.0)
+    assert s.generated_tokens == 10 and s.tokens_per_s == 5.0
+    assert s.occupancy == 0.75
+    assert s.ttft_ms_mean == 2.5
+    assert (s.ttft_ms_p50, s.ttft_ms_p99) == (2.0, 4.0)
+
+
+# ---------------------------------------------------------------------------
+# Chrome-trace export
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_schema(tmp_path):
+    clock = FakeClock(start=1.0, tick=1.0)
+    tr = Tracer(clock=clock)
+    with tr.span("replica0", "step"):
+        pass
+    tr.instant("replica1", "admit", rid=0)
+    tr.counter("pool", "blocks", free=4, live=3)
+    tr.flow_start("replica0", "preempt_flow", "preempt-0-1")
+    tr.flow_end("replica1", "preempt_flow", "preempt-0-1")
+
+    doc = tr.chrome_trace()
+    events = doc["traceEvents"]
+    names = {e["args"]["name"] for e in events
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert names == {"replica0", "replica1", "pool"}
+    span = next(e for e in events if e["ph"] == "X")
+    assert span["ts"] == 1.0e6 and span["dur"] == 1.0e6   # seconds -> µs
+    flows = [e for e in events if e["ph"] in ("s", "f")]
+    assert {e["ph"] for e in flows} == {"s", "f"}
+    assert len({e["id"] for e in flows}) == 1
+    assert next(e for e in flows if e["ph"] == "f")["bp"] == "e"
+
+    # the exported file passes the exact validator CI gates on
+    path = tmp_path / "trace.json"
+    n = tr.export(path)
+    assert n == 5
+    assert check_trace.validate(path, min_replica_tracks=2,
+                                require_flow=True, require_pool=True) == []
+    assert json.loads(path.read_text())["traceEvents"]
+
+
+# ---------------------------------------------------------------------------
+# Engine integration
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = smoke_config("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _trace(vocab, n=4, max_new=6):
+    return [Request([(5 * i + j) % vocab for j in range(4 + i)], max_new,
+                    temperature=0.0, rid=i) for i in range(n)]
+
+
+def test_fake_clock_makes_latency_stats_deterministic(smoke_model):
+    """Same trace + same injected clock => bit-equal latency stats,
+    independent of host timing (the property every latency regression
+    test in this repo leans on)."""
+    cfg, model, params = smoke_model
+
+    def run():
+        eng = ServeEngine(model, params, max_batch=SLOTS,
+                          cache_len=CACHE_LEN, mode="continuous",
+                          clock=FakeClock(tick=0.001))
+        eng.generate(_trace(cfg.vocab_size))
+        return eng.last_stats
+
+    a, b = run(), run()
+    assert a.ttft_ms_mean > 0 and a.tpot_ms_p50 > 0
+    assert (a.ttft_ms_mean, a.ttft_ms_p50, a.ttft_ms_p99,
+            a.tpot_ms_p50, a.tpot_ms_p99) == \
+           (b.ttft_ms_mean, b.ttft_ms_p50, b.ttft_ms_p99,
+            b.tpot_ms_p50, b.tpot_ms_p99)
+
+
+def test_tracing_leaves_tokens_identical(smoke_model):
+    cfg, model, params = smoke_model
+    eng = ServeEngine(model, params, max_batch=SLOTS, cache_len=CACHE_LEN,
+                      kv_layout="paged", block_size=BLOCK)
+    ref = [r.tokens for r in eng.generate(_trace(cfg.vocab_size))]
+
+    tracer = Tracer()
+    eng.set_tracer(tracer)
+    try:
+        got = [r.tokens for r in eng.generate(_trace(cfg.vocab_size))]
+    finally:
+        eng.set_tracer(NULL_TRACER)
+    assert got == ref
+    events = tracer.events()
+    validate_lifecycle(events)
+    # every request shows the full arc on its slot track
+    for want in ("admit", "prefill", "decode", "finish", "kv_free"):
+        assert any(e.name == want for e in events), want
+    assert eng.last_metrics.histogram("ttft_ms").count == 4
+
+
+def test_pressure_cluster_trace_flows_and_lifecycle(smoke_model):
+    """Starved shared pool: preemptions must appear as matched
+    flow-arrow pairs (preempt -> re-admission) and the stream must stay
+    lifecycle-well-formed; cluster percentile stats come off the merged
+    histograms with one ttft sample per request."""
+    cfg, model, params = smoke_model
+    cl = ClusterEngine(model, params, replicas=2, total_slots=4,
+                       cache_len=CACHE_LEN, block_size=BLOCK, n_blocks=8)
+    reqs = [Request(list(range(i, i + 12)), 8, temperature=0.0, rid=i)
+            for i in range(6)]
+    tracer = Tracer()
+    cl.set_tracer(tracer)
+    try:
+        res = cl.generate(reqs)
+    finally:
+        cl.set_tracer(NULL_TRACER)
+    assert all(len(r.tokens) == 8 for r in res)
+    s = cl.last_stats
+    assert s.preempted >= 1 and s.requeued == s.preempted
+
+    events = tracer.events()
+    validate_lifecycle(events)
+    starts = [e for e in events if e.ph == "s"]
+    ends = [e for e in events if e.ph == "f"]
+    assert len(starts) == s.preempted
+    assert sorted(e.fid for e in starts) == sorted(e.fid for e in ends)
+    # each flow lands at a later timestamp than it left
+    t0 = {e.fid: e.ts for e in starts}
+    assert all(e.ts >= t0[e.fid] for e in ends)
+    # merged-histogram percentiles: one ttft sample per request, p99
+    # taken over raw samples (not a mean of replica means)
+    assert cl.last_metrics.histogram("ttft_ms").count == len(reqs)
+    assert s.ttft_ms_p99 >= s.ttft_ms_p50 > 0

@@ -1,0 +1,157 @@
+"""Chrome-trace-event JSON validator (stdlib only; CI gate).
+
+Validates the Perfetto-loadable traces emitted by
+``repro.serving.telemetry.Tracer.export`` (see docs/observability.md):
+
+  * the file is valid JSON with a non-empty ``traceEvents`` array;
+  * every event carries the fields its phase requires (``ph``, ``pid``,
+    ``tid``, ``ts``; ``dur`` for complete events, ``id`` for flows,
+    ``s`` scope for instants, ``args`` for counters and metadata);
+  * complete-event durations are non-negative;
+  * any legacy ``B``/``E`` begin/end pairs balance per (pid, tid);
+  * ``--min-replica-tracks N`` — at least N distinct ``replica<i>``
+    tracks are named via thread_name metadata (cluster traces);
+  * ``--require-flow`` — at least one flow exists and every flow id's
+    starts (``s``) match its ends (``f``);
+  * ``--require-pool`` — the block-pool watermark counter (``blocks``)
+    is present.
+
+Exit status is the number of problems found; problems print as
+``path: message`` so CI logs can jump to them.
+"""
+from __future__ import annotations
+
+import argparse
+import collections
+import json
+import pathlib
+import re
+import sys
+
+REPLICA_RE = re.compile(r"^replica\d+$")
+
+# phase -> extra required fields beyond ph/pid/tid/ts (metadata aside)
+_PH_FIELDS = {
+    "X": ("dur", "name"),
+    "i": ("s", "name"),
+    "I": ("s", "name"),
+    "C": ("args", "name"),
+    "s": ("id", "name"),
+    "f": ("id", "name"),
+    "B": ("name",),
+    "E": (),
+    "M": ("name", "args"),
+}
+
+
+def validate(path: pathlib.Path, *, min_replica_tracks: int = 0,
+             require_flow: bool = False,
+             require_pool: bool = False) -> list[str]:
+    """Return the list of problems with the trace at ``path``."""
+    problems: list[str] = []
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"unreadable trace: {e}"]
+    events = doc.get("traceEvents") if isinstance(doc, dict) else doc
+    if not isinstance(events, list):
+        return ["no traceEvents array"]
+    if not events:
+        return ["traceEvents is empty"]
+
+    thread_names: dict[tuple, str] = {}
+    flow_starts: collections.Counter = collections.Counter()
+    flow_ends: collections.Counter = collections.Counter()
+    be_depth: collections.Counter = collections.Counter()
+    n_spans = n_flows = 0
+    saw_pool_counter = False
+
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            problems.append(f"event {i}: not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in _PH_FIELDS:
+            problems.append(f"event {i}: unknown phase {ph!r}")
+            continue
+        for field in ("pid", "tid", "ts"):
+            if ph != "M" and field not in ev:
+                problems.append(f"event {i} (ph={ph}): missing {field!r}")
+        for field in _PH_FIELDS[ph]:
+            if field not in ev:
+                problems.append(f"event {i} (ph={ph}): missing {field!r}")
+        if ph == "X":
+            n_spans += 1
+            if ev.get("dur", 0) < 0:
+                problems.append(
+                    f"event {i}: negative dur {ev['dur']} "
+                    f"({ev.get('name')!r})")
+        elif ph == "M" and ev.get("name") == "thread_name":
+            name = (ev.get("args") or {}).get("name", "")
+            thread_names[(ev.get("pid"), ev.get("tid"))] = name
+        elif ph == "s":
+            n_flows += 1
+            flow_starts[ev.get("id")] += 1
+        elif ph == "f":
+            flow_ends[ev.get("id")] += 1
+            if ev.get("bp") != "e":
+                problems.append(
+                    f"event {i}: flow end without bp='e' "
+                    f"(id={ev.get('id')!r})")
+        elif ph == "B":
+            be_depth[(ev.get("pid"), ev.get("tid"))] += 1
+        elif ph == "E":
+            be_depth[(ev.get("pid"), ev.get("tid"))] -= 1
+        elif ph == "C" and ev.get("name") == "blocks":
+            saw_pool_counter = True
+
+    if n_spans == 0:
+        problems.append("no complete ('X') span events")
+    for (pid, tid), depth in be_depth.items():
+        if depth != 0:
+            problems.append(
+                f"unbalanced B/E events on pid={pid} tid={tid}: "
+                f"depth {depth}")
+    for fid in flow_starts.keys() | flow_ends.keys():
+        if flow_starts[fid] != flow_ends[fid]:
+            problems.append(
+                f"flow id {fid!r}: {flow_starts[fid]} start(s) vs "
+                f"{flow_ends[fid]} end(s)")
+
+    if min_replica_tracks:
+        replicas = {n for n in thread_names.values() if REPLICA_RE.match(n)}
+        if len(replicas) < min_replica_tracks:
+            problems.append(
+                f"expected >= {min_replica_tracks} replica tracks, "
+                f"found {sorted(replicas)}")
+    if require_flow and n_flows == 0:
+        problems.append("no flow ('s'/'f') events (expected preemption "
+                        "flow arrows)")
+    if require_pool and not saw_pool_counter:
+        problems.append("no 'blocks' pool-watermark counter events")
+    return problems
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", type=pathlib.Path, nargs="+")
+    ap.add_argument("--min-replica-tracks", type=int, default=0)
+    ap.add_argument("--require-flow", action="store_true")
+    ap.add_argument("--require-pool", action="store_true")
+    args = ap.parse_args(argv)
+    n = 0
+    for path in args.trace:
+        problems = validate(path,
+                            min_replica_tracks=args.min_replica_tracks,
+                            require_flow=args.require_flow,
+                            require_pool=args.require_pool)
+        for p in problems:
+            print(f"{path}: {p}")
+        if not problems:
+            print(f"{path}: OK")
+        n += len(problems)
+    return n
+
+
+if __name__ == "__main__":
+    sys.exit(main())
