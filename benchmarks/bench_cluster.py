@@ -37,6 +37,7 @@ Emits ``name,us_per_call,derived`` CSV rows like the other benches:
   serving_latency_cluster,,ttft_ms_p50=...;...;tpot_ms_p50=...
   serving_latency_cluster_pressure,,ttft_ms_p50=...;...
   cluster_trace,,events=...;flows=...;lifecycle=ok
+  serving_attr_cluster,,fu_utilization=...;bottleneck=...;verdicts...
 
 The latency rows come off the cluster's *merged* per-replica metric
 registries (raw histogram samples concatenated before the percentile is
@@ -46,7 +47,12 @@ docs/observability.md).  The pressure run serves with a live
 reserve reference (tracing must not perturb scheduling), the event
 stream must be lifecycle-well-formed with at least one preempt→requeue
 flow, and ``--trace PATH`` exports it as Chrome-trace JSON (validated
-in CI by ``tools/check_trace.py``).
+in CI by ``tools/check_trace.py``).  The same run carries a shared
+:class:`Attributor` across both replicas (one AOT cost lowering per
+compiled shape, not per replica); ``serving_attr_cluster`` reports the
+cluster-merged roofline rollup — fu_utilization and verdict counts come
+off the lossless registry merge, so they aggregate replicas exactly
+like the latency percentiles do.
 
 ``--smoke`` shrinks to the smoke model for the CI gate: it asserts
 token identity and the preemption count but not the throughput ordering
@@ -206,11 +212,14 @@ def run(smoke: bool = False, json_path: str | None = None,
     # so the trace holds only the timed run): its tokens are checked
     # against the *untraced* reserve reference below, which is the
     # observer-effect gate for the cluster path
-    from repro.serving import NULL_TRACER, Tracer, validate_lifecycle
+    from repro.serving import (NULL_ATTR, NULL_TRACER, Attributor, Tracer,
+                               validate_lifecycle)
     tracer = Tracer()
     cl.set_tracer(tracer)
+    cl.set_attributor(Attributor())     # shared across both replicas
     pgot = [r.tokens for r in cl.generate(preqs)]
     cl.set_tracer(NULL_TRACER)
+    cl.set_attributor(NULL_ATTR)
     s = cl.last_stats
     emit("cluster_pressure_preempt", s.wall_s * 1e6, _stats_line(s))
     emit("serving_latency_cluster_pressure", "",
@@ -226,6 +235,22 @@ def run(smoke: bool = False, json_path: str | None = None,
     assert flows >= 1, "preemption fired but recorded no flow arrow"
     emit("cluster_trace", "",
          f"events={len(events)};flows={flows};lifecycle=ok")
+    # cluster-merged attribution rollup: both replicas' attr_* metrics
+    # concatenate losslessly before the stats view derives these
+    assert s.achieved_flops_per_s > 0 and s.bottleneck, (
+        "attribution produced no cluster rollup")
+    assert 0.0 < s.fu_utilization < 1.0, (
+        f"implausible cluster fu_utilization {s.fu_utilization}")
+    assert any(e.name == "roofline" for e in events), (
+        "attributed cluster trace has no roofline counter track")
+    verdicts = ";".join(f"{k}={v}"
+                        for k, v in sorted(s.verdict_counts.items()))
+    emit("serving_attr_cluster", "",
+         f"fu_utilization={s.fu_utilization:.3e};"
+         f"achieved_gflops_s={s.achieved_flops_per_s / 1e9:.3f};"
+         f"ai={s.decode_ai:.2f};ridge={s.ridge_ai:.2f};"
+         f"bottleneck={s.bottleneck};"
+         f"prefill_bottleneck={s.prefill_bottleneck};{verdicts}")
     if trace_path:
         n = tracer.export(trace_path)
         print(f"[bench] wrote {trace_path} ({n} trace events)",

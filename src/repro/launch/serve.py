@@ -17,13 +17,15 @@ repro.serving.cluster).
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
 
 import jax
 
 from ..configs import get_config, list_archs, smoke_config
 from ..models import build_model
-from ..serving import (ROUTER_POLICIES, ClusterEngine, Request, ServeEngine,
-                       Tracer)
+from ..serving import (ROUTER_POLICIES, Attributor, ClusterEngine, Request,
+                       ServeEngine, Tracer)
 
 
 def main():
@@ -76,9 +78,18 @@ def main():
                          "Chrome-trace-event JSON (open at "
                          "https://ui.perfetto.dev; see "
                          "docs/observability.md)")
-    ap.add_argument("--metrics", action="store_true",
+    ap.add_argument("--metrics", nargs="?", const=True, default=None,
+                    metavar="OUT.json",
                     help="print the metrics-registry summary (p50/p90/p99 "
-                         "TTFT+TPOT, queue age, occupancy/pool timelines)")
+                         "TTFT+TPOT, queue age, occupancy/pool timelines); "
+                         "with a file argument, also write the stats + "
+                         "registry snapshot as JSON so serve runs feed "
+                         "tools/bench_compare.py like the benches do")
+    ap.add_argument("--attribution", action="store_true",
+                    help="attach a utilization attributor: roofline-joined "
+                         "per-step accounting (achieved FLOP/s vs peak, "
+                         "bottleneck verdicts, fu_utilization; see "
+                         "docs/observability.md)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -101,6 +112,7 @@ def main():
         extra = {"frames": jnp.zeros((len(args.prompts), 16, cfg.d_model),
                                      jnp.bfloat16)}
     tracer = Tracer() if (args.trace or args.metrics) else None
+    attribution = Attributor() if args.attribution else None
     if args.replicas > 1:
         if args.mode != "auto" or args.kv_layout != "dense":
             ap.error("--replicas > 1 always serves continuous and "
@@ -116,7 +128,7 @@ def main():
                             admission=args.admission or "overcommit",
                             preempt_hysteresis=args.hysteresis,
                             prefix_cache=args.prefix_cache,
-                            tracer=tracer)
+                            tracer=tracer, attribution=attribution)
     else:
         eng = ServeEngine(model, params, max_batch=args.max_batch,
                           cache_len=args.cache_len, mode=args.mode,
@@ -126,7 +138,7 @@ def main():
                           n_blocks=args.n_blocks, bucket=bucket,
                           admission=args.admission or "reserve",
                           prefix_cache=args.prefix_cache,
-                          tracer=tracer)
+                          tracer=tracer, attribution=attribution)
     reqs = [Request([int(t) % cfg.vocab_size for t in p.split()],
                     args.max_new, args.temperature, rid=i)
             for i, p in enumerate(args.prompts)]
@@ -155,8 +167,27 @@ def main():
               f"mean={s.tpot_ms_mean:.2f}")
         print(f"[metrics] queue_age_ms mean={s.queue_age_ms_mean:.1f} "
               f"p99={s.queue_age_ms_p99:.1f}")
+        if args.attribution:
+            print(f"[metrics] attribution fu_utilization="
+                  f"{s.fu_utilization:.3e} "
+                  f"achieved_flops/s={s.achieved_flops_per_s:.3e} "
+                  f"achieved_bytes/s={s.achieved_bytes_per_s:.3e} "
+                  f"decode_ai={s.decode_ai:.2f} ridge={s.ridge_ai:.2f} "
+                  f"bottleneck={s.bottleneck or '-'} "
+                  f"prefill={s.prefill_bottleneck or '-'} "
+                  f"verdicts={s.verdict_counts}")
         for name, val in sorted(eng.last_metrics.snapshot().items()):
             print(f"[metrics] {name}={val}")
+        if isinstance(args.metrics, str):
+            # machine-readable twin of the prints above: the stats view
+            # plus the raw registry snapshot, in the shape
+            # tools/bench_compare.py gates (stats.* / metrics.* keys)
+            with open(args.metrics, "w") as f:
+                json.dump({"bench": "repro.launch.serve",
+                           "stats": dataclasses.asdict(s),
+                           "metrics": eng.last_metrics.snapshot()},
+                          f, indent=2, sort_keys=True, default=str)
+            print(f"[metrics] wrote {args.metrics}")
     if args.trace:
         n = tracer.export(args.trace)
         print(f"[trace] wrote {n} events to {args.trace} "

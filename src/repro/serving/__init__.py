@@ -12,6 +12,12 @@
   percentile metrics every :class:`EngineStats` is derived from, and
   injectable clocks (:class:`FakeClock` for deterministic latency
   tests).  See ``docs/observability.md``.
+* attribution — :class:`Attributor`/:class:`NullAttributor` roofline-
+  joined utilization accounting: per-launch achieved FLOP/s and bytes/s
+  against a :class:`MachineSpec` roofline, bottleneck verdicts
+  (``issue``/``memory``/``compute``/``idle``, the paper's §6 regimes),
+  and the engine-level ``fu_utilization`` figure on
+  :class:`EngineStats`.  See ``docs/observability.md``.
 
 Cross-cutting invariants (asserted in ``tests/test_serving_props.py``,
 ``tests/test_serving.py``, ``tests/test_cluster.py``): request-keyed
@@ -25,6 +31,8 @@ lifecycle-well-formed (:func:`validate_lifecycle`) and tracing never
 changes tokens.  The full scheduler matrix and knob reference live in
 ``docs/serving.md``.
 """
+from .attribution import (NULL_ATTR, VERDICTS, Attributor, MachineSpec,
+                          NullAttributor, PhaseCost, dominant_verdict)
 from .cluster import ROUTER_POLICIES, ClusterEngine
 from .engine import EngineStats, Request, Result, ServeEngine
 from .kvcache import (BlockAllocator, BlockPoolStats, PoolPressure,

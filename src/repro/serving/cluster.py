@@ -143,7 +143,7 @@ class ClusterEngine:
                  admission: str = "overcommit",
                  preempt_hysteresis: int = 4,
                  prefix_cache: bool = False,
-                 tracer=None, clock=None):
+                 tracer=None, clock=None, attribution=None):
         if router not in ROUTER_POLICIES:
             raise ValueError(f"router={router!r}: pick one of "
                              f"{ROUTER_POLICIES}")
@@ -202,6 +202,19 @@ class ClusterEngine:
             self.clock = clock
             for e in self.engines:
                 e.clock = clock
+        if attribution is not None:
+            self.set_attributor(attribution)
+
+    def set_attributor(self, attributor) -> None:
+        """Attach (or detach, with None) one utilization attributor to
+        every replica (``ServeEngine.set_attributor``).  Sharing one
+        attributor is deliberate: its cost memo is shape-keyed, so N
+        identical replicas lower each executable once, and the rollup
+        needs no extra plumbing — replicas record raw ``attr_*`` samples
+        into their own registries and ``_aggregate``'s lossless merge
+        derives the cluster-wide utilization from the union."""
+        for e in self.engines:
+            e.set_attributor(attributor)
 
     def set_tracer(self, tracer) -> None:
         """Attach (or detach, with None) a tracer, cascading it to every

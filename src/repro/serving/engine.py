@@ -135,6 +135,7 @@ import numpy as np
 
 from ..models.model import Model
 from . import kvcache
+from .attribution import NULL_ATTR, VERDICTS, dominant_verdict
 from .kvcache import BlockAllocator, PoolPressure, blocks_needed
 from .telemetry import MONOTONIC, NULL_TRACER, MetricsRegistry
 
@@ -224,6 +225,20 @@ class EngineStats:
     tpot_ms_p99: float = 0.0
     queue_age_ms_mean: float = 0.0  # enqueue -> admission wait
     queue_age_ms_p99: float = 0.0
+    # -- utilization attribution (repro.serving.attribution) --
+    # All-zero/empty unless an Attributor was attached.  fu_utilization
+    # is the paper-§6 analog: useful flops (idle slot lanes excluded,
+    # like idle vector lanes) per second of device-busy time, over the
+    # machine's peak — the serving twin of Ara2's FU-utilization figure.
+    fu_utilization: float = 0.0
+    achieved_flops_per_s: float = 0.0  # useful FLOP/s over busy device time
+    achieved_bytes_per_s: float = 0.0  # HBM bytes/s over busy device time
+    decode_ai: float = 0.0         # decode executable flops/byte
+    ridge_ai: float = 0.0          # machine ridge point (flops/byte)
+    bottleneck: str = ""           # dominant decode verdict (issue/
+    #                                memory/compute/idle)
+    prefill_bottleneck: str = ""   # dominant prefill verdict
+    verdict_counts: dict = dataclasses.field(default_factory=dict)
 
     @classmethod
     def from_registry(cls, m: MetricsRegistry, *, mode: str, wall_s: float,
@@ -239,6 +254,24 @@ class EngineStats:
         steps = m.counter("decode_steps").n
         busy = m.counter("busy_slot_steps").n
         offered = m.counter("offered_slot_steps").n
+        # attribution rollup: raw per-launch samples (replica registries
+        # merge losslessly, so a cluster's figure is derived from the
+        # union exactly as a single engine's is)
+        dev_s = sum(m.histogram("attr_device_ms").samples) / 1e3
+        pf_s = sum(m.histogram("attr_prefill_ms").samples) / 1e3
+        useful = (sum(m.histogram("attr_step_flops").samples)
+                  + sum(m.histogram("attr_prefill_flops").samples))
+        moved = (sum(m.histogram("attr_step_bytes").samples)
+                 + sum(m.histogram("attr_prefill_bytes").samples))
+        busy_s = dev_s + pf_s
+        peak = m.gauge("attr_peak_flops").value
+        mem_bw = m.gauge("attr_peak_bytes_s").value
+        verdicts = {v: m.counter(f"attr_verdict_{v}").n for v in VERDICTS}
+        verdicts = {k: n for k, n in verdicts.items() if n}
+        pf_verdicts = {v: m.counter(f"attr_prefill_verdict_{v}").n
+                       for v in VERDICTS}
+        ach_f = useful / busy_s if busy_s > 0 else 0.0
+        ach_b = moved / busy_s if busy_s > 0 else 0.0
         return cls(
             mode, wall_s, gen, gen / max(wall_s, 1e-9), steps,
             busy / max(offered, 1), ttft.mean,
@@ -257,7 +290,15 @@ class EngineStats:
             tpot_ms_p90=tpot.percentile(90),
             tpot_ms_p99=tpot.percentile(99),
             queue_age_ms_mean=qage.mean,
-            queue_age_ms_p99=qage.percentile(99))
+            queue_age_ms_p99=qage.percentile(99),
+            fu_utilization=ach_f / peak if peak > 0 else 0.0,
+            achieved_flops_per_s=ach_f,
+            achieved_bytes_per_s=ach_b,
+            decode_ai=m.gauge("attr_decode_ai").value,
+            ridge_ai=(peak / mem_bw if mem_bw > 0 else 0.0),
+            bottleneck=dominant_verdict(verdicts),
+            prefill_bottleneck=dominant_verdict(pf_verdicts),
+            verdict_counts=verdicts)
 
 
 @dataclasses.dataclass
@@ -397,7 +438,8 @@ class ServeEngine:
                  allocator: BlockAllocator | None = None,
                  admission: str = "reserve", owner: Any = 0,
                  prefix_cache: bool = False,
-                 tracer=None, clock=None, track: str | None = None):
+                 tracer=None, clock=None, track: str | None = None,
+                 attribution=None):
         assert mode in ("auto", "continuous", "lockstep"), mode
         assert kv_layout in ("dense", "paged"), kv_layout
         assert admission in ("reserve", "overcommit"), admission
@@ -409,6 +451,7 @@ class ServeEngine:
         self.bucket = bucket
         self.owner = owner
         self.tracer = NULL_TRACER
+        self.attr = NULL_ATTR
         self.clock = MONOTONIC
         self.track = track if track is not None else f"engine{owner}"
         # survives end_session so an outer aggregator (the cluster) can
@@ -517,6 +560,8 @@ class ServeEngine:
             self.set_tracer(tracer)
         if clock is not None:
             self.clock = clock
+        if attribution is not None:
+            self.set_attributor(attribution)
 
     # ------------------------------------------------------------------
     # Telemetry plumbing.
@@ -535,6 +580,20 @@ class ServeEngine:
             self.clock = self.tracer.clock
         if self.kv_layout == "paged" and self._owns_pool:
             self.allocator.set_tracer(self.tracer)
+
+    def set_attributor(self, attributor) -> None:
+        """Attach (or detach, with None) a utilization attributor
+        (``repro.serving.attribution.Attributor``).  Host-side only,
+        like the tracer: no compiled function the engine executes
+        depends on it (executable costs come from a separate AOT
+        lowering of the same jitted callables, memoized per shape), so
+        tokens are byte-identical with attribution on vs off, and a
+        warm engine keeps its caches.  Attribution covers the
+        continuous scheduler's phases — decode launches and prefills
+        (dense and chunked paged alike); the legacy lockstep scheduler
+        is not attributed.  One attributor may be shared across a
+        cluster's replicas (the cost memo is shape-keyed)."""
+        self.attr = attributor if attributor is not None else NULL_ATTR
 
     def _slot_track(self, i: int) -> str:
         """Trace track of slot ``i`` (request spans nest per slot, so
@@ -925,6 +984,13 @@ class ServeEngine:
         if tr.enabled:
             tr.complete(self._slot_track(slot), "prefill", t0, t1,
                         rid=r.rid, tokens=plen)
+        at = self.attr
+        if at.enabled:
+            cost = at.phase_cost(
+                ("prefill", self.model.cfg.name, batch["tokens"].shape[1]),
+                self._prefill, (self.params, batch))
+            at.record_prefill(sess.metrics, tr, self._slot_track(slot),
+                              t0=t0, t1=t1, cost=cost)
         if r.done or r.requeues:
             sess.metrics.counter("requeued").inc()
         if not r.done:
@@ -1018,6 +1084,17 @@ class ServeEngine:
             tr.complete(self.track, "step", t0, t1, active=len(active))
             tr.complete(self.track, "dispatch", t0, t_disp)
             tr.complete(self.track, "device", t_disp, t1)
+        at = self.attr
+        if at.enabled:
+            # shapes only (the post-step cache aliases the pre-step
+            # shapes); a memo hit is a dict lookup, a miss lowers this
+            # jitted decode AOT without executing or donating anything
+            cost = at.phase_cost(
+                ("decode", self.kv_layout, self.model.cfg.name, bsz),
+                self._decode, (self.params, sess.cache,
+                               jnp.asarray(sess.toks)))
+            at.record_step(m, tr, self.track, t0=t0, t_disp=t_disp, t1=t1,
+                           active=len(active), width=bsz, cost=cost)
         for i in active:
             s = sess.slots[i]
             s.tokens.append(int(nxt[i]))
@@ -1130,12 +1207,23 @@ class ServeEngine:
                 self._grow_slot(sess, i, s)     # may raise PoolPressure
             batch = {"tokens": self._chunk_tokens(r, c), **extra}
             self._prefill_shapes.add(("chunk", self.block_size))
+            at = self.attr
+            tc0 = self.clock.now() if at.enabled else 0.0
             with self.tracer.span(self._slot_track(i), "chunk",
                                   rid=r.rid, chunk=c):
                 logits, sess.cache = self._prefill_chunk(
                     self.params, sess.cache, batch, np.int32(i),
                     np.int32(c), np.int32(s.prefill_pos))
             s.chunks_done += 1
+            if at.enabled:
+                cost = at.phase_cost(
+                    ("prefill_chunk", self.model.cfg.name, self.block_size),
+                    self._prefill_chunk,
+                    (self.params, sess.cache, batch, np.int32(i),
+                     np.int32(c), np.int32(s.prefill_pos)))
+                at.record_prefill(sess.metrics, self.tracer,
+                                  self._slot_track(i), t0=tc0,
+                                  t1=self.clock.now(), cost=cost)
         if self.prefix_cache:
             # publish every full prompt-prefix block (re-registering a hit
             # is a no-op; a COW'd boundary block supersedes the old entry).

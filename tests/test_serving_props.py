@@ -38,9 +38,12 @@ or reservations) — a stateful invariant the random traces exercise far
 harder than the fixed regression traces do.
 
 Three cells (paged single, Nx1 cluster, pressure cluster) additionally
-serve every drawn trace with a live :class:`Tracer` attached: the token
-assert against the *untraced* reference doubles as the observer-effect
-gate (tracing must never perturb scheduling or sampling), and the
+serve every drawn trace with a live :class:`Tracer` *and* a shared
+:class:`Attributor` attached: the token assert against the untraced,
+unattributed reference doubles as the observer-effect gate (neither
+tracing nor roofline attribution may perturb scheduling or sampling —
+attribution costs come from a separate AOT lowering, never the serving
+executables), and the
 recorded event stream must be lifecycle-well-formed
 (:func:`validate_lifecycle`: an admit precedes the first decode, every
 preempt is followed by a requeue or abort, per-request block
@@ -57,8 +60,8 @@ import pytest
 
 from repro.configs import smoke_config
 from repro.models import build_model
-from repro.serving import (NULL_TRACER, ClusterEngine, Request, ServeEngine,
-                           Tracer, validate_lifecycle)
+from repro.serving import (NULL_ATTR, NULL_TRACER, Attributor, ClusterEngine,
+                           Request, ServeEngine, Tracer, validate_lifecycle)
 
 from helpers import HAS_HYPOTHESIS, given, settings, st
 
@@ -156,6 +159,12 @@ def _draw_trace(rng: np.random.Generator, vocab: int):
 TRACED_CELLS = {"paged-continuous", "cluster-Nx1-round_robin",
                 "cluster-2x2-pressure"}
 
+# one shared attributor for every traced example: the cost memo persists
+# across examples (one AOT lowering per compiled shape for the whole
+# run), and the token assert against the unattributed reference extends
+# the observer-effect property to attribution
+_ATTR = Attributor()
+
 
 def _check_conformance(harness, seed: int):
     cfg, engines = harness
@@ -177,13 +186,15 @@ def _check_conformance(harness, seed: int):
         tracer = Tracer() if name in TRACED_CELLS else None
         if tracer is not None:
             eng.set_tracer(tracer)
+            eng.set_attributor(_ATTR)
         try:
             got = eng.generate(reqs, key=key)
         finally:
             if tracer is not None:
-                # engines are module-scoped: restore the no-op default so
-                # later examples/tests run untraced
+                # engines are module-scoped: restore the no-op defaults so
+                # later examples/tests run untraced and unattributed
                 eng.set_tracer(NULL_TRACER)
+                eng.set_attributor(NULL_ATTR)
         if tracer is not None:
             validate_lifecycle(tracer.events())
         for a, b in zip(ref, got):

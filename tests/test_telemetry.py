@@ -157,6 +157,66 @@ def test_chrome_trace_schema(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# check_trace: decode round-trip, lifecycle gate, roofline gate
+# ---------------------------------------------------------------------------
+
+def _lifecycle_tracer(*, admit=True, roofline=False):
+    """A minimal well-formed single-request trace (optionally broken by
+    dropping the admission, optionally carrying a roofline counter)."""
+    clock = FakeClock(start=1.0, tick=0.5)
+    tr = Tracer(clock=clock)
+    if admit:
+        tr.instant("slot0", "admit", rid=0)
+    tr.instant("slot0", "kv_alloc", rid=0, n=2)
+    with tr.span("engine", "decode", rid=0):
+        pass
+    if roofline:
+        tr.counter("engine", "roofline", flops_pct=1.5, bytes_pct=40.0)
+    tr.instant("slot0", "finish", rid=0)
+    tr.instant("slot0", "kv_free", rid=0, n=2)
+    return tr
+
+
+def test_decode_events_round_trips_export():
+    """Exported Chrome rows decode back into Event objects that pass the
+    same lifecycle check as the live stream: tids map back to tracks via
+    thread_name metadata, µs drop back to seconds, args survive."""
+    tr = _lifecycle_tracer(roofline=True)
+    live = tr.events()
+    decoded = check_trace.decode_events(tr.chrome_trace()["traceEvents"])
+    assert len(decoded) == len(live)
+    for a, b in zip(live, decoded):
+        assert (a.ph, a.track, a.name) == (b.ph, b.track, b.name)
+        assert b.ts == pytest.approx(a.ts)
+        assert b.dur == pytest.approx(a.dur)
+        assert b.args == a.args
+    validate_lifecycle(decoded)
+
+
+def test_check_trace_catches_lifecycle_violation(tmp_path):
+    """A decode with no admission passes every schema check but must
+    fail the decoded lifecycle pass — the exported trace is held to the
+    same contract as the in-process stream."""
+    tr = _lifecycle_tracer(admit=False)
+    path = tmp_path / "bad.json"
+    tr.export(path)
+    problems = check_trace.validate(path)
+    assert any(p.startswith("lifecycle:") for p in problems), problems
+    # --skip-lifecycle demotes it back to a schema-only pass
+    assert check_trace.validate(path, lifecycle=False) == []
+
+
+def test_check_trace_require_roofline(tmp_path):
+    plain, attr = tmp_path / "plain.json", tmp_path / "attr.json"
+    _lifecycle_tracer().export(plain)
+    _lifecycle_tracer(roofline=True).export(attr)
+    assert check_trace.validate(attr, require_roofline=True) == []
+    problems = check_trace.validate(plain, require_roofline=True)
+    assert any("roofline" in p for p in problems), problems
+    assert check_trace.validate(plain) == []   # not required by default
+
+
+# ---------------------------------------------------------------------------
 # Engine integration
 # ---------------------------------------------------------------------------
 

@@ -14,7 +14,22 @@ Validates the Perfetto-loadable traces emitted by
   * ``--require-flow`` — at least one flow exists and every flow id's
     starts (``s``) match its ends (``f``);
   * ``--require-pool`` — the block-pool watermark counter (``blocks``)
-    is present.
+    is present;
+  * ``--require-roofline`` — the attribution counter track
+    (``roofline``; achieved-vs-peak percent series, see
+    docs/observability.md) is present;
+  * unless ``--skip-lifecycle``: the events are decoded back into the
+    host-side representation and run through the same
+    ``validate_lifecycle`` conformance check the property suite applies
+    to in-process streams (admits precede decodes, preempts answered,
+    per-request KV acquisitions balance releases) — so an exported
+    trace is held to the identical lifecycle contract as a live one,
+    in one validation path instead of two.
+
+``validate_lifecycle`` is imported from
+``src/repro/serving/telemetry.py`` by file path: that module is
+deliberately stdlib-only, so this tool stays runnable before any heavy
+dependency is installed.
 
 Exit status is the number of problems found; problems print as
 ``path: message`` so CI logs can jump to them.
@@ -23,6 +38,7 @@ from __future__ import annotations
 
 import argparse
 import collections
+import importlib.util
 import json
 import pathlib
 import re
@@ -44,9 +60,74 @@ _PH_FIELDS = {
 }
 
 
+def _load_telemetry():
+    """Import ``repro.serving.telemetry`` by file path (stdlib-only by
+    design — see module doc), without touching the package __init__
+    (which pulls in the model stack)."""
+    name = "_check_trace_telemetry"
+    if name in sys.modules:
+        return sys.modules[name]
+    here = pathlib.Path(__file__).resolve().parent
+    src = here.parent / "src" / "repro" / "serving" / "telemetry.py"
+    spec = importlib.util.spec_from_file_location(name, src)
+    mod = importlib.util.module_from_spec(spec)
+    # dataclass processing resolves cls.__module__ through sys.modules,
+    # so the module must be registered before exec
+    sys.modules[name] = mod
+    try:
+        spec.loader.exec_module(mod)
+    except BaseException:
+        del sys.modules[name]
+        raise
+    return mod
+
+
+def decode_events(events: list[dict], telemetry=None) -> list:
+    """Rebuild host-side telemetry ``Event`` objects from exported
+    Chrome rows (the inverse of ``Tracer.chrome_trace``): thread_name
+    metadata maps tids back to track strings, timestamps and durations
+    drop from microseconds back to seconds, flow ids come off ``id``.
+    Metadata rows are skipped; unknown phases are ignored (the schema
+    pass reports those)."""
+    tel = telemetry if telemetry is not None else _load_telemetry()
+    tracks = {}
+    for ev in events:
+        if not isinstance(ev, dict):
+            continue
+        if ev.get("ph") == "M" and ev.get("name") == "thread_name":
+            tracks[(ev.get("pid"), ev.get("tid"))] = \
+                (ev.get("args") or {}).get("name", "")
+    out = []
+    for ev in events:
+        if not isinstance(ev, dict):
+            continue
+        ph = ev.get("ph")
+        if ph not in ("X", "i", "I", "C", "s", "f"):
+            continue
+        track = tracks.get((ev.get("pid"), ev.get("tid")), "")
+        name = ev.get("name", "")
+        ts = float(ev.get("ts", 0.0)) / 1e6
+        if ph == "X":
+            out.append(tel.Event("X", track, name, ts,
+                                 float(ev.get("dur", 0.0)) / 1e6,
+                                 ev.get("args") or {}))
+        elif ph in ("i", "I"):
+            out.append(tel.Event("i", track, name, ts, 0.0,
+                                 ev.get("args") or {}))
+        elif ph == "C":
+            out.append(tel.Event("C", track, name, ts, 0.0,
+                                 ev.get("args") or {}))
+        else:                       # "s" / "f"
+            out.append(tel.Event(ph, track, name, ts, 0.0, {},
+                                 str(ev.get("id", ""))))
+    return out
+
+
 def validate(path: pathlib.Path, *, min_replica_tracks: int = 0,
              require_flow: bool = False,
-             require_pool: bool = False) -> list[str]:
+             require_pool: bool = False,
+             require_roofline: bool = False,
+             lifecycle: bool = True) -> list[str]:
     """Return the list of problems with the trace at ``path``."""
     problems: list[str] = []
     try:
@@ -64,7 +145,7 @@ def validate(path: pathlib.Path, *, min_replica_tracks: int = 0,
     flow_ends: collections.Counter = collections.Counter()
     be_depth: collections.Counter = collections.Counter()
     n_spans = n_flows = 0
-    saw_pool_counter = False
+    saw_pool_counter = saw_roofline = False
 
     for i, ev in enumerate(events):
         if not isinstance(ev, dict):
@@ -102,8 +183,11 @@ def validate(path: pathlib.Path, *, min_replica_tracks: int = 0,
             be_depth[(ev.get("pid"), ev.get("tid"))] += 1
         elif ph == "E":
             be_depth[(ev.get("pid"), ev.get("tid"))] -= 1
-        elif ph == "C" and ev.get("name") == "blocks":
-            saw_pool_counter = True
+        elif ph == "C":
+            if ev.get("name") == "blocks":
+                saw_pool_counter = True
+            elif ev.get("name") == "roofline":
+                saw_roofline = True
 
     if n_spans == 0:
         problems.append("no complete ('X') span events")
@@ -129,6 +213,20 @@ def validate(path: pathlib.Path, *, min_replica_tracks: int = 0,
                         "flow arrows)")
     if require_pool and not saw_pool_counter:
         problems.append("no 'blocks' pool-watermark counter events")
+    if require_roofline and not saw_roofline:
+        problems.append("no 'roofline' attribution counter events "
+                        "(achieved-vs-peak track)")
+    if lifecycle:
+        # same contract as the in-process property checks, applied to
+        # the exported stream (schema problems above don't block this:
+        # decode skips what it cannot interpret)
+        try:
+            tel = _load_telemetry()
+            tel.validate_lifecycle(decode_events(events, tel))
+        except AssertionError as e:
+            problems.append(f"lifecycle: {e}")
+        except Exception as e:     # import/decoding failure is a problem
+            problems.append(f"lifecycle check unavailable: {e!r}")
     return problems
 
 
@@ -138,13 +236,19 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--min-replica-tracks", type=int, default=0)
     ap.add_argument("--require-flow", action="store_true")
     ap.add_argument("--require-pool", action="store_true")
+    ap.add_argument("--require-roofline", action="store_true")
+    ap.add_argument("--skip-lifecycle", action="store_true",
+                    help="schema checks only (for traces from foreign "
+                         "tools that don't follow the lifecycle taxonomy)")
     args = ap.parse_args(argv)
     n = 0
     for path in args.trace:
         problems = validate(path,
                             min_replica_tracks=args.min_replica_tracks,
                             require_flow=args.require_flow,
-                            require_pool=args.require_pool)
+                            require_pool=args.require_pool,
+                            require_roofline=args.require_roofline,
+                            lifecycle=not args.skip_lifecycle)
         for p in problems:
             print(f"{path}: {p}")
         if not problems:
