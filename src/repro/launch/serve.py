@@ -12,7 +12,11 @@ bucketing, and ``--replicas N`` (N > 1) serves through a multi-replica
 cluster instead: N narrow engines behind a ``--router`` policy — sharing
 one KV block pool with preemption under pool pressure for paged
 families, per-replica slot state for scan families (see
-repro.serving.cluster).
+repro.serving.cluster).  ``--driver threaded`` steps the cluster's
+replicas on worker threads (overlapped dispatch, byte-identical
+tokens); ``--stream`` prints every token the moment it is sampled
+through the streaming generator API instead of waiting for full
+completions.
 """
 from __future__ import annotations
 
@@ -24,8 +28,8 @@ import jax
 
 from ..configs import get_config, list_archs, smoke_config
 from ..models import build_model
-from ..serving import (ROUTER_POLICIES, Attributor, ClusterEngine, Request,
-                       ServeEngine, Tracer)
+from ..serving import (DRIVERS, ROUTER_POLICIES, Attributor, ClusterEngine,
+                       Request, ServeEngine, Tracer)
 
 
 def main():
@@ -69,6 +73,16 @@ def main():
     ap.add_argument("--router", default="round_robin",
                     choices=list(ROUTER_POLICIES),
                     help="cluster request-routing policy (--replicas > 1)")
+    ap.add_argument("--driver", default="sequential",
+                    choices=list(DRIVERS),
+                    help="cluster step driver (--replicas > 1): "
+                         "'sequential' steps replicas in one "
+                         "deterministic loop, 'threaded' overlaps them "
+                         "on worker threads (same tokens either way)")
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as they are sampled (the "
+                         "streaming generator API) instead of waiting "
+                         "for each request to finish")
     ap.add_argument("--hysteresis", type=int, default=4,
                     help="cluster anti-thrash guard: a preempted request "
                          "is not re-admitted for this many scheduler "
@@ -128,8 +142,12 @@ def main():
                             admission=args.admission or "overcommit",
                             preempt_hysteresis=args.hysteresis,
                             prefix_cache=args.prefix_cache,
+                            driver=args.driver,
                             tracer=tracer, attribution=attribution)
     else:
+        if args.driver != "sequential":
+            ap.error("--driver threaded needs a cluster (--replicas > 1);"
+                     " a single engine has nothing to overlap")
         eng = ServeEngine(model, params, max_batch=args.max_batch,
                           cache_len=args.cache_len, mode=args.mode,
                           extra_inputs=extra,
@@ -142,9 +160,24 @@ def main():
     reqs = [Request([int(t) % cfg.vocab_size for t in p.split()],
                     args.max_new, args.temperature, rid=i)
             for i, p in enumerate(args.prompts)]
-    for r in eng.generate(reqs):
-        print(f"[serve] rid={r.rid} ttft={r.prefill_ms:.1f}ms "
-              f"decode={r.decode_ms_per_tok:.1f}ms/tok tokens={r.tokens}")
+    if args.stream:
+        if args.mode == "lockstep":
+            ap.error("--stream needs the continuous scheduler (tokens "
+                     "only exist one request at a time under lockstep)")
+        # the deployment-shaped loop: consume the generator as tokens
+        # land, print completions as their final token arrives
+        streamed: dict[int, list[int]] = {}
+        for ev in eng.stream(reqs):
+            streamed.setdefault(ev.rid, []).append(ev.token)
+            print(f"[stream] rid={ev.rid} i={ev.index} token={ev.token}"
+                  f"{' (final)' if ev.final else ''}")
+        for rid in sorted(streamed):
+            print(f"[serve] rid={rid} tokens={streamed[rid]}")
+    else:
+        for r in eng.generate(reqs):
+            print(f"[serve] rid={r.rid} ttft={r.prefill_ms:.1f}ms "
+                  f"decode={r.decode_ms_per_tok:.1f}ms/tok "
+                  f"tokens={r.tokens}")
     s = eng.last_stats
     paged = (f" block_util_peak={s.block_util_peak:.2f}"
              f" preempted={s.preempted} requeued={s.requeued}"

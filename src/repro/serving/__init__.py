@@ -7,6 +7,12 @@
 * :class:`ClusterEngine` — N replicas behind a router; paged families
   share one :class:`BlockAllocator` pool with preemption under
   :class:`PoolPressure`, scan families run per-replica slot state.
+  Two drivers (``DRIVERS``): a deterministic sequential loop and a
+  threaded event loop overlapping replica dispatch; byte-identical
+  tokens either way.
+* streaming — ``ServeEngine.stream`` / ``ClusterEngine.stream`` yield
+  :class:`TokenEvent` rows as tokens are sampled; ``generate`` takes an
+  ``on_token`` callback for push-style consumers.
 * telemetry — :class:`Tracer`/:class:`NullTracer` request-lifecycle
   tracing (Chrome-trace/Perfetto export), the :class:`MetricsRegistry`
   percentile metrics every :class:`EngineStats` is derived from, and
@@ -33,8 +39,8 @@ changes tokens.  The full scheduler matrix and knob reference live in
 """
 from .attribution import (NULL_ATTR, VERDICTS, Attributor, MachineSpec,
                           NullAttributor, PhaseCost, dominant_verdict)
-from .cluster import ROUTER_POLICIES, ClusterEngine
-from .engine import EngineStats, Request, Result, ServeEngine
+from .cluster import DRIVERS, ROUTER_POLICIES, ClusterEngine
+from .engine import EngineStats, Request, Result, ServeEngine, TokenEvent
 from .kvcache import (BlockAllocator, BlockPoolStats, PoolPressure,
                       blocks_needed, prefix_chain_keys)
 from .telemetry import (MONOTONIC, NULL_TRACER, FakeClock, MetricsRegistry,

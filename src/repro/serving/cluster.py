@@ -68,6 +68,25 @@ of the memory system.  The serving analog built here:
   the pressure that evicted it, thrashing admit → preempt → admit with a
   wasted re-prefill per bounce.
 
+* two **drivers** execute the schedule.  ``driver="sequential"``
+  (default) steps the replicas round-robin in one Python loop — fully
+  deterministic, the reference the conformance suite gates on.
+  ``driver="threaded"`` runs each replica in its own worker thread:
+  JAX dispatch releases the GIL, so N independent ``session_step``
+  launches overlap — the serving twin of the paper's N concurrent
+  issue streams (§7: eight 2-lane cores beat one 16-lane core because
+  issue is parallel).  A coordinator (the calling thread) owns the
+  global FIFO queue and all routing/preemption decisions; workers own
+  *all* session mutation on their replica (thread affinity — see
+  ``engine.py``'s session-API notes) and talk to the coordinator over
+  per-replica command queues + one shared event queue.  ``PoolPressure``
+  is surfaced to the coordinator as an event (victim picking needs a
+  consistent cluster view) and resolved by a targeted preempt command;
+  the pressured worker blocks until the coordinator confirms the blocks
+  are freed.  Because sampling is request-id-keyed, the two drivers are
+  **byte-identical** (asserted across the conformance matrix) — only
+  wall-clock and timing telemetry differ.
+
 Device-memory caveat: each replica's device-side block pool is sized to
 the full shared pool so that the shared allocator's block ids index it
 directly; block *accounting* (capacity, admission, preemption, the
@@ -78,15 +97,24 @@ threaded through the replicas' jitted decode steps is an open item.
 from __future__ import annotations
 
 import collections
+import queue as queue_mod
+import threading
 
 import jax
 
 from ..models.model import Model
-from .engine import EngineStats, Request, Result, ServeEngine
+from .engine import (EngineStats, Request, Result, ServeEngine,
+                     _stream_events)
 from .kvcache import BlockAllocator, PoolPressure, blocks_needed
 from .telemetry import MONOTONIC, NULL_TRACER, MetricsRegistry
 
 ROUTER_POLICIES = ("round_robin", "least_loaded", "shortest_queue")
+DRIVERS = ("sequential", "threaded")
+
+#: Coordinator-side guard against a wedged worker: no worker event for
+#: this long means a protocol bug (a healthy step, even a first-call
+#: compile, lands well inside it) - fail loudly instead of hanging CI.
+_EVENT_TIMEOUT_S = 300.0
 
 
 class ClusterEngine:
@@ -104,6 +132,16 @@ class ClusterEngine:
     (default; preemption resolves pool pressure) or "reserve"; ignored
     by the dense layout, which has no pool to overcommit.  ``pool`` is
     the shared BlockAllocator (None for dense clusters).
+
+    driver: one of ``DRIVERS`` — "sequential" (default) steps replicas
+    in one deterministic loop; "threaded" overlaps them on worker
+    threads (module doc).  Tokens are byte-identical either way;
+    ``generate``/``stream`` take a per-call override.  Under the
+    threaded driver ``preempt_hysteresis`` counts *cluster-wide step
+    completions* rather than scheduler rounds — with N active replicas
+    the cool-down elapses ~N× faster in wall terms, which preserves its
+    anti-thrash intent (the survivors retire work meanwhile) without a
+    cross-thread round barrier.
 
     preempt_hysteresis: anti-thrash guard — a preempted request is not
     re-admissible before ``k`` scheduler rounds have passed since its
@@ -143,10 +181,13 @@ class ClusterEngine:
                  admission: str = "overcommit",
                  preempt_hysteresis: int = 4,
                  prefix_cache: bool = False,
+                 driver: str = "sequential",
                  tracer=None, clock=None, attribution=None):
         if router not in ROUTER_POLICIES:
             raise ValueError(f"router={router!r}: pick one of "
                              f"{ROUTER_POLICIES}")
+        if driver not in DRIVERS:
+            raise ValueError(f"driver={driver!r}: pick one of {DRIVERS}")
         if replicas < 1 or total_slots % replicas:
             raise ValueError(
                 f"total_slots={total_slots} must be a positive multiple of "
@@ -164,6 +205,7 @@ class ClusterEngine:
             raise ValueError(
                 f"preempt_hysteresis={preempt_hysteresis} must be >= 0")
         self.router = router
+        self.driver = driver
         self.total_slots = total_slots
         self.kv_layout = kv_layout
         self.preempt_hysteresis = preempt_hysteresis
@@ -248,6 +290,10 @@ class ClusterEngine:
                 if e in cands:
                     self._rr = (self._rr + off + 1) % n
                     return e
+            raise AssertionError(
+                "round_robin scanned every replica without hitting a "
+                "candidate despite cands being non-empty - routing "
+                "invariant broken")
         if self.router == "least_loaded":
             return min(cands, key=lambda e: (e.session_active,
                                              self.engines.index(e)))
@@ -291,7 +337,20 @@ class ClusterEngine:
     # Public API.
     # ------------------------------------------------------------------
 
-    def generate(self, requests: list[Request], key=None) -> list[Result]:
+    def generate(self, requests: list[Request], key=None, on_token=None,
+                 driver: str | None = None) -> list[Result]:
+        """Run ``requests`` to completion across the cluster.
+
+        ``on_token`` streams every sampled token as a
+        :class:`repro.serving.engine.TokenEvent` the moment it exists;
+        under the threaded driver the callback fires from replica worker
+        threads (possibly concurrently), so it must be thread-safe —
+        ``stream`` wraps this in a queue for the common case.  ``driver``
+        overrides the constructor's choice for this call ("sequential"
+        or "threaded"); tokens are byte-identical either way."""
+        driver = self.driver if driver is None else driver
+        if driver not in DRIVERS:
+            raise ValueError(f"driver={driver!r}: pick one of {DRIVERS}")
         key = key if key is not None else jax.random.key(0)
         requests = list(requests)
         todo = [(i, r) for i, r in enumerate(requests)
@@ -308,91 +367,17 @@ class ClusterEngine:
         # every replica gets the same base key: sampling streams are keyed
         # by request id, so placement cannot change sampled outputs
         for e in self.engines:
-            e.begin_session(key)
-        tr = self.tracer
+            e.begin_session(key, on_token)
         t_start = self.clock.now()
         # cluster-level metrics (merged with the replicas' at aggregate):
         # scheduler-loop counters the engines cannot see
         cm = MetricsRegistry()
-        queue = collections.deque(
-            (seq, order, r, 0, t_start) for seq, (order, r)
-            in enumerate(todo))
         out: list[Result | None] = [None] * len(todo)
-        admit_seq = 0
-        rounds = 0
         try:
-            while queue or any(e.session_active for e in self.engines):
-                # route: FIFO head into a replica with slot + pool headroom
-                while queue:
-                    seq, order, r, ready, enq_t = queue[0]
-                    if ready > rounds and any(e.session_active
-                                              for e in self.engines):
-                        # anti-thrash hysteresis: a fresh victim waits out
-                        # its cool-down (head-of-line: nothing skips it);
-                        # waived when the cluster is idle — no live request
-                        # can be causing pressure then
-                        cm.counter("hysteresis_wait_rounds").inc()
-                        if tr.enabled:
-                            tr.instant("cluster", "hysteresis_wait",
-                                       rid=r.rid,
-                                       rounds_left=ready - rounds)
-                        break
-                    e = self._route(r)
-                    if e is None:
-                        break
-                    queue.popleft()
-                    if tr.enabled:
-                        tr.instant("cluster", "route", rid=r.rid,
-                                   replica=e.owner, policy=self.router)
-                    # paged admission always defers to session_step, but a
-                    # dense (scan-family) admission runs the prefill here
-                    # and can satisfy a 1-token budget on the spot
-                    res = e.session_admit(r, tag=seq, extra_row=order,
-                                          admit_seq=admit_seq,
-                                          enqueue_t=enq_t)
-                    if res is not None:
-                        out[seq] = res
-                    admit_seq += 1
-                stepped = False
-                for e in self.engines:
-                    if e.session_active == 0:
-                        continue      # a drained replica skips its step
-                    while True:
-                        try:
-                            finished = e.session_step()
-                            break
-                        except PoolPressure as p:
-                            victim = self._pick_victim(e, p.slot)
-                            if victim is None:
-                                raise   # nothing to evict: genuine OOM
-                            ve, vi = victim
-                            tag, r2 = ve.session_preempt(vi)
-                            if tr.enabled:
-                                tr.instant("cluster", "preempt_pick",
-                                           rid=r2.rid, replica=ve.owner,
-                                           slot=vi,
-                                           pressured=e.owner)
-                                tr.instant("cluster", "requeue",
-                                           rid=r2.rid,
-                                           ready_round=(
-                                               rounds
-                                               + self.preempt_hysteresis))
-                            self._requeue(
-                                queue,
-                                (tag, todo[tag][0], r2,
-                                 rounds + self.preempt_hysteresis,
-                                 self.clock.now()))
-                    for tag, res in finished:
-                        out[tag] = res
-                    stepped = True
-                rounds += 1
-                if not stepped and queue:
-                    # no replica active and the head cannot be admitted:
-                    # impossible once check_request passed (an idle cluster
-                    # has every block free and waives the hysteresis), so
-                    # fail loudly over spinning
-                    raise RuntimeError(
-                        "cluster stalled with a non-empty queue")
+            if driver == "threaded":
+                self._drive_threaded(todo, out, cm, t_start)
+            else:
+                self._drive_sequential(todo, out, cm, t_start)
         except BaseException:
             for e in self.engines:
                 e.session_abort()
@@ -404,6 +389,408 @@ class ClusterEngine:
         for (i, _), res in zip(todo, out):
             results[i] = res
         return results
+
+    def stream(self, requests: list[Request], key=None,
+               driver: str | None = None):
+        """Streaming ``generate``: a generator yielding
+        :class:`repro.serving.engine.TokenEvent` rows as replicas sample
+        them.  Per-rid events arrive in index order; cross-request
+        interleaving follows the schedule (and, under the threaded
+        driver, thread timing).  The underlying ``generate`` runs on a
+        background thread; exhaust the generator (or let an exception
+        propagate) before reusing the engine."""
+        return _stream_events(
+            lambda cb: self.generate(requests, key=key, on_token=cb,
+                                     driver=driver))
+
+    # ------------------------------------------------------------------
+    # Sequential driver: replicas stepped round-robin in one loop.
+    # ------------------------------------------------------------------
+
+    def _drive_sequential(self, todo, out, cm, t_start) -> None:
+        tr = self.tracer
+        queue = collections.deque(
+            (seq, order, r, 0, t_start) for seq, (order, r)
+            in enumerate(todo))
+        admit_seq = 0
+        rounds = 0
+        while queue or any(e.session_active for e in self.engines):
+            # route: FIFO head into a replica with slot + pool headroom
+            while queue:
+                seq, order, r, ready, enq_t = queue[0]
+                if ready > rounds and any(e.session_active
+                                          for e in self.engines):
+                    # anti-thrash hysteresis: a fresh victim waits out
+                    # its cool-down (head-of-line: nothing skips it);
+                    # waived when the cluster is idle — no live request
+                    # can be causing pressure then
+                    cm.counter("hysteresis_wait_rounds").inc()
+                    if tr.enabled:
+                        tr.instant("cluster", "hysteresis_wait",
+                                   rid=r.rid,
+                                   rounds_left=ready - rounds)
+                    break
+                e = self._route(r)
+                if e is None:
+                    break
+                queue.popleft()
+                if tr.enabled:
+                    tr.instant("cluster", "route", rid=r.rid,
+                               replica=e.owner, policy=self.router)
+                # paged admission always defers to session_step, but a
+                # dense (scan-family) admission runs the prefill here
+                # and can satisfy a 1-token budget on the spot
+                res = e.session_admit(r, tag=seq, extra_row=order,
+                                      admit_seq=admit_seq,
+                                      enqueue_t=enq_t)
+                if res is not None:
+                    out[seq] = res
+                admit_seq += 1
+            stepped = False
+            for e in self.engines:
+                if e.session_active == 0:
+                    continue      # a drained replica skips its step
+                while True:
+                    try:
+                        finished = e.session_step()
+                        break
+                    except PoolPressure as p:
+                        victim = self._pick_victim(e, p.slot)
+                        if victim is None:
+                            raise   # nothing to evict: genuine OOM
+                        ve, vi = victim
+                        tag, r2 = ve.session_preempt(vi)
+                        if tr.enabled:
+                            tr.instant("cluster", "preempt_pick",
+                                       rid=r2.rid, replica=ve.owner,
+                                       slot=vi,
+                                       pressured=e.owner)
+                            tr.instant("cluster", "requeue",
+                                       rid=r2.rid,
+                                       ready_round=(
+                                           rounds
+                                           + self.preempt_hysteresis))
+                        self._requeue(
+                            queue,
+                            (tag, todo[tag][0], r2,
+                             rounds + self.preempt_hysteresis,
+                             self.clock.now()))
+                for tag, res in finished:
+                    out[tag] = res
+                stepped = True
+            rounds += 1
+            if not stepped and queue:
+                # no replica active and the head cannot be admitted:
+                # impossible once check_request passed (an idle cluster
+                # has every block free and waives the hysteresis), so
+                # fail loudly over spinning
+                raise RuntimeError(
+                    "cluster stalled with a non-empty queue")
+
+    # ------------------------------------------------------------------
+    # Threaded driver: one worker thread per replica + a coordinator.
+    #
+    # Protocol.  The coordinator (the calling thread) owns the global
+    # FIFO queue, all routing decisions, and all victim picks; workers
+    # own every session mutation on their replica (thread affinity).
+    # Commands flow coordinator -> worker over per-replica inboxes:
+    #
+    #   ("admit", item, admit_seq)  admit the queue item
+    #   ("preempt", rid)            evict rid if it is live here
+    #   ("resume",)                 retry the step after a pressure stop
+    #   ("stop",)                   drain and exit
+    #
+    # and events flow worker -> coordinator over one shared queue:
+    #
+    #   ("admitted", i, seq, rid, res)  admit done (res: dense instant
+    #                                   finish)
+    #   ("admit_retry", i, item, rid)   reserve lost a pool race
+    #                                   (MemoryError) - requeue it
+    #   ("step_done", i, finished, backlog)  one step retired
+    #   ("pressure", i, slot, rid)      PoolPressure: worker now blocks
+    #                                   on its inbox until "resume"
+    #   ("preempted", i, tag, req)      a "preempt" hit - blocks freed
+    #   ("preempt_miss", i, rid)        rid no longer live (finished in
+    #                                   flight) - coordinator re-picks
+    #   ("error", i, exc)               worker died; exc re-raises
+    #   ("stopped", i)                  worker exited
+    #
+    # The coordinator tracks slots_used per replica itself (+1 on admit
+    # dispatch, -1 on finish/instant-result/retry/preempt) so it never
+    # over-admits no matter how far a worker lags; engine.session_* reads
+    # from the coordinator are advisory only.  Pool races the tracking
+    # cannot see resolve through the protocol: a lost reserve returns as
+    # admit_retry, a lost block-grow as pressure -> coordinator-picked
+    # preempt -> resume.  Pressures are serviced one preempt at a time
+    # (outstanding_preempt) so each "preempted" event unambiguously
+    # resolves the pressure at the head of the pending deque.
+    # ------------------------------------------------------------------
+
+    def _drive_threaded(self, todo, out, cm, t_start) -> None:
+        tr = self.tracer
+        n = len(self.engines)
+        per_replica = self.total_slots // n
+        events: queue_mod.SimpleQueue = queue_mod.SimpleQueue()
+        inboxes = [queue_mod.SimpleQueue() for _ in range(n)]
+        workers = [
+            threading.Thread(target=self._replica_worker,
+                             name=f"cluster-replica{i}",
+                             args=(i, self.engines[i], inboxes[i], events),
+                             daemon=True)
+            for i in range(n)]
+        queue = collections.deque(
+            (seq, order, r, 0, t_start) for seq, (order, r)
+            in enumerate(todo))
+        slots_used = [0] * n      # admits dispatched minus retirements
+        backlog = [0] * n         # advisory decode-token backlog
+        # rid -> (replica, priority, admit_seq): the victim-pick view
+        assignment: dict[int, tuple[int, int, int]] = {}
+        pending = collections.deque()   # unresolved (replica, slot, rid)
+        state = {"admit_seq": 0, "inflight": 0, "rounds": 0, "done": 0,
+                 "outstanding": None}   # outstanding: (victim_rid, repl)
+
+        def service_pressure():
+            """Issue the next preempt for the pressure at the head of
+            ``pending`` (one at a time: each "preempted" event then
+            unambiguously resolves the head)."""
+            if state["outstanding"] is not None or not pending:
+                return
+            req_i, _slot, grow_rid = pending[0]
+            # never evict a request whose own growth is blocked waiting
+            # on us - preempting a requester just redoes its work
+            growers = {p[2] for p in pending}
+            cands = [(pr, -aseq, rid, vi)
+                     for rid, (vi, pr, aseq) in assignment.items()
+                     if rid not in growers]
+            if not cands:
+                raise RuntimeError(
+                    "pool pressure with nothing preemptible: genuine "
+                    "OOM (check_request should have made this "
+                    "impossible)")
+            _, _, vrid, vi = min(cands)
+            if tr.enabled:
+                tr.instant("cluster", "preempt_pick", rid=vrid,
+                           replica=vi, pressured=req_i)
+            state["outstanding"] = (vrid, vi)
+            inboxes[vi].put(("preempt", vrid))
+
+        def handle(ev):
+            kind = ev[0]
+            if kind == "admitted":
+                _, i, seq, rid, res = ev
+                state["inflight"] -= 1
+                if res is not None:
+                    # dense instant finish: the slot was never occupied
+                    out[seq] = res
+                    state["done"] += 1
+                    slots_used[i] -= 1
+                    assignment.pop(rid, None)
+            elif kind == "admit_retry":
+                _, i, item, rid = ev
+                state["inflight"] -= 1
+                slots_used[i] -= 1
+                backlog[i] -= (item[2].max_new_tokens
+                               - len(item[2].done))
+                assignment.pop(rid, None)
+                self._requeue(queue, item)
+            elif kind == "step_done":
+                _, i, finished, bk = ev
+                state["rounds"] += 1
+                backlog[i] = bk
+                for tag, res in finished:
+                    out[tag] = res
+                    state["done"] += 1
+                    slots_used[i] -= 1
+                    assignment.pop(res.rid, None)
+            elif kind == "pressure":
+                _, i, slot, rid = ev
+                pending.append((i, slot, rid))
+            elif kind == "preempted":
+                _, vi, tag, r2 = ev
+                slots_used[vi] -= 1
+                assignment.pop(r2.rid, None)
+                req_i, _slot, _rid = pending.popleft()
+                ready = state["rounds"] + self.preempt_hysteresis
+                if tr.enabled:
+                    tr.instant("cluster", "requeue", rid=r2.rid,
+                               ready_round=ready)
+                self._requeue(queue, (tag, todo[tag][0], r2, ready,
+                                      self.clock.now()))
+                state["outstanding"] = None
+                inboxes[req_i].put(("resume",))
+            elif kind == "preempt_miss":
+                # the pick finished in flight; its step_done was queued
+                # before this miss, so the re-pick sees it retired
+                state["outstanding"] = None
+            elif kind == "error":
+                raise ev[2]
+            # "stopped" outside shutdown: error event preceded it
+
+        try:
+            for w in workers:
+                w.start()
+            while state["done"] < len(todo):
+                # admission dispatch (mirrors the sequential head loop)
+                while queue:
+                    seq, order, r, ready, enq_t = queue[0]
+                    busy = state["inflight"] > 0 or any(slots_used)
+                    if ready > state["rounds"] and busy:
+                        cm.counter("hysteresis_wait_rounds").inc()
+                        if tr.enabled:
+                            tr.instant(
+                                "cluster", "hysteresis_wait", rid=r.rid,
+                                rounds_left=ready - state["rounds"])
+                        break
+                    i = self._route_threaded(r, slots_used, backlog,
+                                             per_replica)
+                    if i is None:
+                        break
+                    queue.popleft()
+                    if tr.enabled:
+                        tr.instant("cluster", "route", rid=r.rid,
+                                   replica=i, policy=self.router)
+                    slots_used[i] += 1
+                    backlog[i] += r.max_new_tokens - len(r.done)
+                    state["inflight"] += 1
+                    assignment[r.rid] = (i, r.priority,
+                                         state["admit_seq"])
+                    inboxes[i].put(("admit", (seq, order, r, ready,
+                                              enq_t),
+                                    state["admit_seq"]))
+                    state["admit_seq"] += 1
+                service_pressure()
+                if (queue and state["inflight"] == 0
+                        and not any(slots_used) and not pending):
+                    raise RuntimeError(
+                        "cluster stalled with a non-empty queue")
+                try:
+                    ev = events.get(timeout=_EVENT_TIMEOUT_S)
+                except queue_mod.Empty:
+                    raise RuntimeError(
+                        f"threaded driver: no worker event for "
+                        f"{_EVENT_TIMEOUT_S:.0f}s - worker wedged?")
+                handle(ev)
+                while True:
+                    try:
+                        handle(events.get_nowait())
+                    except queue_mod.Empty:
+                        break
+        finally:
+            for ib in inboxes:
+                ib.put(("stop",))
+            for w in workers:
+                w.join(timeout=60.0)
+
+    def _route_threaded(self, r: Request, slots_used, backlog,
+                        per_replica: int) -> int | None:
+        """Threaded-driver routing over the coordinator's *tracked* slot
+        counts (a worker may not have processed a dispatched admit yet,
+        so the engines' own slot views lag); ``session_can_admit`` is
+        the pool-headroom test, safe to read cross-thread (the allocator
+        is locked) and advisory - a lost race surfaces as admit_retry or
+        pressure, never as corruption."""
+        cands = [i for i, e in enumerate(self.engines)
+                 if slots_used[i] < per_replica
+                 and e.session_can_admit(r)]
+        if not cands:
+            return None
+        if self.router == "round_robin":
+            n = len(self.engines)
+            for off in range(n):
+                i = (self._rr + off) % n
+                if i in cands:
+                    self._rr = (self._rr + off + 1) % n
+                    return i
+            raise AssertionError(
+                "round_robin scanned every replica without hitting a "
+                "candidate despite cands being non-empty - routing "
+                "invariant broken")
+        if self.router == "least_loaded":
+            return min(cands, key=lambda i: (slots_used[i], i))
+        return min(cands, key=lambda i: (backlog[i], i))
+
+    def _replica_worker(self, i: int, engine: ServeEngine, inbox,
+                        events) -> None:
+        """Worker loop: the single thread that mutates replica ``i``'s
+        session.  Blocks on the inbox while drained; while live, drains
+        commands then steps.  PoolPressure turns into a ("pressure")
+        event plus an inbox wait — the coordinator preempts a victim
+        somewhere (possibly here, handled in the wait loop) and sends
+        ("resume",) once blocks are freed."""
+        stop = False
+        try:
+            while not stop:
+                cmds = []
+                if engine.session_active == 0:
+                    cmds.append(inbox.get())
+                while True:
+                    try:
+                        cmds.append(inbox.get_nowait())
+                    except queue_mod.Empty:
+                        break
+                for cmd in cmds:
+                    stop = self._worker_cmd(engine, i, cmd, events) or stop
+                if stop or engine.session_active == 0:
+                    continue
+                while True:
+                    try:
+                        finished = engine.session_step()
+                        break
+                    except PoolPressure as p:
+                        rid = next((s.req.rid for j, s
+                                    in engine.session_slots()
+                                    if j == p.slot), -1)
+                        events.put(("pressure", i, p.slot, rid))
+                        while True:
+                            cmd = inbox.get()
+                            if cmd[0] == "resume":
+                                break
+                            stop = (self._worker_cmd(engine, i, cmd,
+                                                     events) or stop)
+                            if stop:
+                                break
+                        if stop:
+                            break
+                if stop:
+                    continue
+                events.put(("step_done", i, finished,
+                            engine.session_backlog()))
+        except BaseException as e:
+            events.put(("error", i, e))
+        finally:
+            events.put(("stopped", i))
+
+    def _worker_cmd(self, engine: ServeEngine, i: int, cmd,
+                    events) -> bool:
+        """Execute one coordinator command on the worker thread; returns
+        True on ("stop",)."""
+        kind = cmd[0]
+        if kind == "stop":
+            return True
+        if kind == "admit":
+            _, item, aseq = cmd
+            seq, order, r, _ready, enq_t = item
+            try:
+                res = engine.session_admit(r, tag=seq, extra_row=order,
+                                           admit_seq=aseq,
+                                           enqueue_t=enq_t)
+            except MemoryError:
+                # reserve-mode admission lost a pool race between the
+                # coordinator's headroom check and now; bounce it back
+                events.put(("admit_retry", i, item, r.rid))
+            else:
+                events.put(("admitted", i, seq, r.rid, res))
+        elif kind == "preempt":
+            _, rid = cmd
+            slot = next((j for j, s in engine.session_slots()
+                         if s.req.rid == rid), None)
+            if slot is None:
+                events.put(("preempt_miss", i, rid))
+            else:
+                tag, r2 = engine.session_preempt(slot)
+                events.put(("preempted", i, tag, r2))
+        # ("resume",) outside a pressure wait: stale, ignore
+        return False
 
     def _aggregate(self, wall: float, registries,
                    extra: MetricsRegistry | None = None) -> EngineStats:

@@ -127,6 +127,8 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import queue as queue_mod
+import threading
 from typing import Any
 
 import jax
@@ -182,6 +184,60 @@ class Result:
     tokens: list[int]
     prefill_ms: float = 0.0        # time-to-first-token for this request
     decode_ms_per_tok: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenEvent:
+    """One streamed token, emitted the moment it is sampled.
+
+    ``index`` is the token's position in the request's *full* output
+    stream (``Result.tokens``), so a client concatenating events in
+    per-rid index order reconstructs the byte-identical stream
+    ``generate`` would have returned.  Preemption is invisible here too:
+    a preempted request's already-emitted tokens ride along in
+    ``Request.done`` and are never re-emitted — emission resumes at
+    ``len(done)`` after re-admission.  ``final`` marks the request's
+    last token.
+
+    Emitted via the ``on_token`` callback (``begin_session`` /
+    ``generate``) or consumed through the pull-based ``stream``
+    generator.  In the threaded cluster driver the callback fires on
+    replica worker threads, so it must be thread-safe."""
+    rid: int
+    token: int
+    index: int
+    final: bool
+
+
+def _stream_events(run):
+    """Drive ``run(on_token_callback)`` on a background thread, yielding
+    the :class:`TokenEvent` rows it emits in order.  Shared by
+    ``ServeEngine.stream`` and ``ClusterEngine.stream``: the callback
+    just enqueues events (thread-safe — cluster workers may emit
+    concurrently), the consumer thread pulls them as they land.  An
+    exception from the run re-raises out of the generator after the
+    driver thread is joined."""
+    q: queue_mod.SimpleQueue = queue_mod.SimpleQueue()
+
+    def driver():
+        try:
+            run(q.put)
+            q.put(("done", None))
+        except BaseException as e:      # re-raised in the consumer
+            q.put(("error", e))
+
+    t = threading.Thread(target=driver, name="stream-driver", daemon=True)
+    t.start()
+    while True:
+        item = q.get()
+        if isinstance(item, TokenEvent):
+            yield item
+            continue
+        kind, payload = item
+        t.join()
+        if kind == "error":
+            raise payload
+        return
 
 
 @dataclasses.dataclass
@@ -354,6 +410,10 @@ class _Session:
     # is already released — a lost local would drop the Result for good);
     # the next successful session_step returns them
     finished_pending: list = dataclasses.field(default_factory=list)
+    # streaming: called with a TokenEvent for every token the moment it
+    # is sampled (None = no streaming).  Runs on whatever thread drives
+    # the session, so cluster-level callbacks must be thread-safe.
+    on_token: Any = None
 
 
 def _sample_rows(logits, temps, key, rids, tok_idx):
@@ -604,7 +664,12 @@ class ServeEngine:
     # Public API.
     # ------------------------------------------------------------------
 
-    def generate(self, requests: list[Request], key=None) -> list[Result]:
+    def generate(self, requests: list[Request], key=None,
+                 on_token=None) -> list[Result]:
+        """Run ``requests`` to completion and return their Results.
+        ``on_token`` (continuous mode only) streams every sampled token
+        as a :class:`TokenEvent` the moment it exists — see ``stream``
+        for the pull-based generator over the same events."""
         key = key if key is not None else jax.random.key(0)
         requests = list(requests)
         todo = [(i, r) for i, r in enumerate(requests)
@@ -624,8 +689,11 @@ class ServeEngine:
             for _, r in todo:
                 self.check_request(r)
         if self.mode == "continuous":
-            done = self._generate_continuous(todo, key)
+            done = self._generate_continuous(todo, key, on_token)
         else:
+            if on_token is not None:
+                raise ValueError("streaming (on_token) requires the "
+                                 "continuous scheduler")
             done = self._generate_lockstep(todo, key)
         # requests with an exhausted budget produce their prefix verbatim
         # and never occupy a slot; everything else went to the scheduler
@@ -746,9 +814,24 @@ class ServeEngine:
     # Stepwise session API (one continuous-batching run; ``generate``
     # drives it for the single-engine case, ClusterEngine interleaves
     # several engines' sessions over one shared pool).
+    #
+    # Thread affinity: an open session's state (_Session, slot arrays,
+    # device cache) is NOT internally locked — all session mutators
+    # (session_admit / session_step / session_preempt / session_abort /
+    # end_session) of one engine must be driven from a single thread at
+    # a time.  The threaded cluster driver honors this by pinning each
+    # engine to one worker thread and handing admissions/preemptions to
+    # that worker over a queue; only the *shared* BlockAllocator (its
+    # own lock) and the tracer (locked) are touched cross-thread.
+    # ``session_active`` and ``session_can_admit`` are safe advisory
+    # reads from other threads (a slot count and a pool-side check).
     # ------------------------------------------------------------------
 
-    def begin_session(self, key=None) -> None:
+    def begin_session(self, key=None, on_token=None) -> None:
+        """Open a stepwise session.  ``on_token``, when given, streams
+        every sampled token as a :class:`TokenEvent` the moment it
+        exists (called synchronously from the admitting/stepping
+        thread)."""
         if self.mode != "continuous":
             raise ValueError("stepwise sessions require the continuous "
                              "scheduler")
@@ -764,7 +847,8 @@ class ServeEngine:
             temps=np.zeros((bsz,), np.float32),
             rids=np.zeros((bsz,), np.int32),
             tok_idx=np.zeros((bsz,), np.int32),
-            metrics=MetricsRegistry(), t_start=self.clock.now())
+            metrics=MetricsRegistry(), t_start=self.clock.now(),
+            on_token=on_token)
 
     def _require_session(self) -> _Session:
         if self._sess is None:
@@ -796,11 +880,6 @@ class ServeEngine:
         return sum(s.req.max_new_tokens - len(s.req.done) - len(s.tokens)
                    for _, s in self.session_slots())
 
-    def session_ttfts(self) -> list[float]:
-        """First-admission TTFTs recorded so far (cluster aggregation)."""
-        sess = self._require_session()
-        return list(sess.metrics.histogram("ttft_ms").samples)
-
     def session_slot_steps(self) -> tuple[int, int]:
         """(busy, offered) slot-steps of the open session - offered counts
         max_batch lanes per launched decode step (cluster occupancy)."""
@@ -827,6 +906,14 @@ class ServeEngine:
         if self._admission == "overcommit":
             return self.allocator.n_avail >= 1
         return self.allocator.n_avail >= self._admit_block_need(r)
+
+    def _emit_token(self, sess: _Session, r: Request, tok: int,
+                    index: int) -> None:
+        """Stream one sampled token through the session's ``on_token``
+        callback (no-op without one)."""
+        if sess.on_token is not None:
+            sess.on_token(TokenEvent(r.rid, tok, index,
+                                     index + 1 >= r.max_new_tokens))
 
     def session_admit(self, r: Request, tag: int, extra_row: int = 0,
                       admit_seq: int | None = None,
@@ -866,19 +953,6 @@ class ServeEngine:
             prefill_pos = (self._n_prefix() + len(r.prompt) + len(r.done))
             self._check_budget(prefill_pos,
                                r.max_new_tokens - len(r.done), r.rid)
-            hits, boundary = self._prefix_hits(r)
-            reserve_left = 0
-            if self._admission == "reserve":
-                # promise the whole worst case up front (minus blocks
-                # admitted by reference, plus the boundary COW copy and
-                # any cached revivals — see _admit_block_need); every
-                # lazy allocation converts one promise into a live
-                # block, so growth can never fail
-                reserve_left = (self._worst_blocks(r) - len(hits)
-                                + int(boundary))
-                n_cached = sum(self.allocator.is_cached(b)
-                               for _, b in hits)
-                self.allocator.reserve(reserve_left + n_cached)
             if sess.cache is None:
                 if self._pcache is not None:
                     # prefix cache: the previous session's device pool is
@@ -891,22 +965,46 @@ class ServeEngine:
                         block_size=self.block_size,
                         max_blocks=self.max_blocks,
                         dtype=self.model.cache_dtype(self.params))
-            # apply the hits: reference each resident block (reviving
-            # cached ones) and install it in the slot's block table
-            taken: list[int] = []
-            for idx, (_, blk) in enumerate(hits):
-                if self.allocator.is_cached(blk):
-                    # reviving costs one allocatable block; under reserve
-                    # it was priced into the reservation above (and can
-                    # never fail); under overcommit the revived block is
-                    # itself part of n_free, so this never fails either
-                    self.allocator.take_cached(
-                        blk, self.owner,
-                        from_reservation=self._admission == "reserve")
-                else:
-                    self.allocator.incref(blk, self.owner)
+            # Resolve + charge the pool atomically: between a lookup and
+            # its incref/take_cached, a co-tenant replica's alloc in
+            # another thread could otherwise evict the cached block out
+            # from under us.  reserve() runs before any reference moves,
+            # so a MemoryError here (a lost admission race under the
+            # threaded driver) leaves the pool untouched and the
+            # admission can simply be retried.
+            with self.allocator.lock:
+                hits, boundary = self._prefix_hits(r)
+                reserve_left = 0
+                if self._admission == "reserve":
+                    # promise the whole worst case up front (minus blocks
+                    # admitted by reference, plus the boundary COW copy
+                    # and any cached revivals — see _admit_block_need);
+                    # every lazy allocation converts one promise into a
+                    # live block, so growth can never fail
+                    reserve_left = (self._worst_blocks(r) - len(hits)
+                                    + int(boundary))
+                    n_cached = sum(self.allocator.is_cached(b)
+                                   for _, b in hits)
+                    self.allocator.reserve(reserve_left + n_cached)
+                # reference each resident block (reviving cached ones)
+                taken: list[int] = []
+                for _, blk in hits:
+                    if self.allocator.is_cached(blk):
+                        # reviving costs one allocatable block; under
+                        # reserve it was priced into the reservation
+                        # above (and can never fail); under overcommit
+                        # the revived block is itself part of n_free, so
+                        # this never fails either
+                        self.allocator.take_cached(
+                            blk, self.owner,
+                            from_reservation=self._admission == "reserve")
+                    else:
+                        self.allocator.incref(blk, self.owner)
+                    taken.append(blk)
+            # install the (now unevictable) referenced blocks in the
+            # slot's block table — device-side, no pool lock needed
+            for idx, blk in enumerate(taken):
                 sess.cache = self._bt_set(sess.cache, slot, idx, blk)
-                taken.append(blk)
             h = len(taken)
             # a fully-covered prefill still re-runs its final chunk (the
             # engine needs its logits) behind the COW barrier; partial
@@ -997,6 +1095,7 @@ class ServeEngine:
             sess.metrics.histogram("ttft_ms").observe(ttft_ms)
         if r.first_ttft_ms is not None:
             ttft_ms = r.first_ttft_ms   # re-admission: keep the real TTFT
+        self._emit_token(sess, r, tok, len(r.done))
         s = _Slot(req=r, tag=tag, tokens=[tok], ttft_ms=ttft_ms,
                   admit_seq=admit_seq, prefill_pos=prefill_pos, admit_t=t0,
                   span_t0=t0, first_tok_t=t1)
@@ -1098,6 +1197,8 @@ class ServeEngine:
         for i in active:
             s = sess.slots[i]
             s.tokens.append(int(nxt[i]))
+            self._emit_token(sess, s.req, int(nxt[i]),
+                             len(s.req.done) + len(s.tokens) - 1)
             s.steps += 1
             s.decode_s += dt
             sess.toks[i, 0] = nxt[i]
@@ -1251,6 +1352,7 @@ class ServeEngine:
                      else ttft_ms)
         s.first_tok_t = t1
         s.tokens.append(tok)
+        self._emit_token(sess, r, tok, len(r.done))
         s.chunks_done = None            # prefill complete: decode from here
         if len(r.done) + 1 >= r.max_new_tokens:
             return self._finish(s)
@@ -1405,9 +1507,22 @@ class ServeEngine:
     # Continuous batching (slot pool + admission scheduler).
     # ------------------------------------------------------------------
 
-    def _generate_continuous(self, items, key) -> list[Result]:
+    def stream(self, requests: list[Request], key=None):
+        """Streaming ``generate``: a generator yielding
+        :class:`TokenEvent` rows as tokens are sampled (per-rid events
+        arrive in index order; cross-request interleaving follows the
+        scheduler).  The run itself executes on a background thread;
+        once the generator is exhausted ``last_stats``/``last_metrics``
+        hold the finished run's aggregates, and any engine exception
+        re-raises here.  Abandoning the generator early leaves the run
+        to finish in the background (daemon thread)."""
+        return _stream_events(
+            lambda cb: self.generate(requests, key=key, on_token=cb))
+
+    def _generate_continuous(self, items, key, on_token=None) \
+            -> list[Result]:
         """items: [(submission order, Request)]; results align with items."""
-        self.begin_session(key)
+        self.begin_session(key, on_token)
         queue = collections.deque(
             (seq, order, r) for seq, (order, r) in enumerate(items))
         results: list[Result | None] = [None] * len(items)

@@ -74,11 +74,24 @@ unreserved-free blocks; ``free`` is atomic (a rejected list mutates
 nothing); and after any ``generate`` — including one aborted by an
 exception — the pool drains to ``n_live == 0``, ``n_reserved == 0``,
 ``n_free == capacity``.
+
+**Thread safety**: every public method and property takes the
+allocator's internal re-entrant lock, so concurrent replicas (the
+threaded cluster driver steps each replica in its own worker thread)
+can alloc/free/register/lookup against the shared pool without torn
+state; ``check_integrity`` holds the same lock, so it always sees a
+consistent snapshot.  Compound check-then-act sequences (resolve prefix
+hits, reserve, then apply the hits) are made atomic by holding
+``allocator.lock`` across the whole sequence — the lock is re-entrant
+precisely so callers can wrap multiple calls.  Asserted by the
+multi-threaded stress variant of the allocator rule machine in
+``tests/test_kvcache.py``.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 from typing import Any
 
 import jax.numpy as jnp
@@ -156,7 +169,19 @@ class BlockAllocator:
         self.block_size = block_size
         self._policy: str | None = None
         self._tracer = NULL_TRACER
+        # Re-entrant: public methods call each other (alloc -> unreserve,
+        # alloc_n -> alloc, take_cached -> unreserve) and engines hold it
+        # across compound admission sequences.
+        self._lock = threading.RLock()
         self.reset()
+
+    @property
+    def lock(self) -> threading.RLock:
+        """The allocator's re-entrant lock.  Hold it across compound
+        check-then-act sequences (e.g. prefix-hit resolution followed by
+        ``reserve`` + ``take_cached``/``incref``) that must be atomic
+        against co-tenant engines in other threads."""
+        return self._lock
 
     # -- telemetry -----------------------------------------------------
 
@@ -190,21 +215,23 @@ class BlockAllocator:
 
     def reset(self) -> None:
         """Return every block to the free list and clear stats + index."""
-        # stacked so that pop() hands out 1, 2, 3, ... on a fresh pool
-        self._free = list(range(self.n_blocks - 1, 0, -1))
-        self._live: dict[int, list] = {}     # block id -> owners (multiset)
-        self._reserved = 0
-        self._peak = 0
-        # prefix cache: chain key -> (block id, writer owner); block id ->
-        # chain key (reverse, for eviction/unregister); LRU of refcount-0
-        # registered blocks (ordered oldest-first, still allocatable)
-        self._index: dict[Any, tuple[int, Any]] = {}
-        self._key_of: dict[int, Any] = {}
-        self._cached: collections.OrderedDict[int, None] = \
-            collections.OrderedDict()
+        with self._lock:
+            # stacked so that pop() hands out 1, 2, 3, ... on a fresh pool
+            self._free = list(range(self.n_blocks - 1, 0, -1))
+            self._live: dict[int, list] = {}  # block id -> owners (multiset)
+            self._reserved = 0
+            self._peak = 0
+            # prefix cache: chain key -> (block id, writer owner); block id
+            # -> chain key (reverse, for eviction/unregister); LRU of
+            # refcount-0 registered blocks (oldest-first, still allocatable)
+            self._index: dict[Any, tuple[int, Any]] = {}
+            self._key_of: dict[int, Any] = {}
+            self._cached: collections.OrderedDict[int, None] = \
+                collections.OrderedDict()
 
     def reset_peak(self) -> None:
-        self._peak = len(self._live)
+        with self._lock:
+            self._peak = len(self._live)
 
     # -- alloc / free --------------------------------------------------
 
@@ -217,25 +244,30 @@ class BlockAllocator:
         """Blocks allocatable right now: the raw free list plus cached
         (refcount-0, still prefix-indexed) blocks, which ``alloc`` evicts
         LRU-first once the free list is empty."""
-        return len(self._free) + len(self._cached)
+        with self._lock:
+            return len(self._free) + len(self._cached)
 
     @property
     def n_live(self) -> int:
-        return len(self._live)
+        with self._lock:
+            return len(self._live)
 
     @property
     def n_reserved(self) -> int:
-        return self._reserved
+        with self._lock:
+            return self._reserved
 
     @property
     def n_cached(self) -> int:
         """Refcount-0 blocks kept for prefix reuse (subset of n_free)."""
-        return len(self._cached)
+        with self._lock:
+            return len(self._cached)
 
     @property
     def n_avail(self) -> int:
         """Free blocks not spoken for by a standing reservation."""
-        return self.n_free - self._reserved
+        with self._lock:
+            return self.n_free - self._reserved
 
     def _pop_free(self) -> int:
         """Take a block off the raw free list, evicting the LRU cached
@@ -258,19 +290,20 @@ class BlockAllocator:
         the reservation count drops here); otherwise the allocation gates
         on ``n_avail`` so it can never eat a block promised to another
         request's lazy growth."""
-        budget = self.n_free if from_reservation else self.n_avail
-        if budget < 1:
-            raise MemoryError(
-                f"KV block pool exhausted ({self.capacity} blocks of "
-                f"{self.block_size} positions: {self.n_live} live, "
-                f"{self._reserved} reserved)")
-        blk = self._pop_free()
-        self._live[blk] = [owner]
-        self._peak = max(self._peak, len(self._live))
-        if from_reservation:
-            self.unreserve(1)
-        self._trace_watermark()
-        return blk
+        with self._lock:
+            budget = self.n_free if from_reservation else self.n_avail
+            if budget < 1:
+                raise MemoryError(
+                    f"KV block pool exhausted ({self.capacity} blocks of "
+                    f"{self.block_size} positions: {self.n_live} live, "
+                    f"{self._reserved} reserved)")
+            blk = self._pop_free()
+            self._live[blk] = [owner]
+            self._peak = max(self._peak, len(self._live))
+            if from_reservation:
+                self.unreserve(1)
+            self._trace_watermark()
+            return blk
 
     def alloc_n(self, n: int, owner=0, *,
                 from_reservation: bool = False) -> list[int]:
@@ -278,14 +311,15 @@ class BlockAllocator:
         ``n_avail`` unless the caller holds a matching reservation - an
         atomic admission must not consume blocks promised to another
         request's growth."""
-        budget = self.n_free if from_reservation else self.n_avail
-        if n > budget:
-            raise MemoryError(
-                f"KV block pool exhausted: need {n} blocks, "
-                f"{budget}/{self.capacity} "
-                + ("free" if from_reservation else "unreserved-free"))
-        return [self.alloc(owner, from_reservation=from_reservation)
-                for _ in range(n)]
+        with self._lock:
+            budget = self.n_free if from_reservation else self.n_avail
+            if n > budget:
+                raise MemoryError(
+                    f"KV block pool exhausted: need {n} blocks, "
+                    f"{budget}/{self.capacity} "
+                    + ("free" if from_reservation else "unreserved-free"))
+            return [self.alloc(owner, from_reservation=from_reservation)
+                    for _ in range(n)]
 
     def free(self, blocks, owner=0) -> None:
         """Drop one reference per listed block, atomically: the whole list
@@ -295,46 +329,50 @@ class BlockAllocator:
         list - unless it is prefix-registered, in which case it parks in
         the cached LRU (still indexed, still allocatable)."""
         blocks = list(blocks)
-        pending = collections.Counter()
-        for blk in blocks:
-            if blk not in self._live:
-                raise ValueError(
-                    f"free of block {blk} which is not live "
-                    "(double free or foreign id)")
-            pending[blk] += 1
-            if pending[blk] > self._live[blk].count(owner):
-                raise ValueError(
-                    f"free of block {blk} by owner {owner!r} which holds "
-                    f"{self._live[blk].count(owner)} of its "
-                    f"{len(self._live[blk])} references")
-        for blk in blocks:
-            self._live[blk].remove(owner)
-            if self._live[blk]:
-                continue                      # other holders remain
-            del self._live[blk]
-            if blk in self._key_of:
-                self._cached[blk] = None      # newest = evicted last
-                self._cached.move_to_end(blk)
-            else:
-                self._free.append(blk)
-        self._trace_watermark()
+        with self._lock:
+            pending = collections.Counter()
+            for blk in blocks:
+                if blk not in self._live:
+                    raise ValueError(
+                        f"free of block {blk} which is not live "
+                        "(double free or foreign id)")
+                pending[blk] += 1
+                if pending[blk] > self._live[blk].count(owner):
+                    raise ValueError(
+                        f"free of block {blk} by owner {owner!r} which "
+                        f"holds {self._live[blk].count(owner)} of its "
+                        f"{len(self._live[blk])} references")
+            for blk in blocks:
+                self._live[blk].remove(owner)
+                if self._live[blk]:
+                    continue                  # other holders remain
+                del self._live[blk]
+                if blk in self._key_of:
+                    self._cached[blk] = None  # newest = evicted last
+                    self._cached.move_to_end(blk)
+                else:
+                    self._free.append(blk)
+            self._trace_watermark()
 
     # -- prefix index (refcounted content-addressed blocks) ------------
 
     def incref(self, blk: int, owner=0) -> None:
         """Add a reference to an already-live block (prefix-cache hit on a
         block another request currently holds)."""
-        if blk not in self._live:
-            raise ValueError(f"incref of block {blk} which is not live")
-        self._live[blk].append(owner)
+        with self._lock:
+            if blk not in self._live:
+                raise ValueError(f"incref of block {blk} which is not live")
+            self._live[blk].append(owner)
 
     def refcount(self, blk: int) -> int:
-        return len(self._live.get(blk, ()))
+        with self._lock:
+            return len(self._live.get(blk, ()))
 
     def is_cached(self, blk: int) -> bool:
         """True for a refcount-0 block parked in the cached LRU (a hit on
         it must ``take_cached`` rather than ``incref``)."""
-        return blk in self._cached
+        with self._lock:
+            return blk in self._cached
 
     def register(self, key, blk: int, owner=0) -> None:
         """Publish live block ``blk`` under prefix chain ``key``.  Last
@@ -342,35 +380,38 @@ class BlockAllocator:
         correct bytes; the index just points at one of them).  The entry
         is tagged with the *writer* owner: device pools are per-replica,
         so only readers whose gathers address the writer's pool may hit."""
-        if blk not in self._live:
-            raise ValueError(f"register of block {blk} which is not live")
-        prev = self._index.get(key)
-        if prev is not None and prev[0] != blk:
-            self._key_of.pop(prev[0], None)
-            if prev[0] in self._cached:       # superseded cached copy:
-                self._cached.pop(prev[0])     # plain free block again
-                self._free.append(prev[0])
-        stale = self._key_of.get(blk)
-        if stale is not None and stale != key:
-            # block re-used for different content (COW rewrite of a
-            # refcount-1 block): the old chain entry is dead
-            if self._index.get(stale, (None,))[0] == blk:
-                del self._index[stale]
-        self._index[key] = (blk, owner)
-        self._key_of[blk] = key
+        with self._lock:
+            if blk not in self._live:
+                raise ValueError(
+                    f"register of block {blk} which is not live")
+            prev = self._index.get(key)
+            if prev is not None and prev[0] != blk:
+                self._key_of.pop(prev[0], None)
+                if prev[0] in self._cached:   # superseded cached copy:
+                    self._cached.pop(prev[0])  # plain free block again
+                    self._free.append(prev[0])
+            stale = self._key_of.get(blk)
+            if stale is not None and stale != key:
+                # block re-used for different content (COW rewrite of a
+                # refcount-1 block): the old chain entry is dead
+                if self._index.get(stale, (None,))[0] == blk:
+                    del self._index[stale]
+            self._index[key] = (blk, owner)
+            self._key_of[blk] = key
 
     def lookup(self, key, owner=0):
         """Resolve a prefix chain key to a resident block id, or None.
         Only blocks *written* by ``owner`` hit (per-replica device pools);
         a cached (refcount-0) block is a valid hit - ``incref`` it via
         ``take_cached`` to revive it."""
-        ent = self._index.get(key)
-        if ent is None or ent[1] != owner:
+        with self._lock:
+            ent = self._index.get(key)
+            if ent is None or ent[1] != owner:
+                return None
+            blk = ent[0]
+            if blk in self._live or blk in self._cached:
+                return blk
             return None
-        blk = ent[0]
-        if blk in self._live or blk in self._cached:
-            return blk
-        return None
 
     def take_cached(self, blk: int, owner=0, *,
                     from_reservation: bool = False) -> None:
@@ -378,19 +419,20 @@ class BlockAllocator:
         Costs one allocatable block, so it follows ``alloc``'s gating:
         reservation-backed revivals spend a promise, others spend
         ``n_avail``."""
-        if blk not in self._cached:
-            raise ValueError(f"block {blk} is not cached")
-        budget = self.n_free if from_reservation else self.n_avail
-        if budget < 1:
-            raise MemoryError(
-                f"KV block pool exhausted ({self.capacity} blocks: "
-                f"{self.n_live} live, {self._reserved} reserved)")
-        self._cached.pop(blk)
-        self._live[blk] = [owner]
-        self._peak = max(self._peak, len(self._live))
-        if from_reservation:
-            self.unreserve(1)
-        self._trace_watermark()
+        with self._lock:
+            if blk not in self._cached:
+                raise ValueError(f"block {blk} is not cached")
+            budget = self.n_free if from_reservation else self.n_avail
+            if budget < 1:
+                raise MemoryError(
+                    f"KV block pool exhausted ({self.capacity} blocks: "
+                    f"{self.n_live} live, {self._reserved} reserved)")
+            self._cached.pop(blk)
+            self._live[blk] = [owner]
+            self._peak = max(self._peak, len(self._live))
+            if from_reservation:
+                self.unreserve(1)
+            self._trace_watermark()
 
     def flush_index(self, owner=None) -> int:
         """Drop prefix-index entries (all, or one writer's) - cached
@@ -398,43 +440,50 @@ class BlockAllocator:
         stop being discoverable.  Used when a writer's device pool is
         torn down (its registered bytes no longer exist).  Returns the
         number of entries dropped."""
-        keys = [k for k, (_, o) in self._index.items()
-                if owner is None or o == owner]
-        for k in keys:
-            blk, _ = self._index.pop(k)
-            self._key_of.pop(blk, None)
-            if blk in self._cached:
-                self._cached.pop(blk)
-                self._free.append(blk)
-        return len(keys)
+        with self._lock:
+            keys = [k for k, (_, o) in self._index.items()
+                    if owner is None or o == owner]
+            for k in keys:
+                blk, _ = self._index.pop(k)
+                self._key_of.pop(blk, None)
+                if blk in self._cached:
+                    self._cached.pop(blk)
+                    self._free.append(blk)
+            return len(keys)
 
     def check_integrity(self) -> None:
         """Assert the conservation invariants (test hook; cheap enough for
-        per-step use in property suites)."""
-        assert not (set(self._live) & set(self._free)), "live∩free"
-        assert not (set(self._live) & set(self._cached)), "live∩cached"
-        assert not (set(self._cached) & set(self._free)), "cached∩free"
-        assert NULL_BLOCK not in self._live and \
-            NULL_BLOCK not in self._free and \
-            NULL_BLOCK not in self._cached, "null block escaped"
-        total = len(self._live) + len(self._free) + len(self._cached)
-        assert total == self.capacity, \
-            f"conservation: {len(self._live)} live + {len(self._free)} " \
-            f"free + {len(self._cached)} cached != {self.capacity}"
-        assert all(len(o) >= 1 for o in self._live.values()), \
-            "live block with no holders"
-        assert sum(len(o) for o in self._live.values()) >= self.n_live, \
-            "sum(refs) < n_live"
-        assert self._reserved >= 0
-        assert self._reserved <= self.n_free, "reservations exceed free"
-        for blk in self._cached:
-            assert blk in self._key_of, "cached block lost its index key"
-        for key, (blk, _) in self._index.items():
-            assert self._key_of.get(blk) == key, "index/key_of mismatch"
-        if self._tracer.enabled:
-            self._tracer.instant("pool", "integrity_ok", live=self.n_live,
-                                 free=self.n_free,
-                                 reserved=self._reserved)
+        per-step use in property suites).  Holds the allocator lock, so
+        the snapshot it checks is consistent even mid-traffic."""
+        with self._lock:
+            assert not (set(self._live) & set(self._free)), "live∩free"
+            assert not (set(self._live) & set(self._cached)), "live∩cached"
+            assert not (set(self._cached) & set(self._free)), "cached∩free"
+            assert NULL_BLOCK not in self._live and \
+                NULL_BLOCK not in self._free and \
+                NULL_BLOCK not in self._cached, "null block escaped"
+            total = len(self._live) + len(self._free) + len(self._cached)
+            assert total == self.capacity, \
+                f"conservation: {len(self._live)} live + " \
+                f"{len(self._free)} free + {len(self._cached)} cached " \
+                f"!= {self.capacity}"
+            assert all(len(o) >= 1 for o in self._live.values()), \
+                "live block with no holders"
+            assert sum(len(o) for o in self._live.values()) >= \
+                self.n_live, "sum(refs) < n_live"
+            assert self._reserved >= 0
+            assert self._reserved <= self.n_free, \
+                "reservations exceed free"
+            for blk in self._cached:
+                assert blk in self._key_of, \
+                    "cached block lost its index key"
+            for key, (blk, _) in self._index.items():
+                assert self._key_of.get(blk) == key, \
+                    "index/key_of mismatch"
+            if self._tracer.enabled:
+                self._tracer.instant("pool", "integrity_ok",
+                                     live=self.n_live, free=self.n_free,
+                                     reserved=self._reserved)
 
     # -- reservations (worst-case admission promises) ------------------
 
@@ -442,47 +491,53 @@ class BlockAllocator:
         """Promise ``n`` free blocks to an admitted request's future lazy
         growth.  Pool-level so co-tenant engines see each other's promises;
         ``n_avail`` is what admission may still spend."""
-        if n > self.n_avail:
-            raise MemoryError(
-                f"cannot reserve {n} blocks: only {self.n_avail} of "
-                f"{self.capacity} unreserved-free")
-        self._reserved += n
-        if self._tracer.enabled and n:
-            self._tracer.instant("pool", "reserve", n=n)
-        self._trace_watermark()
+        with self._lock:
+            if n > self.n_avail:
+                raise MemoryError(
+                    f"cannot reserve {n} blocks: only {self.n_avail} of "
+                    f"{self.capacity} unreserved-free")
+            self._reserved += n
+            if self._tracer.enabled and n:
+                self._tracer.instant("pool", "reserve", n=n)
+            self._trace_watermark()
 
     def unreserve(self, n: int) -> None:
         """Release reservations (a promised block became live, or its
         request finished / was preempted)."""
-        if n > self._reserved:
-            raise ValueError(
-                f"unreserve({n}) exceeds standing reservations "
-                f"({self._reserved})")
-        self._reserved -= n
-        if n:
-            self._trace_watermark()
+        with self._lock:
+            if n > self._reserved:
+                raise ValueError(
+                    f"unreserve({n}) exceeds standing reservations "
+                    f"({self._reserved})")
+            self._reserved -= n
+            if n:
+                self._trace_watermark()
 
     # -- accounting ----------------------------------------------------
 
     def live_by_owner(self) -> dict:
         """Live block-reference counts per owner (a cluster's per-replica
         view; a shared block counts once per holding owner)."""
-        counts: dict = {}
-        for owners in self._live.values():
-            for owner in owners:
-                counts[owner] = counts.get(owner, 0) + 1
-        return counts
+        with self._lock:
+            counts: dict = {}
+            for owners in self._live.values():
+                for owner in owners:
+                    counts[owner] = counts.get(owner, 0) + 1
+            return counts
 
     def owner_of(self, blk: int):
         """First holder of a live block (sole holder for unshared blocks)."""
-        return self._live[blk][0]
+        with self._lock:
+            return self._live[blk][0]
 
     def stats(self) -> BlockPoolStats:
-        cap = self.capacity
-        return BlockPoolStats(
-            self.n_blocks, self.block_size, cap, self.n_live, self.n_free,
-            self._peak, self.n_live / cap, self._peak / cap,
-            n_reserved=self._reserved, n_cached=self.n_cached)
+        with self._lock:
+            cap = self.capacity
+            return BlockPoolStats(
+                self.n_blocks, self.block_size, cap, self.n_live,
+                self.n_free, self._peak, self.n_live / cap,
+                self._peak / cap, n_reserved=self._reserved,
+                n_cached=self.n_cached)
 
 
 # ---------------------------------------------------------------------------

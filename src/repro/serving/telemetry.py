@@ -335,17 +335,25 @@ class Histogram:
         with self._lock:
             self.samples.append(float(v))
 
+    def values(self) -> list[float]:
+        """Consistent copy of the raw samples (taken under the lock) —
+        the safe way to read a histogram that is still being observed
+        from another thread."""
+        with self._lock:
+            return list(self.samples)
+
     @property
     def count(self) -> int:
-        return len(self.samples)
+        with self._lock:
+            return len(self.samples)
 
     @property
     def mean(self) -> float:
-        return (sum(self.samples) / len(self.samples)
-                if self.samples else 0.0)
+        s = self.values()
+        return sum(s) / len(s) if s else 0.0
 
     def percentile(self, q: float) -> float:
-        return percentile(self.samples, q)
+        return percentile(self.values(), q)
 
 
 class Timeline:
@@ -396,36 +404,57 @@ class MetricsRegistry:
     def merge(self, other: "MetricsRegistry") -> None:
         """Fold ``other`` into this registry: counters add, histogram
         samples and timeline points concatenate (timelines re-sorted by
-        time), gauges take the other's latest value."""
-        for name, c in other._counters.items():
-            self.counter(name).inc(c.n)
-        for name, h in other._histograms.items():
-            mine = self.histogram(name)
-            with self._lock:
+        time), gauges take the other's latest value.
+
+        Safe against a *live* ``other`` (exactly what a mid-session
+        metrics poll of a threaded cluster does): both registries' locks
+        are held for the whole fold, acquired in a stable id-order so two
+        threads cross-merging each other's registries cannot deadlock,
+        and every sample list is read under them — never torn state."""
+        if other is self:
+            return
+        first, second = sorted((self, other), key=id)
+        with first._lock, second._lock:
+            # mutate tables directly: the instrument methods re-acquire
+            # self._lock (non-reentrant), so they must not be called here
+            for name, c in other._counters.items():
+                mine = self._counters.setdefault(name, Counter(self._lock))
+                mine.n += c.n
+            for name, h in other._histograms.items():
+                mine = self._histograms.setdefault(name,
+                                                   Histogram(self._lock))
                 mine.samples.extend(h.samples)
-        for name, t in other._timelines.items():
-            mine = self.timeline(name)
-            with self._lock:
+            for name, t in other._timelines.items():
+                mine = self._timelines.setdefault(name,
+                                                  Timeline(self._lock))
                 mine.points.extend(t.points)
                 mine.points.sort()
-        for name, g in other._gauges.items():
-            self.gauge(name).set(g.value)
+            for name, g in other._gauges.items():
+                mine = self._gauges.setdefault(name, Gauge(self._lock))
+                mine.value = g.value
 
     def snapshot(self) -> dict:
         """Plain-dict view: counters/gauges verbatim, histograms as
         count/mean/p50/p90/p99, timelines as point counts (the raw
-        series stay on the instruments)."""
+        series stay on the instruments).  The whole snapshot is copied
+        out under the registry lock, so a poll taken while worker
+        threads are still observing summarizes one consistent state."""
         out: dict[str, Any] = {}
-        for name, c in self._counters.items():
-            out[name] = c.n
-        for name, g in self._gauges.items():
-            out[name] = g.value
-        for name, h in self._histograms.items():
-            out[name] = {"count": h.count, "mean": h.mean,
-                         "p50": h.percentile(50), "p90": h.percentile(90),
-                         "p99": h.percentile(99)}
-        for name, t in self._timelines.items():
-            out[name] = {"points": len(t.points)}
+        with self._lock:
+            counters = {n: c.n for n, c in self._counters.items()}
+            gauges = {n: g.value for n, g in self._gauges.items()}
+            hists = {n: list(h.samples)
+                     for n, h in self._histograms.items()}
+            points = {n: len(t.points) for n, t in self._timelines.items()}
+        out.update(counters)
+        out.update(gauges)
+        for name, s in hists.items():
+            out[name] = {"count": len(s),
+                         "mean": sum(s) / len(s) if s else 0.0,
+                         "p50": percentile(s, 50), "p90": percentile(s, 90),
+                         "p99": percentile(s, 99)}
+        for name, n in points.items():
+            out[name] = {"points": n}
         return out
 
 

@@ -389,3 +389,120 @@ def test_overcommit_without_cluster_surfaces_pool_pressure(
         eng.generate(reqs)
     assert eng.allocator.n_live == 0
     assert eng.allocator.n_reserved == 0
+
+
+# ---------------------------------------------------------------------------
+# Threaded driver: byte-identity with the sequential reference.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("router",
+                         ["round_robin", "least_loaded", "shortest_queue"])
+def test_threaded_driver_matches_sequential(model_and_params, router):
+    """(h) the threaded driver is byte-identical to the sequential one
+    under every router (rid-keyed sampling makes outputs timing- and
+    placement-independent; only the wall clock may differ)."""
+    reqs = _trace()
+    cl = _cluster(model_and_params, replicas=2, total_slots=4,
+                  router=router)
+    seq = cl.generate(reqs, driver="sequential")
+    thr = cl.generate(reqs, driver="threaded")
+    for a, b in zip(seq, thr):
+        assert a.tokens == b.tokens, (router, a.rid)
+    s = cl.last_stats
+    assert s.mode == "cluster" and s.router_policy == router
+    assert s.generated_tokens == sum(r.max_new_tokens for r in reqs)
+
+
+def test_threaded_driver_reserve_admission(model_and_params):
+    """(h') reserve admission under the threaded driver: a worker-side
+    reservation can lose the pool race the coordinator's headroom check
+    won (admit_retry protocol) — outputs still match."""
+    reqs = _trace(8)
+    cl = _cluster(model_and_params, replicas=2, total_slots=4,
+                  n_blocks=17, admission="reserve")
+    seq = cl.generate(reqs, driver="sequential")
+    thr = cl.generate(reqs, driver="threaded")
+    for a, b in zip(seq, thr):
+        assert a.tokens == b.tokens, a.rid
+    assert cl.pool.n_live == 0 and cl.pool.n_reserved == 0
+
+
+def test_threaded_driver_sampled_matches_sequential(model_and_params):
+    """(h'') sampled streams too: temperature > 0 exercises the rid+index
+    keyed sampler from concurrent worker threads."""
+    reqs = [Request([1 + i, 2 + i, 3 + i], 5 + (i % 4), temperature=0.9,
+                    rid=i) for i in range(8)]
+    key = jax.random.key(7)
+    cl = _cluster(model_and_params, replicas=2, total_slots=4)
+    seq = cl.generate(reqs, key=key, driver="sequential")
+    thr = cl.generate(reqs, key=key, driver="threaded")
+    for a, b in zip(seq, thr):
+        assert a.tokens == b.tokens, a.rid
+
+
+def test_threaded_driver_preemption_invisible(model_and_params):
+    """(h''') pool pressure under the threaded driver resolves through
+    the coordinator (pressure event -> victim preempt -> resume) and
+    stays invisible in the output; the shared pool drains clean and the
+    lifecycle trace stays well-formed.  The preemption *count* is
+    timing-dependent under threads (unlike the sequential driver's
+    deterministic schedule), but with 4 concurrent 4-block requests
+    against a 10-block pool at least one eviction is unavoidable."""
+    from repro.serving import Tracer, validate_lifecycle
+    reqs = [Request([3 * i + 1, 3 * i + 2], 24, rid=i) for i in range(6)]
+    ref = _single(model_and_params, max_batch=4,
+                  kv_layout="paged").generate(reqs)
+    cl = _cluster(model_and_params, replicas=2, total_slots=4, n_blocks=11,
+                  driver="threaded")
+    tracer = Tracer()
+    cl.set_tracer(tracer)
+    try:
+        got = cl.generate(reqs)
+    finally:
+        cl.set_tracer(None)
+    assert cl.last_stats.preempted >= 1
+    assert cl.last_stats.requeued == cl.last_stats.preempted
+    for a, b in zip(ref, got):
+        assert a.tokens == b.tokens, a.rid
+    assert cl.pool.n_live == 0 and cl.pool.n_reserved == 0
+    assert cl.pool.n_free == cl.pool.capacity
+    validate_lifecycle(tracer.events())
+
+
+def test_cluster_stream_yields_ordered_tokens(model_and_params):
+    """(i) the streaming API: per-rid TokenEvents arrive in index order
+    with exactly one final marker, and concatenate to the generate
+    output — under both drivers."""
+    reqs = _trace(6)
+    cl = _cluster(model_and_params, replicas=2, total_slots=4)
+    ref = cl.generate(reqs, driver="sequential")
+    for driver in ("sequential", "threaded"):
+        by_rid = {}
+        finals = 0
+        for ev in cl.stream(reqs, driver=driver):
+            assert ev.index == len(by_rid.setdefault(ev.rid, []))
+            by_rid[ev.rid].append(ev.token)
+            finals += ev.final
+        assert finals == len(reqs), driver
+        for r in ref:
+            assert by_rid[r.rid] == r.tokens, (driver, r.rid)
+
+
+def test_stream_propagates_failures(model_and_params):
+    """(i') an exception inside a streaming run re-raises out of the
+    generator (after the driver thread is joined) instead of hanging the
+    consumer."""
+    cl = _cluster(model_and_params, replicas=2, total_slots=4)
+    bad = [Request(list(range(CACHE_LEN + 8)), 4, rid=0)]
+    with pytest.raises(ValueError):
+        list(cl.stream(bad, driver="threaded"))
+
+
+def test_invalid_driver_rejected(model_and_params):
+    """(j) driver names are validated at construction and per call."""
+    with pytest.raises(ValueError, match="driver"):
+        _cluster(model_and_params, replicas=2, total_slots=4,
+                 driver="asyncio")
+    cl = _cluster(model_and_params, replicas=2, total_slots=4)
+    with pytest.raises(ValueError, match="driver"):
+        cl.generate(_trace(2), driver="greenlet")

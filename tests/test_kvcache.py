@@ -515,6 +515,104 @@ def test_allocator_random_walk(seed):
     m.teardown()
 
 
+def test_allocator_threaded_stress():
+    """Multi-threaded variant of the rule machine: 4 owner threads hammer
+    one shared allocator with alloc/free/reserve/register/lookup+revive
+    for a few hundred ops each.  Per-op assertions are the ones that hold
+    without a global lock (no double-handout, no null block); the full
+    conservation + index invariants run after the join.  This is the
+    contract the threaded cluster driver leans on — every replica worker
+    mutates this object concurrently."""
+    import threading
+
+    a = BlockAllocator(48, BLOCK)
+    handed = set()                       # blocks live anywhere, any owner
+    handed_lock = threading.Lock()
+    errors: list[BaseException] = []
+
+    def claim(blk):
+        with handed_lock:
+            assert blk != 0, "null block handed out"
+            assert blk not in handed, f"block {blk} handed out twice"
+            handed.add(blk)
+
+    def release(blk):
+        with handed_lock:
+            handed.discard(blk)
+
+    def worker(owner: int):
+        rng = np.random.default_rng(100 + owner)
+        held: list[int] = []
+        keys = 0
+        try:
+            for _ in range(400):
+                op = int(rng.integers(0, 6))
+                if op == 0:
+                    try:
+                        blk = a.alloc(owner)
+                    except MemoryError:
+                        pass
+                    else:
+                        claim(blk)
+                        held.append(blk)
+                elif op == 1 and held:
+                    blk = held.pop(int(rng.integers(len(held))))
+                    if held.count(blk) == 0:
+                        release(blk)
+                    a.free([blk], owner)
+                elif op == 2 and held:
+                    # a second reference from this owner (prefix hit on a
+                    # block it already holds: incref never races free of
+                    # the same ref because only this thread frees it)
+                    blk = held[int(rng.integers(len(held)))]
+                    a.incref(blk, owner)
+                    held.append(blk)
+                elif op == 3 and held:
+                    # publish under an owner-namespaced key
+                    blk = held[int(rng.integers(len(held)))]
+                    a.register(("t", owner, keys), blk, owner)
+                    keys += 1
+                elif op == 4 and keys:
+                    # the documented compound-atomic pattern: resolve +
+                    # revive under the allocator's own lock
+                    key = ("t", owner, int(rng.integers(keys)))
+                    with a.lock:
+                        blk = a.lookup(key, owner)
+                        if (blk is not None and a.is_cached(blk)
+                                and a.n_avail):
+                            a.take_cached(blk, owner)
+                            claim(blk)
+                            held.append(blk)
+                else:
+                    try:
+                        a.reserve(2)
+                    except MemoryError:
+                        pass
+                    else:
+                        a.unreserve(2)
+        except BaseException as e:      # surfaced after the join
+            errors.append(e)
+        finally:
+            for blk in set(held):
+                release(blk)
+            a.free(held, owner)
+
+    threads = [threading.Thread(target=worker, args=(o,), daemon=True)
+               for o in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+        assert not t.is_alive(), "allocator stress worker wedged"
+    assert not errors, errors
+    a.check_integrity()
+    assert a.n_live == 0 and a.n_reserved == 0
+    assert a.n_free == a.capacity
+    assert a.live_by_owner() == {}
+    a.flush_index()
+    assert a.n_cached == 0
+
+
 # ---------------------------------------------------------------------------
 # Paged engine vs dense engine.
 # ---------------------------------------------------------------------------

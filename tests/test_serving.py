@@ -210,3 +210,49 @@ def test_freed_scan_slot_state_is_reset(arch):
         row = np.moveaxis(np.asarray(cache[name], np.float32), ax, 0)[0]
         assert not row.any(), (arch, name)
     eng.end_session()
+
+
+# ---------------------------------------------------------------------------
+# Streaming: TokenEvents as tokens are sampled.
+# ---------------------------------------------------------------------------
+
+def test_stream_matches_generate(model_and_params):
+    """Streaming is a pure view: the TokenEvents concatenate to exactly
+    the generate output, per-rid indices are gapless and ordered, and
+    each request carries exactly one final marker."""
+    reqs = [Request([1, 2, 3], 5, rid=0), Request([4, 5], 3, rid=1),
+            Request([9, 8, 7], 4, temperature=0.8, rid=2)]
+    eng = _engine(model_and_params, max_batch=2, mode="continuous")
+    key = jax.random.key(3)
+    ref = eng.generate(reqs, key=key)
+    by_rid = {}
+    finals = []
+    for ev in eng.stream(reqs, key=key):
+        assert ev.index == len(by_rid.setdefault(ev.rid, []))
+        by_rid[ev.rid].append(ev.token)
+        if ev.final:
+            finals.append(ev.rid)
+    assert sorted(finals) == [0, 1, 2]
+    for r in ref:
+        assert by_rid[r.rid] == r.tokens, r.rid
+
+
+def test_on_token_callback_from_generate(model_and_params):
+    """generate(on_token=...) pushes the same events the stream yields,
+    including the dense instant-finish path (a 1-token budget satisfied
+    at admission still emits its event)."""
+    reqs = [Request([1, 2, 3], 1, rid=0)]
+    eng = _engine(model_and_params, max_batch=2, mode="continuous")
+    got = []
+    res = eng.generate(reqs, on_token=got.append)
+    assert [(e.rid, e.token, e.index, e.final) for e in got] \
+        == [(0, res[0].tokens[0], 0, True)]
+
+
+def test_on_token_rejected_under_lockstep(model_and_params):
+    """Streaming needs the continuous scheduler (lockstep materializes
+    whole completions per group) - fail loudly, not silently unstreamed."""
+    eng = _engine(model_and_params, max_batch=2, mode="lockstep")
+    with pytest.raises(ValueError, match="on_token"):
+        eng.generate([Request([1, 2], 3, rid=0)],
+                     on_token=lambda ev: None)

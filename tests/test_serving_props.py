@@ -22,6 +22,9 @@ each through:
                                  shortest_queue)
   * cluster 2x2 over a starved pool (overcommit admission: pool pressure
                                  forces preemption + requeue mid-trace)
+  * cluster Nx1 + 2x2-pressure, threaded driver (replicas stepped on
+                                 worker threads: scheduling timing is
+                                 nondeterministic, tokens must not be)
 
 A second property runs the same conformance over the **scan families**
 (ssm / hybrid / encdec), whose continuous batching rides slot-addressable
@@ -37,7 +40,8 @@ After every run the shared pools must be fully drained (no leaked blocks
 or reservations) — a stateful invariant the random traces exercise far
 harder than the fixed regression traces do.
 
-Three cells (paged single, Nx1 cluster, pressure cluster) additionally
+Four cells (paged single, Nx1 cluster, pressure cluster, threaded
+pressure cluster) additionally
 serve every drawn trace with a live :class:`Tracer` *and* a shared
 :class:`Attributor` attached: the token assert against the untraced,
 unattributed reference doubles as the observer-effect gate (neither
@@ -109,6 +113,16 @@ def harness():
         # wanting 3 each — overcommit admission must preempt to serve it
         "cluster-2x2-pressure": cluster(replicas=2, total_slots=4,
                                         n_blocks=8),
+        # the threaded driver re-runs the routed and the pressure cells
+        # with replicas stepping on worker threads: byte-identity vs the
+        # same dense reference is the sequential-vs-threaded conformance
+        # bar (scheduling timing is free, tokens are not)
+        "cluster-Nx1-threaded": cluster(replicas=SLOTS, total_slots=SLOTS,
+                                        driver="threaded"),
+        "cluster-2x2-pressure-threaded": cluster(replicas=2,
+                                                 total_slots=4,
+                                                 n_blocks=8,
+                                                 driver="threaded"),
         # prefix cache on: shared-prefix traces admit by reference with
         # refcounted blocks + COW; cache state *persists across traces*
         # (cached blocks survive generate calls), so every subsequent
@@ -157,7 +171,7 @@ def _draw_trace(rng: np.random.Generator, vocab: int):
 # preempting cluster): tokens still compare against the untraced
 # reference, so these double as the tracing-observer-effect property
 TRACED_CELLS = {"paged-continuous", "cluster-Nx1-round_robin",
-                "cluster-2x2-pressure"}
+                "cluster-2x2-pressure", "cluster-2x2-pressure-threaded"}
 
 # one shared attributor for every traced example: the cost memo persists
 # across examples (one AOT lowering per compiled shape for the whole

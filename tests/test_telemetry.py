@@ -308,3 +308,138 @@ def test_pressure_cluster_trace_flows_and_lifecycle(smoke_model):
     # taken over raw samples (not a mean of replica means)
     assert cl.last_metrics.histogram("ttft_ms").count == len(reqs)
     assert s.ttft_ms_p99 >= s.ttft_ms_p50 > 0
+
+
+# ---------------------------------------------------------------------------
+# Concurrency: the contracts the threaded cluster driver leans on.
+# ---------------------------------------------------------------------------
+
+def test_merge_during_observe_is_consistent():
+    """Regression: ``merge`` snapshots the *source* under its lock, so
+    merging a registry that another thread is actively observing never
+    reads torn state.  The writer bumps a counter and a histogram under
+    separate lock acquisitions, so any single-lock view can differ by at
+    most one in-flight pair — a torn read would show arbitrary skew (or
+    blow up iterating a mutating list)."""
+    import threading
+
+    live = MetricsRegistry()
+    stop = threading.Event()
+    writes = {"n": 0}
+
+    def writer():
+        c = live.counter("ticks")
+        h = live.histogram("lat")
+        while not stop.is_set():
+            c.inc()
+            h.observe(1.0)
+            writes["n"] += 1
+
+    t = threading.Thread(target=writer, daemon=True)
+    t.start()
+    try:
+        for _ in range(300):
+            m = MetricsRegistry()
+            m.merge(live)
+            skew = m.counter("ticks").n - m.histogram("lat").count
+            assert skew in (0, 1), f"torn merge: skew={skew}"
+    finally:
+        stop.set()
+        t.join(timeout=30)
+    assert not t.is_alive()
+    final = MetricsRegistry()
+    final.merge(live)
+    assert final.counter("ticks").n == writes["n"]
+    assert final.histogram("lat").count == writes["n"]
+
+
+def test_cross_merge_has_no_deadlock():
+    """Two threads merging a->b and b->a concurrently: the stable
+    (id-ordered) double-lock acquisition cannot deadlock.  Before the
+    fix this was a textbook lock-order inversion."""
+    import threading
+
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.counter("x").inc()
+    b.counter("y").inc()
+
+    def cross(dst, src):
+        for _ in range(500):
+            dst.merge(src)
+
+    t1 = threading.Thread(target=cross, args=(a, b), daemon=True)
+    t2 = threading.Thread(target=cross, args=(b, a), daemon=True)
+    t1.start()
+    t2.start()
+    t1.join(timeout=60)
+    t2.join(timeout=60)
+    assert not t1.is_alive() and not t2.is_alive(), "merge deadlocked"
+    a.merge(a)      # self-merge is an explicit no-op, not a deadlock
+    assert a.counter("x").n >= 1 and a.counter("y").n >= 1
+
+
+def test_histogram_and_snapshot_reads_under_writes():
+    """Regression: mean/percentile/count and ``snapshot`` copy samples
+    under the lock, so concurrent observes never tear a read (and the
+    sample count a reader sees is monotone)."""
+    import threading
+
+    reg = MetricsRegistry()
+    n_obs = 20_000   # bounded: each snapshot copies+sorts the samples,
+                     # so an unthrottled writer makes reads quadratic
+
+    def writer():
+        h = reg.histogram("lat")
+        tl = reg.timeline("occ")
+        g = reg.gauge("depth")
+        for i in range(n_obs):
+            h.observe(float(i % 7))
+            tl.record(float(i), float(i % 3))
+            g.set(float(i))
+
+    t = threading.Thread(target=writer, daemon=True)
+    t.start()
+    h = reg.histogram("lat")
+    seen = 0
+    while t.is_alive():
+        n = h.count
+        assert n >= seen, "sample count went backwards"
+        seen = n
+        assert h.mean >= 0.0
+        assert 0.0 <= h.percentile(99) <= 6.0 or n == 0
+        snap = reg.snapshot()
+        assert snap["lat"]["count"] >= 0
+    t.join(timeout=30)
+    assert not t.is_alive()
+    assert h.count == n_obs == len(h.values())
+
+
+def test_tracer_concurrent_emit(tmp_path):
+    """The tracer's event log is locked: N threads emitting on their own
+    tracks lose nothing, and the exported Chrome trace still passes the
+    CI validator."""
+    import threading
+
+    tr = Tracer()
+    n_threads, per = 4, 200
+
+    def emitter(i):
+        for k in range(per):
+            with tr.span(f"replica{i}", "step", k=k):
+                tr.instant(f"replica{i}", "tick", k=k)
+
+    threads = [threading.Thread(target=emitter, args=(i,), daemon=True)
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+        assert not t.is_alive()
+    events = tr.events()
+    assert len(events) == n_threads * per * 2     # one span + one instant
+    for i in range(n_threads):
+        assert sum(1 for e in events
+                   if e.track == f"replica{i}") == per * 2
+    path = tmp_path / "threaded.json"
+    tr.export(str(path))
+    assert check_trace.validate(path, min_replica_tracks=n_threads) == []
