@@ -74,7 +74,8 @@ import sys
 
 import jax
 
-from benchmarks.common import check_tokens, emit
+from benchmarks.common import (check_tokens, emit, trace_heavy_tailed,
+                               trace_uniform)
 
 TOTAL_SLOTS = 8
 CACHE_LEN = 512                # per-request context bound (block-table
@@ -105,23 +106,19 @@ def _short_trace(vocab: int):
     """Heavy-tailed short-request traffic: the two stragglers sit at
     submission positions 0 and 4, so round-robin co-locates them on one
     replica in every shape (1, 2, or 4 replicas) - the narrow shapes
-    quarantine the tail instead of stalling the whole slot pool on it."""
-    from repro.serving import Request
-    reqs = []
-    for i in range(N_SHORT_REQS):
-        prompt = [(5 * i + j) % vocab for j in range(PROMPT_LEN)]
-        max_new = TAIL_NEW if i in (0, 4) else SHORT_NEW
-        reqs.append(Request(prompt, max_new, temperature=0.0, rid=i))
-    return reqs
+    quarantine the tail instead of stalling the whole slot pool on it.
+    (The shared generator's defaults ARE this bench's historic trace -
+    baselines unchanged.)"""
+    return trace_heavy_tailed(vocab, n=N_SHORT_REQS,
+                              prompt_len=PROMPT_LEN, short_new=SHORT_NEW,
+                              tail_new=TAIL_NEW)
 
 
 def _pressure_trace(vocab: int):
     """8 concurrent worst cases of 5 blocks each = 40 blocks against the
     32-block pool: overcommit admission must preempt to serve this."""
-    from repro.serving import Request
-    return [Request([(7 * i + j) % vocab for j in range(PROMPT_LEN)],
-                    TAIL_NEW, temperature=0.0, rid=i)
-            for i in range(N_PRESSURE_REQS)]
+    return trace_uniform(vocab, n=N_PRESSURE_REQS, prompt_len=PROMPT_LEN,
+                         max_new=TAIL_NEW)
 
 
 def _warmup(eng, vocab: int, slots: int):

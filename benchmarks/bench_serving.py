@@ -87,7 +87,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import check_tokens, emit, write_json
+from benchmarks.common import check_tokens, emit, trace_bursty, write_json
 
 MAX_BATCH = 4
 CACHE_LEN = 128
@@ -98,13 +98,10 @@ N_REQS = 16
 
 
 def _trace(vocab, n_reqs, short_new, long_new):
-    from repro.serving import Request
-    reqs = []
-    for i in range(n_reqs):
-        prompt = [(7 * i + j) % vocab for j in range(PROMPT_LEN)]
-        max_new = short_new if i % 2 else long_new
-        reqs.append(Request(prompt, max_new, temperature=0.0, rid=i))
-    return reqs
+    # the shared bursty generator at burst=1 is this bench's historic
+    # interleaved long/short trace byte-for-byte (baselines unchanged)
+    return trace_bursty(vocab, n=n_reqs, prompt_len=PROMPT_LEN,
+                        short_new=short_new, long_new=long_new)
 
 
 def _compiled_temp_bytes(fn, *args):

@@ -1,6 +1,11 @@
 """Benchmark utilities: timing + CSV emission (name,us_per_call,derived)
-with an optional JSON sink (CI uploads the --smoke rows as an artifact)."""
+with an optional JSON sink (CI uploads the --smoke rows as an artifact),
+plus the shared workload-trace generators (``TRACE_KINDS``) used by
+bench_serving, bench_cluster, run_matrix, and the SLO tests — one seeded,
+shape-parameterized implementation instead of a hand-rolled copy per
+bench."""
 import json
+import random
 import sys
 import time
 
@@ -9,6 +14,115 @@ import jax
 # every emit() is also recorded here so benches can dump a machine-
 # readable copy of their run (write_json)
 _ROWS: list = []
+
+
+#: Workload-trace shapes for the scenario matrix (run_matrix.py):
+#: uniform (every request identical), bursty (alternating long/short
+#: bursts), heavy_tailed (mostly shorts + a few stragglers), adversarial
+#: (best-effort stragglers submitted *ahead* of budgeted shorts - the
+#: head-of-line-blocking worst case SLO scheduling exists for).
+TRACE_KINDS = ("uniform", "bursty", "heavy_tailed", "adversarial")
+
+
+def _prompt(i: int, vocab: int, prompt_len: int, stride: int, rng):
+    """One prompt row.  seed=None (rng=None) keeps the benches' exact
+    deterministic stride pattern ``(stride*i + j) % vocab``; a seeded rng
+    varies prompts across matrix repetitions instead."""
+    if rng is None:
+        return [(stride * i + j) % vocab for j in range(prompt_len)]
+    return [rng.randrange(vocab) for _ in range(prompt_len)]
+
+
+def _rng(seed):
+    return None if seed is None else random.Random(seed)
+
+
+def trace_uniform(vocab: int, n: int = 8, prompt_len: int = 16,
+                  max_new: int = 64, stride: int = 7, seed=None,
+                  slo_ttft_ms=None, slo_tpot_ms=None):
+    """Every request identical in shape (bench_cluster's pressure trace
+    is ``trace_uniform(vocab, 8, 16, 64)``).  Budgets, when given, attach
+    to every request."""
+    from repro.serving import Request
+    rng = _rng(seed)
+    return [Request(_prompt(i, vocab, prompt_len, stride, rng), max_new,
+                    temperature=0.0, rid=i, slo_ttft_ms=slo_ttft_ms,
+                    slo_tpot_ms=slo_tpot_ms)
+            for i in range(n)]
+
+
+def trace_bursty(vocab: int, n: int = 16, prompt_len: int = 8,
+                 short_new: int = 8, long_new: int = 64, burst: int = 1,
+                 stride: int = 7, seed=None, slo_ttft_ms=None,
+                 slo_tpot_ms=None):
+    """Alternating bursts of ``burst`` long then ``burst`` short requests
+    (burst=1 is bench_serving's interleaved long/short trace,
+    byte-for-byte).  Budgets, when given, attach to the short requests
+    only — the interactive half of the mix."""
+    from repro.serving import Request
+    rng = _rng(seed)
+    reqs = []
+    for i in range(n):
+        long = (i // burst) % 2 == 0
+        reqs.append(Request(
+            _prompt(i, vocab, prompt_len, stride, rng),
+            long_new if long else short_new, temperature=0.0, rid=i,
+            slo_ttft_ms=None if long else slo_ttft_ms,
+            slo_tpot_ms=None if long else slo_tpot_ms))
+    return reqs
+
+
+def trace_heavy_tailed(vocab: int, n: int = 12, prompt_len: int = 16,
+                       short_new: int = 4, tail_new: int = 64,
+                       tail_at=(0, 4), stride: int = 5, seed=None,
+                       slo_ttft_ms=None, slo_tpot_ms=None):
+    """Mostly short requests plus stragglers at submission positions
+    ``tail_at`` (the defaults reproduce bench_cluster's short-request
+    trace byte-for-byte: round-robin co-locates positions 0 and 4 on one
+    replica in every shape).  Budgets attach to the shorts only."""
+    from repro.serving import Request
+    rng = _rng(seed)
+    reqs = []
+    for i in range(n):
+        tail = i in tail_at
+        reqs.append(Request(
+            _prompt(i, vocab, prompt_len, stride, rng),
+            tail_new if tail else short_new, temperature=0.0, rid=i,
+            slo_ttft_ms=None if tail else slo_ttft_ms,
+            slo_tpot_ms=None if tail else slo_tpot_ms))
+    return reqs
+
+
+def trace_adversarial(vocab: int, n: int = 12, prompt_len: int = 16,
+                      short_new: int = 4, long_new: int = 64,
+                      n_long: int = 2, stride: int = 5, seed=None,
+                      slo_ttft_ms=None, slo_tpot_ms=None):
+    """The starvation worst case: ``n_long`` best-effort stragglers
+    submitted *first*, then a stream of budgeted shorts behind them.
+    FIFO serves the stragglers to completion while every short's TTFT
+    clock runs; a deadline policy overtakes (and, under slo_adaptive,
+    preempts) instead.  Budgets attach to the shorts only."""
+    from repro.serving import Request
+    rng = _rng(seed)
+    reqs = []
+    for i in range(n):
+        long = i < n_long
+        reqs.append(Request(
+            _prompt(i, vocab, prompt_len, stride, rng),
+            long_new if long else short_new, temperature=0.0, rid=i,
+            slo_ttft_ms=None if long else slo_ttft_ms,
+            slo_tpot_ms=None if long else slo_tpot_ms))
+    return reqs
+
+
+def make_trace(kind: str, vocab: int, **kw):
+    """Dispatch on ``kind`` in ``TRACE_KINDS`` (run_matrix's axis)."""
+    fns = {"uniform": trace_uniform, "bursty": trace_bursty,
+           "heavy_tailed": trace_heavy_tailed,
+           "adversarial": trace_adversarial}
+    if kind not in fns:
+        raise ValueError(f"trace kind={kind!r}: pick one of {TRACE_KINDS}")
+    return fns[kind](vocab, **kw)
 
 
 def timeit(fn, *args, warmup=2, iters=5):

@@ -1,0 +1,225 @@
+"""Workload-matrix scenario harness: {traces} x {policies} x {cluster
+shapes} x {KV layouts}, scored on tail latency and SLO attainment.
+
+AraOS's methodological point (PAPERS.md) applied to the serving stack:
+a scheduling claim is only trusted after sweeping it against a matrix of
+workload scenarios, not one cherry-picked trace.  Every cell stages one
+shared trace generator (``benchmarks.common.TRACE_KINDS``) against one
+scheduling policy (``repro.serving.slo.POLICIES``) on one cluster shape
+and KV layout, and reports p50/p99 TTFT/TPOT plus SLO attainment.
+
+**Virtual time.**  Every cell runs under a
+:class:`repro.serving.telemetry.FakeClock` ticking 1 virtual ms per
+clock read, with the deterministic sequential driver: latency numbers
+are a pure function of the schedule (clock reads), not of CI machine
+speed, so the percentile and attainment rows are *deterministic* and
+zero/tight-tolerance gateable by ``tools/bench_compare.py`` against
+``benchmarks/baselines/run_matrix_smoke.json``.  SLO budgets below are
+expressed in virtual ms against that clock.  (The threaded driver is
+timing-dependent by construction; its byte-identity is covered by the
+conformance matrix in ``tests/test_serving_props.py`` instead.)
+
+**The adversarial headline** (CI-asserted, not just reported): on the
+adversarial trace — best-effort stragglers submitted *ahead* of budgeted
+shorts, sized to fill every slot — FIFO serves the stragglers first and
+the shorts' TTFT budgets blow past; ``slo_adaptive`` must beat FIFO on
+both TTFT-SLO attainment and virtual p99 TTFT, despite paying extra
+virtual time for every scheduling-decision clock read.
+
+Within each (trace, shape, layout) group the per-request token streams
+must be byte-identical across every policy (policies reorder, never
+alter, sampling) — checked per group, exits non-zero with a diff.
+
+Emits ``name,us_per_call,derived`` rows (us = *virtual* wall us):
+  matrix_{trace}_{policy}_{R}x{S}_{layout},<virtual_us>,
+      ttft_p50=..;ttft_p99=..;tpot_p50=..;tpot_p99=..;attain=..;
+      ttft_att=..;ttft_tot=..;starve_preempts=..;preempted=..;gen=..
+  matrix_headline,,fifo_attain=..;slo_attain=..;fifo_ttft_p99=..;
+      slo_ttft_p99=..;trace=adversarial_2x4_dense
+
+``--smoke`` runs the CI subset (adversarial x all policies on 2x4 dense,
+fifo/slo_adaptive on 2x4 paged, the other traces under slo_adaptive);
+the full run sweeps TRACE_KINDS x POLICIES x {1x8,2x4,4x2} x
+{dense,paged}.  ``--json PATH`` dumps the rows + an slo summary for the
+CI artifact/gate.
+"""
+import sys
+
+import jax
+
+from benchmarks.common import (check_tokens, emit, make_trace, reset_rows,
+                               write_json)
+
+CACHE_LEN = 64
+BLOCK = 8
+PROMPT_LEN = 8
+TICK_S = 1e-3                  # 1 virtual ms per clock read
+
+#: Trace shapes per kind: the adversarial cell sizes its straggler wave
+#: to the whole slot budget (n_long = total_slots) so FIFO head-of-line
+#: blocks every budgeted short behind ~LONG_NEW decode steps.
+SHORT_NEW, LONG_NEW = 4, 32
+N_SHORT = 16
+#: Virtual-ms budgets (FakeClock reads, not wall time): generous enough
+#: for a deadline policy to clear on the smoke model's schedule (a
+#: deadline-ordered short sees first token within a few virtual ms),
+#: far tighter than sitting out a straggler wave (~hundreds of virtual
+#: ms) - calibrated so the adversarial headline separates fifo from
+#: slo_adaptive.
+TTFT_MS, TPOT_MS = 120.0, 10.0
+
+SHAPES = ((1, 8), (2, 4), (4, 2))
+SMOKE_SHAPE = (2, 4)
+
+
+def _trace_kw(kind: str, total_slots: int) -> dict:
+    kw = dict(prompt_len=PROMPT_LEN, slo_ttft_ms=TTFT_MS,
+              slo_tpot_ms=TPOT_MS)
+    if kind == "uniform":
+        kw.update(n=total_slots + 4, max_new=SHORT_NEW * 2)
+    elif kind == "bursty":
+        kw.update(n=N_SHORT, burst=2, short_new=SHORT_NEW,
+                  long_new=LONG_NEW // 2)
+    elif kind == "heavy_tailed":
+        kw.update(n=N_SHORT, tail_at=(0, 4), short_new=SHORT_NEW,
+                  tail_new=LONG_NEW)
+    else:                       # adversarial: stragglers fill every slot
+        kw.update(n=total_slots + N_SHORT, n_long=total_slots,
+                  short_new=SHORT_NEW, long_new=LONG_NEW)
+    return kw
+
+
+def _cells(smoke: bool):
+    from repro.serving import POLICIES
+    if not smoke:
+        return [(k, p, s, lay)
+                for k in ("uniform", "bursty", "heavy_tailed",
+                          "adversarial")
+                for p in POLICIES for s in SHAPES
+                for lay in ("dense", "paged")]
+    cells = [("adversarial", p, SMOKE_SHAPE, "dense") for p in POLICIES]
+    cells += [("adversarial", p, SMOKE_SHAPE, "paged")
+              for p in ("fifo", "slo_adaptive")]
+    cells += [(k, "slo_adaptive", SMOKE_SHAPE, "dense")
+              for k in ("uniform", "bursty", "heavy_tailed")]
+    return cells
+
+
+def _run_cell(model, params, vocab, kind, policy, shape, layout):
+    from repro.serving import ClusterEngine, FakeClock
+    replicas, slots = shape
+    total = replicas * slots
+    eng = ClusterEngine(model, params, replicas=replicas,
+                        total_slots=total, cache_len=CACHE_LEN,
+                        kv_layout=layout, block_size=BLOCK,
+                        policy=policy, driver="sequential",
+                        clock=FakeClock(0.0, tick=TICK_S))
+    reqs = make_trace(kind, vocab, **_trace_kw(kind, total))
+    res = eng.generate(reqs)
+    return ([r.tokens for r in res], [r.rid for r in reqs],
+            eng.last_stats, eng.last_metrics)
+
+
+def _pctl(samples, q: float) -> float:
+    """Nearest-rank percentile over raw samples (0.0 when empty)."""
+    if not samples:
+        return 0.0
+    xs = sorted(samples)
+    return xs[min(len(xs) - 1, max(0, int(round(q / 100 * len(xs))) - 1))]
+
+
+def _client_ttft(metrics):
+    """Client-perceived TTFT (enqueue -> first token, virtual ms) of the
+    *budgeted* requests, recovered exactly from the SLO slack samples
+    (slack = budget - attained): the engine's ``ttft_ms`` histogram is
+    admit-based and cannot see queue wait, which is the whole story on
+    the adversarial trace."""
+    return [TTFT_MS - s
+            for s in metrics.histogram("slo_ttft_slack_ms").samples]
+
+
+def _cell_line(s, cttft) -> str:
+    return (f"cttft_p50={_pctl(cttft, 50):.0f};"
+            f"cttft_p99={_pctl(cttft, 99):.0f};"
+            f"ttft_p50={s.ttft_ms_p50:.0f};ttft_p99={s.ttft_ms_p99:.0f};"
+            f"tpot_p50={s.tpot_ms_p50:.1f};tpot_p99={s.tpot_ms_p99:.1f};"
+            f"attain={s.slo_attainment:.3f};"
+            f"ttft_att={s.slo_ttft_attained};ttft_tot={s.slo_ttft_total};"
+            f"starve_preempts={s.slo_starve_preempts};"
+            f"preempted={s.preempted};gen={s.generated_tokens}")
+
+
+def run(smoke: bool = False, json_path: str | None = None):
+    from repro.configs import smoke_config
+    from repro.models import build_model
+
+    reset_rows()
+    cfg = smoke_config("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    vocab = cfg.vocab_size
+
+    stats = {}
+    cttfts = {}
+    groups: dict[tuple, tuple] = {}   # (kind, shape, layout) -> ref toks
+    for kind, policy, shape, layout in _cells(smoke):
+        name = (f"matrix_{kind}_{policy}_{shape[0]}x{shape[1]}_{layout}")
+        toks, rids, s, metrics = _run_cell(model, params, vocab, kind,
+                                           policy, shape, layout)
+        stats[(kind, policy, shape, layout)] = s
+        cttfts[(kind, policy, shape, layout)] = _client_ttft(metrics)
+        emit(name, s.wall_s * 1e6,
+             _cell_line(s, cttfts[(kind, policy, shape, layout)]))
+        # policies reorder, never alter, sampling: within a cell group
+        # every policy's per-request streams must be byte-identical
+        gkey = (kind, shape, layout)
+        if gkey in groups:
+            ref_policy, ref = groups[gkey]
+            check_tokens(f"run_matrix/{kind}_{shape}_{layout}",
+                         ref_policy, ref, policy, toks, rids)
+        else:
+            groups[gkey] = (policy, toks)
+
+    # the adversarial headline: slo_adaptive must beat fifo on both
+    # TTFT attainment and virtual p99 TTFT (asserted, not reported)
+    hshape, hlayout = (SMOKE_SHAPE, "dense") if smoke else (SHAPES[1],
+                                                            "dense")
+    f = stats[("adversarial", "fifo", hshape, hlayout)]
+    a = stats[("adversarial", "slo_adaptive", hshape, hlayout)]
+    f_p99 = _pctl(cttfts[("adversarial", "fifo", hshape, hlayout)], 99)
+    a_p99 = _pctl(cttfts[("adversarial", "slo_adaptive", hshape,
+                          hlayout)], 99)
+    f_att = f.slo_ttft_attained / max(f.slo_ttft_total, 1)
+    a_att = a.slo_ttft_attained / max(a.slo_ttft_total, 1)
+    emit("matrix_headline", "",
+         f"fifo_attain={f_att:.3f};slo_attain={a_att:.3f};"
+         f"fifo_cttft_p99={f_p99:.0f};slo_cttft_p99={a_p99:.0f};"
+         f"trace=adversarial_{hshape[0]}x{hshape[1]}_{hlayout}")
+    assert a_att > f_att, (
+        f"slo_adaptive TTFT attainment {a_att:.3f} does not beat fifo "
+        f"{f_att:.3f} on the adversarial trace")
+    assert a_p99 < f_p99, (
+        f"slo_adaptive virtual p99 client TTFT {a_p99:.0f}ms does not "
+        f"beat fifo {f_p99:.0f}ms on the adversarial trace")
+    if smoke:
+        # the CI bar from the starvation satellite: the adaptive policy
+        # attains >= 90% of the budgeted shorts' TTFT deadlines while
+        # fifo, serving the straggler wave first, misses them all
+        assert a_att >= 0.9, (
+            f"slo_adaptive attainment {a_att:.3f} < 0.9 on the "
+            "adversarial smoke trace")
+
+    if json_path:
+        write_json(json_path, bench="run_matrix", smoke=smoke,
+                   slo={"fifo_attain": f_att, "slo_attain": a_att})
+    return stats
+
+
+if __name__ == "__main__":
+    import os
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "src"))
+    from benchmarks.common import json_path_arg
+    print("name,us_per_call,derived")
+    run(smoke="--smoke" in sys.argv, json_path=json_path_arg(sys.argv))

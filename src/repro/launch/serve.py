@@ -16,7 +16,9 @@ repro.serving.cluster).  ``--driver threaded`` steps the cluster's
 replicas on worker threads (overlapped dispatch, byte-identical
 tokens); ``--stream`` prints every token the moment it is sampled
 through the streaming generator API instead of waiting for full
-completions.
+completions.  ``--policy`` picks the scheduling policy
+(fifo/priority/edf/slo_adaptive) and ``--slo-ttft``/``--slo-tpot``
+attach per-request latency budgets, printed back as SLO attainment.
 """
 from __future__ import annotations
 
@@ -28,8 +30,8 @@ import jax
 
 from ..configs import get_config, list_archs, smoke_config
 from ..models import build_model
-from ..serving import (DRIVERS, ROUTER_POLICIES, Attributor, ClusterEngine,
-                       Request, ServeEngine, Tracer)
+from ..serving import (DRIVERS, POLICIES, ROUTER_POLICIES, Attributor,
+                       ClusterEngine, Request, ServeEngine, Tracer)
 
 
 def main():
@@ -79,6 +81,19 @@ def main():
                          "'sequential' steps replicas in one "
                          "deterministic loop, 'threaded' overlaps them "
                          "on worker threads (same tokens either way)")
+    ap.add_argument("--policy", default="fifo", choices=list(POLICIES),
+                    help="scheduling policy: fifo (legacy order), "
+                         "priority, edf (earliest TTFT deadline first), "
+                         "or slo_adaptive (EDF + deadline-protected "
+                         "victim picks + slack routing + starvation "
+                         "preemption; see docs/serving.md)")
+    ap.add_argument("--slo-ttft", type=float, default=None, metavar="MS",
+                    help="per-request first-token latency budget in ms "
+                         "(applied to every prompt; default: "
+                         "best-effort)")
+    ap.add_argument("--slo-tpot", type=float, default=None, metavar="MS",
+                    help="per-request decode budget in ms per output "
+                         "token (default: best-effort)")
     ap.add_argument("--stream", action="store_true",
                     help="print tokens as they are sampled (the "
                          "streaming generator API) instead of waiting "
@@ -142,7 +157,7 @@ def main():
                             admission=args.admission or "overcommit",
                             preempt_hysteresis=args.hysteresis,
                             prefix_cache=args.prefix_cache,
-                            driver=args.driver,
+                            driver=args.driver, policy=args.policy,
                             tracer=tracer, attribution=attribution)
     else:
         if args.driver != "sequential":
@@ -156,9 +171,11 @@ def main():
                           n_blocks=args.n_blocks, bucket=bucket,
                           admission=args.admission or "reserve",
                           prefix_cache=args.prefix_cache,
+                          policy=args.policy,
                           tracer=tracer, attribution=attribution)
     reqs = [Request([int(t) % cfg.vocab_size for t in p.split()],
-                    args.max_new, args.temperature, rid=i)
+                    args.max_new, args.temperature, rid=i,
+                    slo_ttft_ms=args.slo_ttft, slo_tpot_ms=args.slo_tpot)
             for i, p in enumerate(args.prompts)]
     if args.stream:
         if args.mode == "lockstep":
@@ -186,6 +203,11 @@ def main():
         paged += (f" prefix_hits={s.prefix_hits}"
                   f" prefix_reused={s.prefix_tokens_reused}")
     cluster = f" router={s.router_policy}" if s.router_policy else ""
+    if args.slo_ttft is not None or args.slo_tpot is not None:
+        cluster += (f" policy={s.sched_policy}"
+                    f" slo_attainment={s.slo_attainment:.2f}"
+                    f" (ttft {s.slo_ttft_attained}/{s.slo_ttft_total}"
+                    f" tpot {s.slo_tpot_attained}/{s.slo_tpot_total})")
     print(f"[serve] mode={s.mode} kv={s.kv_layout} "
           f"tokens/s={s.tokens_per_s:.1f} "
           f"generated={s.generated_tokens} steps={s.decode_steps} "

@@ -10,6 +10,13 @@
   Two drivers (``DRIVERS``): a deterministic sequential loop and a
   threaded event loop overlapping replica dispatch; byte-identical
   tokens either way.
+* scheduling — pluggable :class:`SchedPolicy` strategies (``POLICIES``:
+  fifo/priority/edf/slo_adaptive) driving admission order, routing, and
+  preemption-victim ranking from per-request latency budgets
+  (``Request.slo_ttft_ms``/``slo_tpot_ms``), including the starvation
+  pressure signal for dense/scan replicas that can never raise
+  :class:`PoolPressure`.  With no budgets set every policy is
+  byte-identical to fifo.  See ``docs/serving.md``.
 * streaming — ``ServeEngine.stream`` / ``ClusterEngine.stream`` yield
   :class:`TokenEvent` rows as tokens are sampled; ``generate`` takes an
   ``on_token`` callback for push-style consumers.
@@ -43,6 +50,7 @@ from .cluster import DRIVERS, ROUTER_POLICIES, ClusterEngine
 from .engine import EngineStats, Request, Result, ServeEngine, TokenEvent
 from .kvcache import (BlockAllocator, BlockPoolStats, PoolPressure,
                       blocks_needed, prefix_chain_keys)
+from .slo import POLICIES, SchedPolicy, make_policy
 from .telemetry import (MONOTONIC, NULL_TRACER, FakeClock, MetricsRegistry,
                         MonotonicClock, NullTracer, Tracer,
                         validate_lifecycle)

@@ -106,6 +106,7 @@ from ..models.model import Model
 from .engine import (EngineStats, Request, Result, ServeEngine,
                      _stream_events)
 from .kvcache import BlockAllocator, PoolPressure, blocks_needed
+from .slo import make_policy, slo_budget_s
 from .telemetry import MONOTONIC, NULL_TRACER, MetricsRegistry
 
 ROUTER_POLICIES = ("round_robin", "least_loaded", "shortest_queue")
@@ -154,6 +155,18 @@ class ClusterEngine:
     hysteresis is waived while the whole cluster is idle (an empty
     cluster cannot be under pressure, so waiting would only stall).
 
+    policy: scheduling policy name from ``repro.serving.slo.POLICIES``
+    (or a ``SchedPolicy`` instance), threaded to every replica.  fifo
+    (default) is byte-for-byte the legacy scheduler; priority/edf
+    reorder admission; slo_adaptive adds slack-aware routing,
+    deadline-protected victim picks, and the starvation pressure
+    signal: when a ready queued request's remaining TTFT slack falls
+    inside ``slo_guard_ms`` and no replica has a free slot, the cluster
+    preempts one *unprotected* victim — the only pressure a dense
+    scan-family replica (no block pool, no ``PoolPressure``) can feel.
+    With no budgets set every policy degenerates to FIFO order and
+    tokens are byte-identical (request-keyed sampling).
+
     prefix_cache: paged clusters only — replicas admit shared prompt
     prefixes by referencing resident pool blocks through the shared
     allocator's writer-scoped index (see the module doc; rejected for
@@ -182,6 +195,7 @@ class ClusterEngine:
                  preempt_hysteresis: int = 4,
                  prefix_cache: bool = False,
                  driver: str = "sequential",
+                 policy="fifo", slo_guard_ms: float = 50.0,
                  tracer=None, clock=None, attribution=None):
         if router not in ROUTER_POLICIES:
             raise ValueError(f"router={router!r}: pick one of "
@@ -204,11 +218,15 @@ class ClusterEngine:
         if preempt_hysteresis < 0:
             raise ValueError(
                 f"preempt_hysteresis={preempt_hysteresis} must be >= 0")
+        if slo_guard_ms < 0:
+            raise ValueError(f"slo_guard_ms={slo_guard_ms} must be >= 0")
         self.router = router
         self.driver = driver
         self.total_slots = total_slots
         self.kv_layout = kv_layout
         self.preempt_hysteresis = preempt_hysteresis
+        self.policy = make_policy(policy)
+        self.slo_guard_ms = slo_guard_ms
         if kv_layout == "paged":
             if n_blocks is None:
                 n_blocks = (total_slots * blocks_needed(cache_len,
@@ -230,7 +248,8 @@ class ClusterEngine:
             ServeEngine(model, params, max_batch=total_slots // replicas,
                         cache_len=cache_len, extra_inputs=extra_inputs,
                         mode="continuous", bucket=bucket, owner=i,
-                        track=f"replica{i}", **layout_kw)
+                        track=f"replica{i}", policy=self.policy,
+                        **layout_kw)
             for i in range(replicas)]
         self.last_stats: EngineStats | None = None
         self.replica_stats: list[EngineStats] = []
@@ -276,13 +295,19 @@ class ClusterEngine:
 
     def _route(self, r: Request) -> ServeEngine | None:
         """Pick the replica to admit ``r`` into, or None when no replica
-        has both a free slot and pool headroom (head-of-line blocking:
-        admission is strictly FIFO over the global queue)."""
+        has both a free slot and pool headroom.  A slack-routing policy
+        (``slo_adaptive``) sends *budgeted* requests to the emptiest
+        replica regardless of the configured router — the shortest path
+        to their first token — while best-effort traffic keeps the
+        configured policy (so with no budgets routing is untouched)."""
         cands = [e for e in self.engines
                  if e.session_free_slot() is not None
                  and e.session_can_admit(r)]
         if not cands:
             return None
+        if self.policy.slack_routes and slo_budget_s(r) is not None:
+            return min(cands, key=lambda e: (e.session_active,
+                                             self.engines.index(e)))
         if self.router == "round_robin":
             n = len(self.engines)
             for off in range(n):
@@ -304,18 +329,30 @@ class ClusterEngine:
     # Preemption.
     # ------------------------------------------------------------------
 
-    def _pick_victim(self, excl_engine, excl_slot):
-        """Lowest-priority, then youngest-admitted live request anywhere in
-        the cluster, excluding the slot whose growth raised the pressure
-        (preempting the requester would just redo its own work)."""
+    def _pick_victim(self, excl_engine, excl_slot, now: float | None = None,
+                     require_unprotected: bool = False):
+        """Policy-ranked victim pick across the cluster (the minimum
+        ``victim_key`` anywhere), excluding the slot whose growth raised
+        the pressure (preempting the requester would just redo its own
+        work).  The fifo/priority/edf key is the classic
+        (priority, -admit_seq) — lowest priority, then youngest
+        admission; ``slo_adaptive`` prepends the protection flag, so a
+        budgeted request inside its deadline slack is never chosen while
+        any unprotected (best-effort or already-late) victim exists.
+        ``require_unprotected=True`` (the starvation-pressure path)
+        additionally refuses protected victims outright — evicting one
+        in-slack request to rescue another would just trade misses."""
+        now = self.clock.now() if now is None else now
         cands = []
         for e in self.engines:
             if e.session_active == 0:
                 continue
-            for i, s in e.session_slots():
+            for key, i in e.session_victims(now):
                 if e is excl_engine and i == excl_slot:
                     continue
-                cands.append((s.req.priority, -s.admit_seq, e, i))
+                if require_unprotected and key[0]:
+                    continue
+                cands.append((key, e.owner, e, i))
         if not cands:
             return None
         _, _, e, i = min(cands, key=lambda c: (c[0], c[1]))
@@ -326,12 +363,69 @@ class ClusterEngine:
         sorted by submission order (a preempted request was admitted before
         anything still queued, so FIFO fairness puts it first - but two
         preemptions can land out of order).  Queue items are
-        (seq, order, request, ready_round); seq is unique, so the sort
-        never compares requests."""
+        (seq, order, request, ready_round, enqueue_t); seq is unique, so
+        the sort never compares requests."""
         queue.append(item)
         ordered = sorted(queue, key=lambda it: it[0])
         queue.clear()
         queue.extend(ordered)
+
+    def _hysteresis_wait(self, cm, tr, r, rounds_left: int) -> None:
+        cm.counter("hysteresis_wait_rounds").inc()
+        if tr.enabled:
+            tr.instant("cluster", "hysteresis_wait", rid=r.rid,
+                       rounds_left=rounds_left)
+
+    def _next_item(self, queue, rounds: int, busy: bool, cm, tr):
+        """Pick the next admission candidate from the global queue,
+        honoring the preemption hysteresis.  The fifo policy keeps
+        today's head-of-line semantics byte-for-byte: the head blocks,
+        nothing skips past a cooling-down victim, and the cool-down is
+        waived when the cluster is idle.  Reordering policies take the
+        minimum ``order_key`` over *ready* items instead — a cooling
+        victim no longer blocks urgent traffic behind it (that is the
+        point of deadline scheduling), but it still cannot be admitted
+        before its own cool-down (unless the cluster is idle).  Returns
+        the queue item, or None when nothing is admissible now."""
+        if not queue:
+            return None
+        if not self.policy.reorders:
+            item = queue[0]
+            if item[3] > rounds and busy:
+                self._hysteresis_wait(cm, tr, item[2], item[3] - rounds)
+                return None
+            return item
+        eligible = [it for it in queue if it[3] <= rounds]
+        if not eligible:
+            if busy:
+                self._hysteresis_wait(cm, tr, queue[0][2],
+                                      queue[0][3] - rounds)
+                return None
+            eligible = list(queue)   # idle cluster waives the cool-down
+        now = self.clock.now()
+        return min(eligible, key=lambda it: self.policy.order_key(
+            it[0], it[2], it[4], now))
+
+    def _starving_item(self, queue, rounds: int):
+        """The dense/scan pressure signal (``slo_adaptive`` only): the
+        most urgent *ready* queued request whose remaining TTFT slack
+        has fallen inside the guard band.  The caller pairs this
+        queue-age half with the slot-count half (no replica can admit
+        it) before preempting — replicas without a block pool never
+        raise ``PoolPressure``, so this is the only pressure they can
+        feel."""
+        if not (self.policy.preempts_on_starvation and queue):
+            return None
+        eligible = [it for it in queue if it[3] <= rounds]
+        if not eligible:
+            return None
+        now = self.clock.now()
+        item = min(eligible, key=lambda it: self.policy.order_key(
+            it[0], it[2], it[4], now))
+        if not self.policy.starving(item[2], item[4], now,
+                                    self.slo_guard_ms / 1e3):
+            return None
+        return item
 
     # ------------------------------------------------------------------
     # Public API.
@@ -415,25 +509,18 @@ class ClusterEngine:
         admit_seq = 0
         rounds = 0
         while queue or any(e.session_active for e in self.engines):
-            # route: FIFO head into a replica with slot + pool headroom
+            # route: the policy's next pick into a replica with slot +
+            # pool headroom (fifo: the FIFO head, head-of-line blocking)
             while queue:
-                seq, order, r, ready, enq_t = queue[0]
-                if ready > rounds and any(e.session_active
-                                          for e in self.engines):
-                    # anti-thrash hysteresis: a fresh victim waits out
-                    # its cool-down (head-of-line: nothing skips it);
-                    # waived when the cluster is idle — no live request
-                    # can be causing pressure then
-                    cm.counter("hysteresis_wait_rounds").inc()
-                    if tr.enabled:
-                        tr.instant("cluster", "hysteresis_wait",
-                                   rid=r.rid,
-                                   rounds_left=ready - rounds)
+                busy = any(e.session_active for e in self.engines)
+                item = self._next_item(queue, rounds, busy, cm, tr)
+                if item is None:
                     break
+                seq, order, r, ready, enq_t = item
                 e = self._route(r)
                 if e is None:
                     break
-                queue.popleft()
+                queue.remove(item)
                 if tr.enabled:
                     tr.instant("cluster", "route", rid=r.rid,
                                replica=e.owner, policy=self.router)
@@ -446,7 +533,36 @@ class ClusterEngine:
                 if res is not None:
                     out[seq] = res
                 admit_seq += 1
+            # starvation pressure (slo_adaptive): a ready queued request
+            # is about to miss its TTFT deadline and no replica can take
+            # it — preempt one unprotected victim so the next round's
+            # admission pass can place it.  This is how dense/scan
+            # replicas (no pool, no PoolPressure) feel pressure at all.
             stepped = False
+            starving = self._starving_item(queue, rounds)
+            # slot-count probe without _route: routing round_robin
+            # advances self._rr even when the pick is discarded
+            if starving is not None and not any(
+                    e.session_free_slot() is not None
+                    and e.session_can_admit(starving[2])
+                    for e in self.engines):
+                victim = self._pick_victim(None, None,
+                                           require_unprotected=True)
+                if victim is not None:
+                    ve, vi = victim
+                    tag, r2 = ve.session_preempt(vi)
+                    cm.counter("slo_starve_preempts").inc()
+                    ready_rnd = rounds + self.preempt_hysteresis
+                    if tr.enabled:
+                        tr.instant("cluster", "preempt_pick", rid=r2.rid,
+                                   replica=ve.owner, slot=vi,
+                                   starved=starving[2].rid)
+                        tr.instant("cluster", "requeue", rid=r2.rid,
+                                   ready_round=ready_rnd)
+                    self._requeue(queue, (tag, todo[tag][0], r2,
+                                          ready_rnd, self.clock.now()))
+                    stepped = True   # progress: the freed slot admits
+                    #                  the starving request next round
             for e in self.engines:
                 if e.session_active == 0:
                     continue      # a drained replica skips its step
@@ -543,11 +659,26 @@ class ClusterEngine:
             in enumerate(todo))
         slots_used = [0] * n      # admits dispatched minus retirements
         backlog = [0] * n         # advisory decode-token backlog
-        # rid -> (replica, priority, admit_seq): the victim-pick view
-        assignment: dict[int, tuple[int, int, int]] = {}
+        # rid -> (replica, request, admit_seq, dispatch time): the
+        # victim-pick view (the request + clock base feed the policy's
+        # victim_key, e.g. slo_adaptive's deadline-slack protection)
+        assignment: dict[int, tuple[int, Request, int, float]] = {}
         pending = collections.deque()   # unresolved (replica, slot, rid)
         state = {"admit_seq": 0, "inflight": 0, "rounds": 0, "done": 0,
-                 "outstanding": None}   # outstanding: (victim_rid, repl)
+                 "outstanding": None}
+        # outstanding: (victim_rid, replica, kind) - kind "pressure"
+        # (resolves pending[0] and resumes the blocked worker) or
+        # "starve" (starvation preempt: nothing to resume)
+
+        def victim_cands(now, exclude=(), unprotected_only=False):
+            """Policy-ranked victim candidates over the coordinator's
+            assignment view (min = preferred victim; ties by rid)."""
+            return [(self.policy.victim_key(req, aseq, t0, now), rid, vi)
+                    for rid, (vi, req, aseq, t0) in assignment.items()
+                    if rid not in exclude
+                    and not (unprotected_only
+                             and self.policy.victim_key(req, aseq, t0,
+                                                        now)[0])]
 
         def service_pressure():
             """Issue the next preempt for the pressure at the head of
@@ -557,21 +688,47 @@ class ClusterEngine:
                 return
             req_i, _slot, grow_rid = pending[0]
             # never evict a request whose own growth is blocked waiting
-            # on us - preempting a requester just redoes its work
+            # on us - preempting a requester just redoes its own work
             growers = {p[2] for p in pending}
-            cands = [(pr, -aseq, rid, vi)
-                     for rid, (vi, pr, aseq) in assignment.items()
-                     if rid not in growers]
+            cands = victim_cands(self.clock.now(), exclude=growers)
             if not cands:
                 raise RuntimeError(
                     "pool pressure with nothing preemptible: genuine "
                     "OOM (check_request should have made this "
                     "impossible)")
-            _, _, vrid, vi = min(cands)
+            _, vrid, vi = min(cands)
             if tr.enabled:
                 tr.instant("cluster", "preempt_pick", rid=vrid,
                            replica=vi, pressured=req_i)
-            state["outstanding"] = (vrid, vi)
+            state["outstanding"] = (vrid, vi, "pressure")
+            inboxes[vi].put(("preempt", vrid))
+
+        def service_starvation():
+            """The dense/scan pressure signal, threaded-driver side: a
+            ready queued request inside its TTFT guard band that no
+            replica can take triggers one preempt of an unprotected
+            victim.  Deferred while any pool pressure is in flight —
+            resolving real OOM comes first."""
+            if (state["outstanding"] is not None or pending
+                    or not assignment):
+                return
+            item = self._starving_item(queue, state["rounds"])
+            # slot-count probe (not _route_threaded: round_robin would
+            # advance self._rr on a discarded pick)
+            if item is None or any(
+                    slots_used[i] < per_replica
+                    and e.session_can_admit(item[2])
+                    for i, e in enumerate(self.engines)):
+                return
+            cands = victim_cands(self.clock.now(), unprotected_only=True)
+            if not cands:
+                return
+            _, vrid, vi = min(cands)
+            cm.counter("slo_starve_preempts").inc()
+            if tr.enabled:
+                tr.instant("cluster", "preempt_pick", rid=vrid,
+                           replica=vi, starved=item[2].rid)
+            state["outstanding"] = (vrid, vi, "starve")
             inboxes[vi].put(("preempt", vrid))
 
         def handle(ev):
@@ -609,15 +766,19 @@ class ClusterEngine:
                 _, vi, tag, r2 = ev
                 slots_used[vi] -= 1
                 assignment.pop(r2.rid, None)
-                req_i, _slot, _rid = pending.popleft()
+                _vrid, _vrepl, why = state["outstanding"]
+                state["outstanding"] = None
                 ready = state["rounds"] + self.preempt_hysteresis
                 if tr.enabled:
                     tr.instant("cluster", "requeue", rid=r2.rid,
                                ready_round=ready)
                 self._requeue(queue, (tag, todo[tag][0], r2, ready,
                                       self.clock.now()))
-                state["outstanding"] = None
-                inboxes[req_i].put(("resume",))
+                if why == "pressure":
+                    req_i, _slot, _rid = pending.popleft()
+                    inboxes[req_i].put(("resume",))
+                # "starve": no pressured worker is blocked - the freed
+                # slot simply admits the starving request next pass
             elif kind == "preempt_miss":
                 # the pick finished in flight; its step_done was queued
                 # before this miss, so the re-pick sees it retired
@@ -632,33 +793,31 @@ class ClusterEngine:
             while state["done"] < len(todo):
                 # admission dispatch (mirrors the sequential head loop)
                 while queue:
-                    seq, order, r, ready, enq_t = queue[0]
                     busy = state["inflight"] > 0 or any(slots_used)
-                    if ready > state["rounds"] and busy:
-                        cm.counter("hysteresis_wait_rounds").inc()
-                        if tr.enabled:
-                            tr.instant(
-                                "cluster", "hysteresis_wait", rid=r.rid,
-                                rounds_left=ready - state["rounds"])
+                    item = self._next_item(queue, state["rounds"], busy,
+                                           cm, tr)
+                    if item is None:
                         break
+                    seq, order, r, ready, enq_t = item
                     i = self._route_threaded(r, slots_used, backlog,
                                              per_replica)
                     if i is None:
                         break
-                    queue.popleft()
+                    queue.remove(item)
                     if tr.enabled:
                         tr.instant("cluster", "route", rid=r.rid,
                                    replica=i, policy=self.router)
                     slots_used[i] += 1
                     backlog[i] += r.max_new_tokens - len(r.done)
                     state["inflight"] += 1
-                    assignment[r.rid] = (i, r.priority,
-                                         state["admit_seq"])
+                    assignment[r.rid] = (i, r, state["admit_seq"],
+                                         self.clock.now())
                     inboxes[i].put(("admit", (seq, order, r, ready,
                                               enq_t),
                                     state["admit_seq"]))
                     state["admit_seq"] += 1
                 service_pressure()
+                service_starvation()
                 if (queue and state["inflight"] == 0
                         and not any(slots_used) and not pending):
                     raise RuntimeError(
@@ -814,4 +973,4 @@ class ClusterEngine:
             prefill_compiles=sum(s.prefill_compiles for s in reps),
             block_util_peak=(self.pool.stats().peak_utilization
                              if self.pool is not None else 0.0),
-            router_policy=self.router)
+            router_policy=self.router, sched_policy=self.policy.name)

@@ -139,6 +139,7 @@ from ..models.model import Model
 from . import kvcache
 from .attribution import NULL_ATTR, VERDICTS, dominant_verdict
 from .kvcache import BlockAllocator, PoolPressure, blocks_needed
+from .slo import make_policy
 from .telemetry import MONOTONIC, NULL_TRACER, MetricsRegistry
 
 
@@ -173,6 +174,14 @@ class Request:
     # times this request has been preempted (a victim evicted mid-prefill
     # carries no ``done`` prefix, so ``done`` alone cannot mark a requeue)
     requeues: int = 0
+    # SLO budgets (None = best-effort, the default): ``slo_ttft_ms`` is
+    # the enqueue -> first-token target, ``slo_tpot_ms`` the decode
+    # ms-per-output-token target.  Budgets never change the token
+    # stream — they drive the scheduling policies in ``serving.slo``
+    # (admission order, victim protection, starvation pressure) and the
+    # ``slo_*`` attainment metrics.
+    slo_ttft_ms: float | None = None
+    slo_tpot_ms: float | None = None
 
 
 @dataclasses.dataclass
@@ -281,6 +290,16 @@ class EngineStats:
     tpot_ms_p99: float = 0.0
     queue_age_ms_mean: float = 0.0  # enqueue -> admission wait
     queue_age_ms_p99: float = 0.0
+    # -- SLO attainment (repro.serving.slo) --
+    # Only requests carrying a budget are scored; with no budgets in the
+    # trace the totals stay 0 and ``slo_attainment`` reads 1.0.
+    sched_policy: str = ""         # admission/victim policy in effect
+    slo_ttft_total: int = 0        # first tokens scored against a budget
+    slo_ttft_attained: int = 0     # ... that landed inside it
+    slo_tpot_total: int = 0        # finished requests with a TPOT budget
+    slo_tpot_attained: int = 0
+    slo_attainment: float = 1.0    # attained / total over both phases
+    slo_starve_preempts: int = 0   # cluster: starvation-pressure evictions
     # -- utilization attribution (repro.serving.attribution) --
     # All-zero/empty unless an Attributor was attached.  fu_utilization
     # is the paper-§6 analog: useful flops (idle slot lanes excluded,
@@ -300,7 +319,8 @@ class EngineStats:
     def from_registry(cls, m: MetricsRegistry, *, mode: str, wall_s: float,
                       kv_layout: str = "dense", prefill_compiles: int = 0,
                       block_util_peak: float = 0.0,
-                      router_policy: str = "") -> "EngineStats":
+                      router_policy: str = "",
+                      sched_policy: str = "") -> "EngineStats":
         """Derive the stats view from a registry (one engine session's,
         or several replicas' registries merged)."""
         ttft = m.histogram("ttft_ms")
@@ -328,6 +348,10 @@ class EngineStats:
                        for v in VERDICTS}
         ach_f = useful / busy_s if busy_s > 0 else 0.0
         ach_b = moved / busy_s if busy_s > 0 else 0.0
+        slo_tt = m.counter("slo_ttft_total").n
+        slo_ta = m.counter("slo_ttft_attained").n
+        slo_pt = m.counter("slo_tpot_total").n
+        slo_pa = m.counter("slo_tpot_attained").n
         return cls(
             mode, wall_s, gen, gen / max(wall_s, 1e-9), steps,
             busy / max(offered, 1), ttft.mean,
@@ -347,6 +371,12 @@ class EngineStats:
             tpot_ms_p99=tpot.percentile(99),
             queue_age_ms_mean=qage.mean,
             queue_age_ms_p99=qage.percentile(99),
+            sched_policy=sched_policy,
+            slo_ttft_total=slo_tt, slo_ttft_attained=slo_ta,
+            slo_tpot_total=slo_pt, slo_tpot_attained=slo_pa,
+            slo_attainment=((slo_ta + slo_pa) / (slo_tt + slo_pt)
+                            if slo_tt + slo_pt else 1.0),
+            slo_starve_preempts=m.counter("slo_starve_preempts").n,
             fu_utilization=ach_f / peak if peak > 0 else 0.0,
             achieved_flops_per_s=ach_f,
             achieved_bytes_per_s=ach_b,
@@ -380,6 +410,8 @@ class _Slot:
     extra_row: int = 0             # extra_inputs row (vlm patches)
     admit_t: float = 0.0           # clock time of the *first* admission
     #                                (TTFT base, carried across preempts)
+    enqueue_t: float | None = None  # clock time the request entered the
+    #                                caller's queue (SLO deadline base)
     span_t0: float = 0.0           # clock time of *this* admission (the
     #                                request span's start in the trace)
     first_tok_t: float = 0.0       # clock time of this admission's first
@@ -473,6 +505,12 @@ class ServeEngine:
     bucket: None (exact-length prefills), "pow2", or an integer
     pad-to-multiple; rejected when the family's prefill cannot mask pads
     (``model.supports_prefill_len``).
+    policy: scheduling policy name from ``serving.slo.POLICIES`` (or a
+    ``SchedPolicy`` instance) — drives admission order inside
+    ``generate`` and the ``session_victims`` ranking; "fifo" (default)
+    is byte-for-byte the pre-policy scheduler, and every policy is
+    token-identical to it (request-keyed sampling; budgets only move
+    *when* a request runs).
     prefix_cache: paged layout only — admit shared prompt prefixes by
     referencing resident pool blocks (see the module doc); rejected for
     families whose prefill carries a non-token prefix (vlm patches:
@@ -497,7 +535,7 @@ class ServeEngine:
                  bucket: str | int | None = None,
                  allocator: BlockAllocator | None = None,
                  admission: str = "reserve", owner: Any = 0,
-                 prefix_cache: bool = False,
+                 prefix_cache: bool = False, policy="fifo",
                  tracer=None, clock=None, track: str | None = None,
                  attribution=None):
         assert mode in ("auto", "continuous", "lockstep"), mode
@@ -554,6 +592,7 @@ class ServeEngine:
                 "blocks cannot be content-hashed")
         self.mode = mode
         self.kv_layout = kv_layout
+        self.policy = make_policy(policy)
         self._admission = admission
         self.prefix_cache = prefix_cache
         self.last_stats: EngineStats | None = None
@@ -874,6 +913,16 @@ class ServeEngine:
         return [(i, s) for i, s in enumerate(self._sess.slots)
                 if s is not None]
 
+    def session_victims(self, now: float):
+        """Policy-ranked preemption candidates of the open session:
+        ``(victim_key, slot)`` pairs — the minimum key is the preferred
+        victim.  The key's leading element is the policy's protection
+        flag (``slo_adaptive``: 1 while the request is inside its
+        deadline slack), so callers can tell a protected pick apart."""
+        return [(self.policy.victim_key(s.req, s.admit_seq, s.admit_t,
+                                        now), i)
+                for i, s in self.session_slots()]
+
     def session_backlog(self) -> int:
         """Outstanding decode tokens across live slots (shortest-queue
         routing metric)."""
@@ -914,6 +963,59 @@ class ServeEngine:
         if sess.on_token is not None:
             sess.on_token(TokenEvent(r.rid, tok, index,
                                      index + 1 >= r.max_new_tokens))
+
+    def _observe_slo_ttft(self, r: Request, slot: int, enqueue_t,
+                          admit_t: float, t1: float) -> None:
+        """Score the first token of a TTFT-budgeted request.  The
+        deadline base is the enqueue time (what a client experiences);
+        a requeued mid-prefill victim falls back to its first admission
+        time (``first_admit_t``), so a chain of evictions cannot reset
+        the clock.  Host-side only: budgets never touch tokens."""
+        base = r.first_admit_t
+        if base is None:
+            base = enqueue_t if enqueue_t is not None else admit_t
+        att_ms = (t1 - base) * 1e3
+        m = self._sess.metrics
+        m.counter("slo_ttft_total").inc()
+        m.histogram("slo_ttft_slack_ms").observe(r.slo_ttft_ms - att_ms)
+        if att_ms <= r.slo_ttft_ms:
+            m.counter("slo_ttft_attained").inc()
+        elif self.tracer.enabled:
+            # deadline-miss span: the overrun stretch, deadline -> first
+            # token, on the slot track next to the prefill it indicts
+            self.tracer.complete(self._slot_track(slot), "slo_miss",
+                                 base + r.slo_ttft_ms / 1e3, t1,
+                                 rid=r.rid, phase="ttft",
+                                 over_ms=att_ms - r.slo_ttft_ms)
+
+    def _observe_slo_tpot(self, s: _Slot, per_tok_ms: float) -> None:
+        """Score a finished TPOT-budgeted request's decode rate."""
+        m = self._sess.metrics
+        m.counter("slo_tpot_total").inc()
+        m.histogram("slo_tpot_slack_ms").observe(
+            s.req.slo_tpot_ms - per_tok_ms)
+        if per_tok_ms <= s.req.slo_tpot_ms:
+            m.counter("slo_tpot_attained").inc()
+        elif self.tracer.enabled:
+            self.tracer.instant(self.track, "slo_miss", rid=s.req.rid,
+                                phase="tpot",
+                                over_ms=per_tok_ms - s.req.slo_tpot_ms)
+
+    def _replay_done(self, sub, done):
+        """Rebuild a preempted scan-family request's recurrent state
+        bit-exactly: starting from the prompt-only prefill cache ``sub``,
+        feed each already-generated ``done`` token through the decode
+        step on a batch-1 slot pool — the same executable family the
+        uninterrupted run decoded with, so the resumed stream's logits
+        (and tokens) are byte-identical to never having been preempted.
+        Returns (last logits, batch-1 pool cache); the last logits are
+        the distribution for stream index ``len(done)``."""
+        mini = self._slot_write(self._cache_expand(sub, 1), sub, 0)
+        logits = None
+        for t in done:
+            logits, mini = self._decode(self.params, mini,
+                                        jnp.asarray([[t]], jnp.int32))
+        return logits, mini
 
     def session_admit(self, r: Request, tag: int, extra_row: int = 0,
                       admit_seq: int | None = None,
@@ -1035,7 +1137,7 @@ class ServeEngine:
                 blocks=taken, shared_until=h,
                 chunks_done=chunks_done, extra_row=extra_row,
                 admit_t=(r.first_admit_t if r.first_admit_t is not None
-                         else t0), span_t0=t0)
+                         else t0), enqueue_t=enqueue_t, span_t0=t0)
             sess.temps[slot] = r.temperature
             sess.rids[slot] = r.rid
             return None
@@ -1047,7 +1149,18 @@ class ServeEngine:
             if r.requeues:
                 tr.flow_end(self._slot_track(slot), "preempt_flow",
                             f"preempt-{r.rid}-{r.requeues}")
-        prompt = np.asarray(list(r.prompt) + list(r.done), np.int32)
+        # scan families re-admit by *replay*: chunkwise prefill covers
+        # only the original prompt (the computation the uninterrupted run
+        # performed) and the generated ``done`` tokens are stepped through
+        # the decode recurrence afterwards (``_replay_done``).  The
+        # chunked prefill and the stepwise recurrence are mathematically
+        # but not bitwise interchangeable, so prefilling prompt+done
+        # would perturb the resumed stream's logits.  KV families have no
+        # such split (prefill writes per-position KV): prompt+done
+        # prefills in one pass, byte-exactly.
+        replay = bool(r.done) and self._slot_reset is not None
+        prompt = np.asarray(
+            list(r.prompt) + ([] if replay else list(r.done)), np.int32)
         plen = len(prompt)
         sb = self._bucket_len(plen)
         if self.bucket:
@@ -1064,6 +1177,9 @@ class ServeEngine:
                      **self._gather_extra([extra_row])}
         self._prefill_shapes.add(batch["tokens"].shape[1])
         logits, sub = self._prefill(self.params, batch)
+        if replay:
+            logits, sub = self._replay_done(sub, r.done)
+            sess.metrics.counter("resume_replay_tokens").inc(len(r.done))
         # sub["pos"] covers any model-side prefix (e.g. vlm patches)
         prefill_pos = int(np.asarray(sub["pos"]).reshape(()))
         self._check_budget(prefill_pos, r.max_new_tokens - len(r.done),
@@ -1093,12 +1209,14 @@ class ServeEngine:
             sess.metrics.counter("requeued").inc()
         if not r.done:
             sess.metrics.histogram("ttft_ms").observe(ttft_ms)
+            if r.slo_ttft_ms is not None:
+                self._observe_slo_ttft(r, slot, enqueue_t, t0, t1)
         if r.first_ttft_ms is not None:
             ttft_ms = r.first_ttft_ms   # re-admission: keep the real TTFT
         self._emit_token(sess, r, tok, len(r.done))
         s = _Slot(req=r, tag=tag, tokens=[tok], ttft_ms=ttft_ms,
                   admit_seq=admit_seq, prefill_pos=prefill_pos, admit_t=t0,
-                  span_t0=t0, first_tok_t=t1)
+                  enqueue_t=enqueue_t, span_t0=t0, first_tok_t=t1)
         if len(r.done) + 1 >= r.max_new_tokens:
             res = self._finish(s)       # satisfied by prefill alone
             self._release(s, slot)
@@ -1348,6 +1466,8 @@ class ServeEngine:
                                  chunks=n_chunks, tokens=s.prefill_pos)
         if not r.done:
             sess.metrics.histogram("ttft_ms").observe(ttft_ms)
+            if r.slo_ttft_ms is not None:
+                self._observe_slo_ttft(r, i, s.enqueue_t, s.admit_t, t1)
         s.ttft_ms = (r.first_ttft_ms if r.first_ttft_ms is not None
                      else ttft_ms)
         s.first_tok_t = t1
@@ -1447,7 +1567,8 @@ class ServeEngine:
             kv_layout=self.kv_layout,
             prefill_compiles=len(self._prefill_shapes),
             block_util_peak=(self.allocator.stats().peak_utilization
-                             if self.kv_layout == "paged" else 0.0))
+                             if self.kv_layout == "paged" else 0.0),
+            sched_policy=self.policy.name)
         self.last_metrics = sess.metrics
         if self.kv_layout == "paged" and self.prefix_cache:
             # keep the device pool alive across sessions: cached blocks'
@@ -1463,6 +1584,8 @@ class ServeEngine:
         m.counter("generated_tokens").inc(len(tokens))
         if s.steps:
             m.histogram("tpot_ms").observe(per_tok)
+            if s.req.slo_tpot_ms is not None:
+                self._observe_slo_tpot(s, per_tok)
         return Result(s.req.rid, tokens, s.ttft_ms, per_tok)
 
     def _trace_finish(self, s: _Slot, i: int, t1: float) -> None:
@@ -1529,12 +1652,25 @@ class ServeEngine:
         try:
             while queue or self.session_active:
                 # admission: refill every free slot before the next decode
-                # step (FIFO - no skip-ahead, so a big request cannot
-                # starve under paged admission)
+                # step.  The fifo policy admits strictly in arrival order
+                # (no skip-ahead, so a big request cannot starve under
+                # paged admission); reordering policies pick the minimum
+                # order_key instead — but still stop at the first
+                # inadmissible pick rather than skipping past it, so the
+                # no-starvation property holds per policy choice too
                 while queue and self.session_free_slot() is not None:
-                    if not self.session_can_admit(queue[0][2]):
+                    if self.policy.reorders:
+                        now = self.clock.now()
+                        item = min(queue,
+                                   key=lambda it: self.policy.order_key(
+                                       it[0], it[2], self._sess.t_start,
+                                       now))
+                    else:
+                        item = queue[0]
+                    seq, order, r = item
+                    if not self.session_can_admit(r):
                         break
-                    seq, order, r = queue.popleft()
+                    queue.remove(item)
                     res = self.session_admit(r, tag=seq, extra_row=order,
                                              enqueue_t=self._sess.t_start)
                     if res is not None:

@@ -123,6 +123,23 @@ def harness():
                                                  total_slots=4,
                                                  n_blocks=8,
                                                  driver="threaded"),
+        # scheduling-policy cells, budgets unset: every policy must
+        # degenerate to FIFO byte-for-byte (the slo.py contract) — one
+        # single-engine reorderer, one reordering cluster, the adaptive
+        # policy over the preempting pool, and the adaptive policy under
+        # the threaded driver (test_policy_matrix_no_budgets_identical
+        # sweeps the full policy x topology product on fixed seeds)
+        "dense-edf": eng(max_batch=SLOTS, mode="continuous",
+                         policy="edf"),
+        "cluster-Nx1-priority": cluster(replicas=SLOTS,
+                                        total_slots=SLOTS,
+                                        policy="priority"),
+        "cluster-2x2-pressure-slo": cluster(replicas=2, total_slots=4,
+                                            n_blocks=8,
+                                            policy="slo_adaptive"),
+        "cluster-2x2-slo-threaded": cluster(replicas=2, total_slots=4,
+                                            policy="slo_adaptive",
+                                            driver="threaded"),
         # prefix cache on: shared-prefix traces admit by reference with
         # refcounted blocks + COW; cache state *persists across traces*
         # (cached blocks survive generate calls), so every subsequent
@@ -452,6 +469,100 @@ def test_pressure_prefix_cluster_preempts_shared_holders(harness):
     cl.pool.check_integrity()
     assert cl.pool.n_live == 0 and cl.pool.n_reserved == 0
     assert cl.pool.n_free == cl.pool.capacity
+
+
+def _set_policy(eng, policy):
+    """Swap the scheduling policy on a module-scoped engine in place
+    (policies are stateless strategy objects; no recompilation).  For a
+    cluster the replicas share the cluster's policy instance."""
+    from repro.serving import make_policy
+    pol = make_policy(policy)
+    eng.policy = pol
+    for e in getattr(eng, "engines", ()):
+        e.policy = pol
+    return pol
+
+
+def test_policy_matrix_no_budgets_identical(harness):
+    """Every scheduling policy x {single engine, sequential cluster,
+    threaded cluster}: with no request carrying an SLO budget, each
+    policy's order keys are degenerate and the schedule — hence the
+    token streams — must be byte-identical to the FIFO dense reference.
+    Fixed seeds here; the hypothesis matrix above adds depth on the
+    dedicated policy cells."""
+    from repro.serving import POLICIES
+    cfg, engines = harness
+    cells = ("dense-continuous", "cluster-Nx1-round_robin",
+             "cluster-Nx1-threaded")
+    for seed in (3, 11, 27):
+        rng = np.random.default_rng(seed)
+        reqs, key_seed = _draw_trace(rng, cfg.vocab_size)
+        key = jax.random.key(key_seed)
+        ref = engines["dense-continuous"].generate(reqs, key=key)
+        for policy in POLICIES:
+            for cell in cells:
+                eng = engines[cell]
+                old = eng.policy
+                _set_policy(eng, policy)
+                try:
+                    got = eng.generate(reqs, key=key)
+                finally:
+                    eng.policy = old
+                    for e in getattr(eng, "engines", ()):
+                        e.policy = old
+                assert eng.last_stats.sched_policy == policy
+                for a, b in zip(ref, got):
+                    assert a.tokens == b.tokens, (
+                        f"{cell}/{policy} diverged on rid={a.rid} "
+                        f"(seed {seed}): {a.tokens} vs {b.tokens}")
+
+
+def test_policies_with_random_budgets_streams_unchanged(harness):
+    """Attaching random SLO budgets may reorder and preempt, but sampling
+    is request-keyed: every policy's per-request token streams must still
+    equal the budget-less dense reference, and the shared pools must
+    drain clean even when deadline pressure drove extra preemptions."""
+    import dataclasses
+    from repro.serving import POLICIES
+    cfg, engines = harness
+    cells = ("cluster-Nx1-round_robin", "cluster-2x2-pressure-slo",
+             "cluster-2x2-slo-threaded")
+    for seed in (5, 19):
+        rng = np.random.default_rng(seed)
+        reqs, key_seed = _draw_trace(rng, cfg.vocab_size)
+        key = jax.random.key(key_seed)
+        ref = engines["dense-continuous"].generate(reqs, key=key)
+        # random budgets on a random subset (tight through generous, in
+        # real ms against the monotonic clock: schedules vary run to
+        # run, tokens must not)
+        budgeted = [
+            dataclasses.replace(
+                r,
+                slo_ttft_ms=(float(rng.uniform(1.0, 200.0))
+                             if rng.integers(0, 2) else None),
+                slo_tpot_ms=(float(rng.uniform(0.5, 50.0))
+                             if rng.integers(0, 2) else None))
+            for r in reqs]
+        for policy in POLICIES:
+            for cell in cells:
+                eng = engines[cell]
+                old = eng.policy
+                _set_policy(eng, policy)
+                try:
+                    got = eng.generate(budgeted, key=key)
+                finally:
+                    eng.policy = old
+                    for e in getattr(eng, "engines", ()):
+                        e.policy = old
+                for a, b in zip(ref, got):
+                    assert a.tokens == b.tokens, (
+                        f"{cell}/{policy} budgets changed tokens on "
+                        f"rid={a.rid} (seed {seed})")
+                pool = getattr(eng, "pool", None)
+                if pool is not None:
+                    pool.check_integrity()
+                    assert pool.n_live == 0, (cell, policy, seed)
+                    assert pool.n_reserved == 0, (cell, policy, seed)
 
 
 def test_paged_single_compile_across_trace_shapes(harness):

@@ -1,0 +1,304 @@
+"""SLO scheduling tests: policy key semantics, the victim-protection
+bugfix regression, the dense/scan queue-age pressure signal, and the
+starvation regression (FIFO misses an adversarial trace's TTFT budgets,
+``slo_adaptive`` attains >= 90% — byte-identical tokens either way).
+
+The cluster tests run a scan-family (ssm) cluster on the dense slot
+layout under a :class:`FakeClock` (1 virtual ms per clock read): these
+replicas have no block pool, so ``PoolPressure`` can never fire and the
+slot-count + queue-age starvation signal is the *only* pressure they can
+feel — exactly the gap the signal exists to close.
+"""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import build_model
+from repro.serving import (ClusterEngine, FakeClock, POLICIES, Request,
+                           SchedPolicy, make_policy)
+from repro.serving.slo import in_slack, slo_budget_s, ttft_deadline
+
+TICK_S = 1e-3                   # 1 virtual ms per clock read
+
+
+def _req(rid=0, prompt=(1, 2, 3), max_new=4, prio=0, ttft=None, tpot=None):
+    return Request(prompt=list(prompt), max_new_tokens=max_new, rid=rid,
+                   priority=prio, slo_ttft_ms=ttft, slo_tpot_ms=tpot)
+
+
+# ---------------------------------------------------------------------------
+# Pure policy semantics (no model, no clock).
+# ---------------------------------------------------------------------------
+
+def test_make_policy_registry_and_errors():
+    for name in POLICIES:
+        pol = make_policy(name)
+        assert isinstance(pol, SchedPolicy)
+        assert pol.name == name
+        assert make_policy(pol) is pol          # instance passthrough
+    with pytest.raises(ValueError, match="nope"):
+        make_policy("nope")
+
+
+def test_budget_helpers():
+    best_effort = _req()
+    assert ttft_deadline(best_effort, 5.0) == float("inf")
+    assert slo_budget_s(best_effort) is None
+    assert not in_slack(best_effort, 0.0, 0.0)  # never protected
+
+    r = _req(ttft=100.0, tpot=10.0, max_new=4)
+    assert ttft_deadline(r, 5.0) == pytest.approx(5.1)
+    # 100ms TTFT + 10ms x 4 owed tokens = 140ms window
+    assert slo_budget_s(r) == pytest.approx(0.140)
+    assert in_slack(r, t0=0.0, now=0.139)
+    assert not in_slack(r, t0=0.0, now=0.141)
+
+
+def test_order_keys_degenerate_without_budgets():
+    """With no budgets (and flat priorities) every policy's admission
+    key sorts by arrival seq — the FIFO-equivalence contract."""
+    reqs = [_req(rid=i) for i in range(5)]
+    for name in POLICIES:
+        pol = make_policy(name)
+        keys = [pol.order_key(seq, r, 0.0, 1.0)
+                for seq, r in enumerate(reqs)]
+        assert keys == sorted(keys)
+
+
+def test_order_keys_reorder_with_signal():
+    pri = make_policy("priority")
+    lo, hi = _req(rid=0, prio=0), _req(rid=1, prio=2)
+    assert pri.order_key(1, hi, 0.0, 0.0) < pri.order_key(0, lo, 0.0, 0.0)
+
+    edf = make_policy("edf")
+    tight = _req(rid=0, ttft=10.0)
+    loose = _req(rid=1, ttft=500.0)
+    assert (edf.order_key(1, tight, 0.0, 0.0)
+            < edf.order_key(0, loose, 0.0, 0.0))
+    # best-effort (deadline +inf) sorts behind every budgeted request
+    assert (edf.order_key(0, loose, 0.0, 0.0)
+            < edf.order_key(1, _req(rid=2), 0.0, 0.0))
+
+
+def test_victim_key_protects_in_slack():
+    """slo_adaptive's victim key leads with the protection flag: an
+    in-slack budgeted request outranks (is evicted after) any
+    best-effort or already-late request, regardless of priority or
+    admission recency — the classic (priority, -admit_seq) ranking only
+    breaks ties within a protection class."""
+    pol = make_policy("slo_adaptive")
+    protected = pol.victim_key(_req(ttft=1e6, prio=0), 0, t0=0.0, now=0.01)
+    best_effort = pol.victim_key(_req(prio=2), 1, t0=0.0, now=0.01)
+    late = pol.victim_key(_req(ttft=5.0, prio=2), 2, t0=0.0, now=0.01)
+    assert protected[0] == 1
+    assert best_effort[0] == 0 and late[0] == 0
+    assert min(protected, best_effort, late) != protected
+    # the classic ranking (every other policy) would evict the budgeted
+    # low-priority request first — the bug the injectable key fixes
+    classic = make_policy("fifo")
+    assert min(classic.victim_key(_req(ttft=1e6, prio=0), 0, 0.0, 0.01),
+               classic.victim_key(_req(prio=2), 1, 0.0, 0.01)
+               )[1:] == (0, 0)
+
+
+def test_starving_guard_band():
+    pol = make_policy("slo_adaptive")
+    r = _req(ttft=100.0)
+    # deadline = enqueue + 100ms; guard 50ms -> starving once now is
+    # within 50ms of the deadline (or past it)
+    assert not pol.starving(r, enqueue_t=0.0, now=0.049, guard_s=0.05)
+    assert pol.starving(r, enqueue_t=0.0, now=0.051, guard_s=0.05)
+    assert pol.starving(r, enqueue_t=0.0, now=1.0, guard_s=0.05)
+    assert not pol.starving(_req(), 0.0, 1e9, 0.05)   # best-effort: never
+    assert not make_policy("fifo").starving(r, 0.0, 1e9, 0.05)
+
+
+# ---------------------------------------------------------------------------
+# Cluster integration: ssm (scan-family) replicas on the dense layout.
+# ---------------------------------------------------------------------------
+
+CACHE_LEN = 96
+DECOY_NEW = 64                 # straggler decode length (fills a slot)
+N_SHORT = 6
+SHORT_NEW = 4
+#: Virtual-ms budgets: decoys carry the tightest TTFT budget (earliest
+#: deadline -> admitted first under EDF too, same head-of-line setup as
+#: FIFO) but a budget window so small they fall out of slack almost
+#: immediately -> unprotected victims.  Shorts' budget minus the guard
+#: band sets the virtual time the starvation signal trips.
+DECOY_TTFT, SHORT_TTFT, GUARD_MS = 30.0, 300.0, 250.0
+
+
+@pytest.fixture(scope="module")
+def ssm():
+    cfg = smoke_config("xlstm-350m")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _cluster(ssm, policy, **kw):
+    cfg, model, params = ssm
+    kw.setdefault("replicas", 2)
+    kw.setdefault("total_slots", 2)
+    kw.setdefault("cache_len", CACHE_LEN)
+    kw.setdefault("clock", FakeClock(0.0, tick=TICK_S))
+    return ClusterEngine(model, params, policy=policy, **kw)
+
+
+def _starve_trace(vocab):
+    """Two long best-effort-ish stragglers ahead of budgeted shorts,
+    sized to fill both slots: the decoys' tight TTFT deadline admits
+    them first under *every* policy (FIFO by arrival, EDF by deadline),
+    then their tiny slack window expires and the shorts age."""
+    decoys = [Request(prompt=[(7 * i + j) % vocab for j in range(8)],
+                      max_new_tokens=DECOY_NEW, rid=i,
+                      slo_ttft_ms=DECOY_TTFT)
+              for i in range(2)]
+    shorts = [Request(prompt=[(11 * i + j) % vocab for j in range(8)],
+                      max_new_tokens=SHORT_NEW, rid=10 + i,
+                      slo_ttft_ms=SHORT_TTFT)
+              for i in range(N_SHORT)]
+    return decoys + shorts
+
+
+def test_starvation_fifo_misses_slo_adaptive_attains(ssm):
+    """The starvation regression: on the adversarial trace FIFO serves
+    the stragglers to completion and the shorts blow their TTFT budgets;
+    slo_adaptive's queue-age pressure preempts the out-of-slack decoys
+    and attains >= 90% — with byte-identical per-request tokens (the
+    policies reorder, never alter, sampling)."""
+    cfg, _, _ = ssm
+    reqs = _starve_trace(cfg.vocab_size)
+
+    fifo = _cluster(ssm, "fifo", preempt_hysteresis=64)
+    res_f = fifo.generate(reqs, key=jax.random.key(3))
+    sf = fifo.last_stats
+    assert sf.slo_starve_preempts == 0          # fifo never preempts
+    # decoys attain at admission; every short sits out a 64-token
+    # straggler on a 1-slot replica and misses
+    assert sf.slo_ttft_total == 2 + N_SHORT
+    assert sf.slo_ttft_attained <= 2
+    assert sf.slo_attainment <= 0.5
+
+    ada = _cluster(ssm, "slo_adaptive", preempt_hysteresis=64,
+                   slo_guard_ms=GUARD_MS)
+    res_a = ada.generate(reqs, key=jax.random.key(3))
+    sa = ada.last_stats
+    assert sa.slo_starve_preempts >= 1          # the pressure signal fired
+    assert sa.slo_ttft_total == 2 + N_SHORT
+    assert sa.slo_ttft_attained >= 0.9 * sa.slo_ttft_total
+    assert sa.slo_attainment >= 0.9
+    assert sa.slo_attainment > sf.slo_attainment
+
+    for a, b in zip(res_f, res_a):
+        assert a.rid == b.rid and a.tokens == b.tokens, a.rid
+    assert all(len(r.tokens) == q.max_new_tokens
+               for r, q in zip(res_a, reqs))
+
+
+def test_dense_scan_queue_age_pressure_signal(ssm):
+    """Unit test of the queue-age half on a dense (scan-family) cluster:
+    ``_starving_item`` fires only for a ready, budgeted item inside the
+    guard band, and only under a policy that arms the signal."""
+    cl = _cluster(ssm, "slo_adaptive", slo_guard_ms=50.0)
+    now = cl.clock.now()
+    aged = (0, 0, _req(rid=0, ttft=100.0), 0, now - 0.06)
+    fresh = (1, 1, _req(rid=1, ttft=100.0), 0, now + 10.0)
+    best_effort = (2, 2, _req(rid=2), 0, now - 100.0)
+    cooling = (3, 3, _req(rid=3, ttft=100.0), 999, now - 0.06)
+
+    item = cl._starving_item([fresh, aged, best_effort], rounds=0)
+    assert item is aged                 # inside the guard band + ready
+    assert cl._starving_item([fresh, best_effort], rounds=0) is None
+    assert cl._starving_item([cooling], rounds=0) is None   # hysteresis
+    assert cl._starving_item([], rounds=0) is None
+
+    # fifo (and every non-adaptive policy) never arms the signal
+    cl.policy = make_policy("fifo")
+    assert cl._starving_item([aged], rounds=0) is None
+
+
+def test_cluster_victim_pick_never_evicts_in_slack(ssm):
+    """The bugfix regression: the cluster victim pick is ranked by the
+    injected policy, and under slo_adaptive it must never select a
+    budgeted request inside its deadline slack while a best-effort
+    victim exists — even when the classic (priority, -admit_seq) ranking
+    would have chosen the protected request first."""
+    cl = _cluster(ssm, "slo_adaptive", replicas=1, total_slots=2)
+    e = cl.engines[0]
+    # protected: huge budget window, *lowest* priority and oldest
+    # admission — the classic ranking's preferred victim
+    protected = _req(rid=1, prompt=range(4), max_new=8, prio=0, ttft=1e6)
+    best_effort = _req(rid=2, prompt=range(4), max_new=8, prio=2)
+    e.begin_session(jax.random.key(0))
+    try:
+        e.session_admit(protected, tag=0, admit_seq=0)
+        e.session_admit(best_effort, tag=1, admit_seq=1)
+        slot_of = {s.req.rid: i for i, s in e.session_slots()}
+
+        picked = cl._pick_victim(None, None)
+        assert picked is not None and picked[1] == slot_of[2]
+        picked = cl._pick_victim(None, None, require_unprotected=True)
+        assert picked is not None and picked[1] == slot_of[2]
+
+        # the injectable ranking is the fix: the classic key (any other
+        # policy) picks the low-priority budgeted request instead
+        cl.policy = make_policy("fifo")
+        for rep in cl.engines:
+            rep.policy = cl.policy
+        assert cl._pick_victim(None, None)[1] == slot_of[1]
+        cl.policy = make_policy("slo_adaptive")
+        for rep in cl.engines:
+            rep.policy = cl.policy
+
+        # with only the protected request live: the pressure path
+        # (require_unprotected) refuses it, the last-resort path may
+        # still take it
+        e.session_preempt(slot_of[2])
+        assert cl._pick_victim(None, None, require_unprotected=True) is None
+        assert cl._pick_victim(None, None)[1] == slot_of[1]
+    finally:
+        e.session_abort()
+
+
+@pytest.mark.parametrize("depth,temp", [(2, 0.0), (9, 0.0), (9, 1.1)])
+def test_scan_resume_replay_is_byte_exact(ssm, depth, temp):
+    """Regression for the scan-family resume bug the starvation preempts
+    exposed: chunkwise-parallel prefill and the stepwise decode
+    recurrence are mathematically but not bitwise interchangeable, so
+    re-admitting a preempted request by prefilling prompt+done perturbed
+    the resumed logits (greedy argmax flips at near-ties).  Re-admission
+    now prefills only the prompt and *replays* ``done`` through the
+    decode step (``ServeEngine._replay_done``): byte-identical at any
+    preemption depth, greedy or sampled."""
+    from repro.serving import ServeEngine
+    cfg, model, params = ssm
+    key = jax.random.key(3)
+    victim = Request(prompt=[(7 + j) % cfg.vocab_size for j in range(8)],
+                     max_new_tokens=20, temperature=temp, rid=0)
+
+    def fresh():
+        return ServeEngine(model, params, max_batch=1, cache_len=CACHE_LEN,
+                           mode="continuous")
+
+    uninterrupted = fresh().generate([victim], key=key)[0]
+    eng = fresh()
+    eng.begin_session(key)
+    eng.session_admit(victim, tag=0)        # admission emits token 0
+    for _ in range(depth - 1):
+        eng.session_step()
+    _, requeued = eng.session_preempt(0)
+    eng.session_abort()
+    assert len(requeued.done) == depth
+    resumed = fresh().generate([requeued], key=key)[0]
+    assert resumed.tokens == uninterrupted.tokens
+
+
+def test_cluster_rejects_bad_policy_and_guard(ssm):
+    with pytest.raises(ValueError, match="policy"):
+        _cluster(ssm, "deadline")
+    with pytest.raises(ValueError, match="slo_guard_ms"):
+        _cluster(ssm, "slo_adaptive", slo_guard_ms=-1.0)
